@@ -1,0 +1,47 @@
+"""Paper Fig. 2: per-kernel runtime breakdown of CP-APR MU.
+
+Times the four dominant kernels — Phi^(n), Pi^(n), KKT check, MU update —
+separately on each evaluation tensor and reports each kernel's share.
+The paper finds Phi at ~81% of the four-kernel total.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kkt_violation, phi_mode, sort_mode
+from repro.core.pi import pi_rows
+from repro.perf.timing import bench_seconds
+
+from .common import QUICK_TENSORS, Reporter, get_tensor
+
+
+def run(tensors=QUICK_TENSORS, iters: int = 3):
+    rep = Reporter("breakdown")
+    for name in tensors:
+        t, kt = get_tensor(name)
+        mv = sort_mode(t, 0)
+        b = kt.factors[0] * kt.lam[None, :]
+        pi_fn = jax.jit(lambda idx, f: pi_rows(idx, f, 0))
+        pi = pi_fn(mv.sorted_idx, tuple(kt.factors))
+        phi = phi_mode(mv, kt.factors, b, strategy="segment")
+
+        secs = {
+            "phi": bench_seconds(
+                lambda: phi_mode(mv, kt.factors, b, strategy="segment"),
+                iters=iters),
+            "pi": bench_seconds(lambda: pi_fn(mv.sorted_idx, tuple(kt.factors)),
+                                iters=iters),
+            "kkt": bench_seconds(jax.jit(kkt_violation), b, phi, iters=iters),
+            "mu": bench_seconds(jax.jit(lambda x, y: x * y), b, phi,
+                                iters=iters),
+        }
+        total = sum(secs.values())
+        for k, v in secs.items():
+            rep.row(tensor=name, kernel=k, seconds=round(v, 6),
+                    share=round(v / total, 4))
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

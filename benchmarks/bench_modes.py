@@ -1,0 +1,57 @@
+"""Paper Exp. 6 / Figs. 14-15: policy behavior across tensor modes.
+
+The sparsity pattern changes per mode, so the best policy does too; the
+paper shows NELL-2's first mode punishes bad configs hardest.  We sweep a
+coarse policy grid on *every mode* of two tensors and report per-mode
+best/worst spreads.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import sort_mode
+from repro.core.layout import build_blocked_layout
+from repro.core.phi import expand_to_layout, phi_from_rows
+from repro.core.pi import pi_rows
+from repro.core.policy import policy_grid
+from repro.perf.timing import bench_seconds
+
+from .common import RANK, Reporter, get_tensor
+
+
+def run(tensors=("lbnl", "nell2"), iters: int = 2):
+    rep = Reporter("modes")
+    grid = policy_grid(strategies=("segment", "blocked"),
+                       block_nnz=(128, 512), block_rows=(64, 256))
+    for name in tensors:
+        t, kt = get_tensor(name)
+        for mode in range(t.ndim):
+            mv = sort_mode(t, mode)
+            pi = pi_rows(mv.sorted_idx, kt.factors, mode)
+            b = kt.factors[mode] * kt.lam[None, :]
+            times = {}
+            for pol in grid:
+                if pol.strategy == "segment":
+                    fn = lambda: phi_from_rows(mv.rows, mv.sorted_vals, pi, b,
+                                               mv.n_rows, strategy="segment")
+                else:
+                    layout = build_blocked_layout(
+                        np.asarray(mv.rows), mv.n_rows, pol.block_nnz,
+                        pol.block_rows)
+                    ve, pe = expand_to_layout(layout, mv.sorted_vals, pi)
+                    fn = (lambda lay=layout: phi_from_rows(
+                        mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                        strategy="blocked", layout=lay))
+                times[pol.label()] = bench_seconds(fn, iters=iters)
+            best = min(times, key=times.get)
+            worst = max(times, key=times.get)
+            rep.row(tensor=name, mode=mode, n_rows=mv.n_rows,
+                    dup=round(t.nnz / mv.n_rows, 1),
+                    best=best, best_s=round(times[best], 6),
+                    worst=worst, worst_s=round(times[worst], 6),
+                    spread=round(times[worst] / times[best], 2))
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

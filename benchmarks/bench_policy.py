@@ -1,0 +1,82 @@
+"""Paper Exps. 3-5 / Figs. 8-13: parallel-policy grid search for Phi.
+
+Sweeps the TPU-analog policy space (strategy, block_nnz, block_rows) —
+the paper's (league, team, vector) — on each tensor, reporting:
+  * default-policy time (the 'SparTen default' analog),
+  * best/worst grid times (the paper's 2.25x-average headline + the
+    "bad policies lose 10x" caution),
+  * the heuristic policy's regret vs the grid optimum (the paper's
+    proposed-but-unbuilt selection heuristic, implemented here).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import sort_mode
+from repro.core.layout import build_blocked_layout
+from repro.core.phi import expand_to_layout, phi_from_rows
+from repro.core.pi import pi_rows
+from repro.core.policy import (
+    default_policy,
+    grid_search,
+    heuristic_policy,
+    policy_grid,
+)
+from repro.perf.timing import bench_seconds
+
+from .common import QUICK_TENSORS, RANK, Reporter, geomean, get_tensor
+
+
+def _time_policy(mv, pi, b, pol, iters=3) -> float:
+    if pol.strategy in ("scatter", "segment"):
+        return bench_seconds(
+            lambda: phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                                  strategy=pol.strategy), iters=iters)
+    layout = build_blocked_layout(np.asarray(mv.rows), mv.n_rows,
+                                  pol.block_nnz, pol.block_rows)
+    vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
+    return bench_seconds(
+        lambda: phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                              strategy="blocked", layout=layout),
+        iters=iters)
+
+
+def run(tensors=QUICK_TENSORS, iters: int = 3, quick: bool = True):
+    rep = Reporter("policy")
+    grid = policy_grid(
+        strategies=("scatter", "segment", "blocked"),
+        block_nnz=(128, 256, 512) if quick else (64, 128, 256, 512, 1024),
+        block_rows=(64, 256) if quick else (32, 64, 128, 256, 512),
+    )
+    gains, regrets = [], []
+    for name in tensors:
+        t, kt = get_tensor(name)
+        mv = sort_mode(t, 0)
+        pi = pi_rows(mv.sorted_idx, kt.factors, 0)
+        b = kt.factors[0] * kt.lam[None, :]
+
+        ranked = grid_search(lambda p: _time_policy(mv, pi, b, p, iters), grid)
+        t_default = _time_policy(mv, pi, b, default_policy(RANK), iters)
+        h = heuristic_policy(t.nnz, mv.n_rows, RANK)  # platform-aware (cpu)
+        t_heur = _time_policy(mv, pi, b, h, iters)
+        h_tpu = heuristic_policy(t.nnz, mv.n_rows, RANK, platform="tpu")
+        best_p, t_best = ranked[0]
+        worst_p, t_worst = next((p, s) for p, s in reversed(ranked)
+                                if np.isfinite(s))
+        rep.row(tensor=name, default_s=round(t_default, 6),
+                best=best_p.label(), best_s=round(t_best, 6),
+                worst=worst_p.label(), worst_s=round(t_worst, 6),
+                heuristic=h.label(), heuristic_s=round(t_heur, 6),
+                tpu_heuristic=h_tpu.label(),
+                speedup_best_vs_default=round(t_default / t_best, 3),
+                slowdown_worst_vs_default=round(t_worst / t_default, 3),
+                heuristic_regret=round(t_heur / t_best, 3))
+        gains.append(t_default / t_best)
+        regrets.append(t_heur / t_best)
+    rep.row(summary="geomean", speedup_best_vs_default=round(geomean(gains), 3),
+            heuristic_regret=round(geomean(regrets), 3))
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

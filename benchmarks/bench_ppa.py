@@ -1,0 +1,51 @@
+"""Paper Exps. 1-2 / Figs. 5-7: Pressure Point Analysis.
+
+Exp 1 (CPU): perturb the sorted 'segment' implementation — remove the
+keyed reduction (no_conflict ~ "no atomics") and clamp gathers to row 0
+(perfect_reuse) — and report speedups over the unperturbed kernel.
+
+Exp 2 (GPU-style on CPU): the 'scatter' strategy (per-nonzero conflict
+writes, the functional analog of the GPU Alg. 3) run on the CPU, with the
+same perturbations, compared against the CPU baseline — the paper's
+portability question "does one implementation serve both?".
+"""
+from __future__ import annotations
+
+from repro.core import sort_mode
+from repro.perf.ppa import PERTURBATIONS, run_ppa
+from repro.perf.timing import bench_seconds
+
+from .common import QUICK_TENSORS, Reporter, geomean, get_tensor
+
+
+def run(tensors=QUICK_TENSORS, iters: int = 3):
+    rep = Reporter("ppa")
+    speedups: dict = {str(p): [] for p in PERTURBATIONS}
+    gpu_style: list = []
+    for name in tensors:
+        t, kt = get_tensor(name)
+        # Exp 1: CPU-style (sorted/segment) PPA
+        res = run_ppa(t, kt, mode=0, strategy="segment", iters=iters)
+        for p, sp in res.speedup.items():
+            rep.row(exp="ppa_cpu", tensor=name, perturbation=p,
+                    seconds=round(res.seconds[p], 6), speedup=round(sp, 3))
+            speedups[p].append(sp)
+        # Exp 2: GPU-style (scatter) on CPU, vs the CPU baseline
+        res_g = run_ppa(t, kt, mode=0, strategy="scatter", iters=iters)
+        base_cpu = res.seconds["None"]
+        for p, secs in res_g.seconds.items():
+            rep.row(exp="gpu_style_on_cpu", tensor=name, perturbation=p,
+                    seconds=round(secs, 6),
+                    speedup_vs_cpu_baseline=round(base_cpu / secs, 3))
+        gpu_style.append(base_cpu / res_g.seconds["None"])
+
+    for p, xs in speedups.items():
+        rep.row(exp="ppa_cpu_geomean", perturbation=p,
+                geomean_speedup=round(geomean(xs), 3))
+    rep.row(exp="gpu_style_on_cpu_geomean",
+            geomean_speedup=round(geomean(gpu_style), 3))
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

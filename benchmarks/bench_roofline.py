@@ -1,0 +1,72 @@
+"""Paper Sec. 3.2 / Figs. 3-4: roofline model for the Phi kernel.
+
+Reproduces the paper's attainable-performance bounds on its two systems
+(dual E5-2690v4, Tesla K80) from the stated operational intensities, adds
+the TPU v5e target, and *measures* achieved GFLOP/s for Phi on the host
+CPU against a STREAM-measured host bandwidth roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import phi_mode, sort_mode
+from repro.core.phi import phi_flops_words
+from repro.perf.roofline import (
+    HARDWARE,
+    PAPER_STATED_INTENSITY,
+    attainable_gflops,
+    operational_intensity_phi,
+)
+from repro.perf.timing import bench_seconds
+
+from .common import QUICK_TENSORS, RANK, Reporter, get_tensor
+
+
+def host_stream_bandwidth() -> float:
+    """Measured triad bandwidth of the host (bytes/s)."""
+    n = 4 * 2**20
+    b = jnp.arange(n, dtype=jnp.float32)
+    c = jnp.ones((n,), jnp.float32)
+    f = jax.jit(lambda b, c: b + 3.0 * c)
+    secs = bench_seconds(f, b, c, iters=5)
+    return 3 * 4 * n / secs
+
+
+def run(tensors=QUICK_TENSORS):
+    rep = Reporter("roofline")
+    # 1. paper-faithful bounds (Figs 3-4) + v5e target
+    for hw_name, variant in (("e5_2690v4_dual", "cpu"), ("k80", "gpu"),
+                             ("tpu_v5e", "gpu")):
+        hw = HARDWARE[hw_name]
+        i_stated = PAPER_STATED_INTENSITY[variant]
+        i_literal = operational_intensity_phi(RANK, variant)
+        rep.row(system=hw.name, intensity_stated=i_stated,
+                intensity_literal=round(i_literal, 4),
+                bound_gflops_stated=round(attainable_gflops(i_stated, hw), 2),
+                bound_gflops_literal=round(attainable_gflops(i_literal, hw), 2),
+                peak_gflops=round(hw.peak_flops / 1e9, 1),
+                memory_bound=bool(attainable_gflops(i_stated, hw)
+                                  < 0.5 * hw.peak_flops / 1e9))
+
+    # 2. measured: host CPU achieved vs host roofline
+    bw = host_stream_bandwidth()
+    rep.row(system="host_measured", triad_bw_gbs=round(bw / 1e9, 2))
+    for name in tensors:
+        t, kt = get_tensor(name)
+        mv = sort_mode(t, 0)
+        b = kt.factors[0] * kt.lam[None, :]
+        secs = bench_seconds(
+            lambda: phi_mode(mv, kt.factors, b, strategy="segment"), iters=3)
+        w, q = phi_flops_words(t.nnz, RANK, "gpu")
+        achieved = w / secs / 1e9
+        bound = min(bw * (w / (q * 4)), 1e18) / 1e9  # f32 words here
+        rep.row(tensor=name, nnz=t.nnz, achieved_gflops=round(achieved, 3),
+                host_bound_gflops=round(bound, 3),
+                fraction_of_bound=round(achieved / bound, 3))
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Paper Exp. 7 / Figs. 16-17: STREAM fundamental tensor ops.
+
+Portability question, mapped to this stack: does the *portable* layer
+(JAX/XLA, standing in for Kokkos) match *hand-tuned* code (numpy's C
+loops, standing in for original STREAM) on the same host?  Reports
+GB/s and the portable/hand-tuned ratio per op, plus the Pallas kernel's
+correctness (its wall-clock is meaningless in interpret mode; on real TPU
+the same pallas_call is the measured artifact).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.stream.ops import STREAM_OPS, stream_op
+from repro.kernels.stream.ref import stream_bytes_flops, stream_ref
+from repro.perf.timing import bench_seconds
+
+from .common import Reporter, geomean
+
+
+def _numpy_stream(op, b, c, out, s=3.0):
+    if op == "copy":
+        np.copyto(out, b)
+    elif op == "scale":
+        np.multiply(b, s, out=out)
+    elif op == "add":
+        np.add(b, c, out=out)
+    else:
+        np.multiply(c, s, out=out)
+        np.add(out, b, out=out)
+
+
+def run(n: int = 8 * 2**20, iters: int = 5):
+    rep = Reporter("stream")
+    key = jax.random.PRNGKey(0)
+    bj = jax.random.normal(key, (n,), jnp.float32)
+    cj = jax.random.normal(key, (n,), jnp.float32)
+    bn = np.asarray(bj)
+    cn = np.asarray(cj)
+    out = np.empty_like(bn)
+    ratios = []
+    for op in STREAM_OPS:
+        nbytes, _ = stream_bytes_flops(op, n)
+        f = jax.jit(lambda b, c, op=op: stream_ref(op, b, c))
+        t_xla = bench_seconds(f, bj, cj, iters=iters)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            _numpy_stream(op, bn, cn, out)
+            ts.append(time.perf_counter() - t0)
+        t_np = sorted(ts)[len(ts) // 2]
+        # pallas kernel: correctness only (interpret mode on CPU)
+        pl_out = stream_op(op, bj[: 128 * 256], cj[: 128 * 256],
+                           block_rows=64)
+        ok = bool(jnp.allclose(pl_out, stream_ref(op, bj[: 128 * 256],
+                                                  cj[: 128 * 256]),
+                               rtol=1e-6, atol=1e-6))
+        ratio = t_np / t_xla
+        ratios.append(ratio)
+        rep.row(op=op, portable_gbs=round(nbytes / t_xla / 1e9, 2),
+                handtuned_gbs=round(nbytes / t_np / 1e9, 2),
+                portable_over_handtuned=round(ratio, 3),
+                pallas_correct=ok)
+    rep.row(summary="geomean", portable_over_handtuned=round(geomean(ratios), 3))
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Shared benchmark plumbing: FROSTT tensor cache, CSV/JSON emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.data.tensors import make_tensor
+
+OUT_DIR = "experiments/bench"
+_TENSOR_CACHE: dict = {}
+
+# default evaluation set (paper Table 2; Enron omitted from the quick tier —
+# its 54M nnz dominates runtime even scaled)
+QUICK_TENSORS = ("chicago", "lbnl", "nell2", "nips", "uber")
+QUICK_SCALE = 0.004
+RANK = 16
+
+
+def get_tensor(name: str, scale: float = QUICK_SCALE, rank: int = RANK):
+    key = (name, scale, rank)
+    if key not in _TENSOR_CACHE:
+        _TENSOR_CACHE[key] = make_tensor(name, scale=scale, rank=rank)
+    return _TENSOR_CACHE[key]
+
+
+class Reporter:
+    def __init__(self, bench: str):
+        self.bench = bench
+        self.rows: list = []
+        self.t0 = time.time()
+
+    def row(self, **kw):
+        kw["bench"] = self.bench
+        self.rows.append(kw)
+        print(",".join(f"{k}={v}" for k, v in kw.items()), flush=True)
+
+    def finish(self):
+        os.makedirs(OUT_DIR, exist_ok=True)
+        path = os.path.join(OUT_DIR, f"{self.bench}.json")
+        with open(path, "w") as f:
+            json.dump({"bench": self.bench, "rows": self.rows,
+                       "seconds": time.time() - self.t0}, f, indent=1)
+        print(f"[{self.bench}] {len(self.rows)} rows -> {path} "
+              f"({time.time() - self.t0:.1f}s)", flush=True)
+        return self.rows
+
+
+def geomean(xs):
+    import numpy as np
+
+    xs = [x for x in xs if x > 0]
+    return float(np.exp(np.mean(np.log(xs)))) if xs else 0.0

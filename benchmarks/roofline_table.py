@@ -1,0 +1,86 @@
+"""Aggregate the dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.config import SHAPES
+from repro.configs import ARCHS
+
+ORDER_A = list(ARCHS)
+ORDER_S = list(SHAPES)
+
+
+def load(mesh: str, out_dir: str = "experiments/dryrun") -> dict:
+    cells = {}
+    for path in glob.glob(f"{out_dir}/{mesh}/*.json"):
+        rec = json.load(open(path))
+        cells[(rec["arch"], rec["shape"])] = rec
+    return cells
+
+
+def fmt_cell(rec) -> str:
+    if rec is None:
+        return "—"
+    if "skipped" in rec:
+        return "skip"
+    if "error" in rec:
+        return "FAIL"
+    rt = rec["roofline"]
+    return (f"{rt['compute_s']*1e3:.1f}/{rt['memory_s']*1e3:.1f}/"
+            f"{rt['collective_s']*1e3:.1f} {rt['dominant'][:4]}")
+
+
+def table(mesh: str, out_dir: str = "experiments/dryrun") -> str:
+    cells = load(mesh, out_dir)
+    lines = [f"### Mesh: {mesh} "
+             f"({'2x16x16=512' if mesh == 'multi' else '16x16=256'} chips)",
+             "",
+             "compute/memory/collective roofline terms in ms "
+             "(dominant term tagged); hbm = per-device bytes",
+             "",
+             "| arch | " + " | ".join(ORDER_S) + " |",
+             "|---|" + "---|" * len(ORDER_S)]
+    for a in ORDER_A:
+        row = [a]
+        for s in ORDER_S:
+            row.append(fmt_cell(cells.get((a, s))))
+        lines.append("| " + " | ".join(row) + " |")
+    lines.append("")
+    # detail table
+    lines.append("| arch | shape | HLO GFLOPs/dev | dom | bound ms | "
+                 "useful-flops | MFU-bound | HBM GiB/dev | fits 16G |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for a in ORDER_A:
+        for s in ORDER_S:
+            rec = cells.get((a, s))
+            if not rec or "skipped" in rec or "error" in rec:
+                continue
+            rt = rec["roofline"]
+            hbm = rec.get("hbm_bytes_per_device", 0) / 2**30
+            lines.append(
+                f"| {a} | {s} | {rec['cost']['flops_per_device']/1e9:.0f} | "
+                f"{rt['dominant']} | {rt['bound_s']*1e3:.2f} | "
+                f"{rt['useful_flops_ratio']:.2f} | {rt['mfu_bound']:.3f} | "
+                f"{hbm:.2f} | {'yes' if hbm < 16 else 'NO'} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    for m in meshes:
+        print(table(m, args.out))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Run every benchmark (one per paper table/figure) and summarize.
+
+  PYTHONPATH=src python -m benchmarks.run           # quick tier
+  PYTHONPATH=src python -m benchmarks.run --only ppa,stream
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (
+    bench_breakdown,
+    bench_mttkrp,
+    bench_modes,
+    bench_policy,
+    bench_ppa,
+    bench_roofline,
+    bench_stream,
+)
+
+ALL = {
+    "breakdown": bench_breakdown.run,  # Fig. 2
+    "roofline": bench_roofline.run,    # Figs. 3-4 / Eqs. 3-8
+    "ppa": bench_ppa.run,              # Exps. 1-2 / Figs. 5-7
+    "policy": bench_policy.run,        # Exps. 3-5 / Figs. 8-13
+    "modes": bench_modes.run,          # Exp. 6 / Figs. 14-15
+    "stream": bench_stream.run,        # Exp. 7 / Figs. 16-17
+    "mttkrp": bench_mttkrp.run,        # Exp. 8 / Figs. 18-19
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    args = ap.parse_args(argv)
+    names = list(ALL) if args.only == "all" else args.only.split(",")
+    t0 = time.time()
+    failed = []
+    for name in names:
+        print(f"\n=== bench:{name} ===", flush=True)
+        try:
+            ALL[name]()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    print(f"\n[benchmarks] {len(names) - len(failed)}/{len(names)} ok "
+          f"in {time.time() - t0:.0f}s; failed: {failed or 'none'}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

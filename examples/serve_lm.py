@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + greedy decode with per-family caches.
+
+  PYTHONPATH=src python examples/serve_lm.py
+  PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-9b
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "h2o-danube-1.8b"] + argv
+    if not any(a.startswith("--batch") for a in argv):
+        argv += ["--batch", "4", "--prompt-len", "64", "--new-tokens", "32"]
+    raise SystemExit(serve_main(argv))

@@ -1,0 +1,21 @@
+"""End-to-end LM training with fault tolerance (example c: train driver).
+
+Trains a reduced olmo-1b for a few hundred steps on synthetic data with
+checkpoint/resume — kill it mid-run and re-run to watch it resume.
+
+  PYTHONPATH=src python examples/train_lm.py            # 200 steps
+  PYTHONPATH=src python examples/train_lm.py --arch mamba2-1.3b --steps 50
+"""
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "olmo-1b"] + argv
+    if not any(a.startswith("--steps") for a in argv):
+        argv += ["--steps", "200", "--batch", "8", "--seq", "128",
+                 "--ckpt-dir", "/tmp/repro_train_lm"]
+    raise SystemExit(train_main(argv))

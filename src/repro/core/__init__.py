@@ -1,0 +1,25 @@
+"""Core library: CP-APR MU sparse tensor decomposition (the paper's subject).
+
+Public API:
+  SparseTensor / KTensor / ModeView  — data substrate
+  cpapr_mu / CPAPRConfig             — the algorithm (Alg. 1)
+  phi_mode / phi_from_rows           — the hot kernel (Alg. 2-4), all strategies
+  mttkrp / cp_als                    — the PASTA-family baseline (Exp. 8)
+  PhiPolicy / heuristic_policy       — the parallel policy (Exps. 3-6)
+"""
+from .cpals import cp_als, fit_score, mttkrp
+from .cpapr import CPAPRConfig, CPAPRResult, cpapr_mu, kkt_violation, poisson_loglik
+from .layout import BlockedLayout, build_blocked_layout
+from .phi import PHI_STRATEGIES, phi_flops_words, phi_from_rows, phi_mode
+from .pi import pi_rows
+from .policy import PhiPolicy, default_policy, grid_search, heuristic_policy, policy_grid
+from .sparse_tensor import (
+    KTensor,
+    ModeView,
+    SparseTensor,
+    dense_from_coo,
+    ktensor_full,
+    random_ktensor,
+    random_poisson_tensor,
+    sort_mode,
+)

@@ -1,0 +1,131 @@
+"""Blocked segmented layout: the TPU-native answer to atomic scatter.
+
+The paper's CPU algorithm (Alg. 4) sorts nonzeros per mode so same-row
+updates are contiguous, then uses atomics only at thread-boundary rows.
+TPU has no atomics at all, so we go one step further and make the layout
+*statically schedulable*:
+
+  * rows are grouped into row blocks of ``block_rows`` (the slice of
+    B / Phi resident in VMEM for a grid step);
+  * the sorted nonzero stream is padded (MegaBlocks-style capacity
+    padding) so that every ``block_nnz`` chunk of nonzeros touches
+    exactly one row block;
+  * a scalar-prefetch array ``grid_rb`` maps grid step -> row block, and
+    consecutive grid steps that share a row block *revisit* the same
+    output block in VMEM — the exact TPU analog of "atomics only at
+    segment boundaries".
+
+Row blocks with zero nonzeros still get one (all-dummy) grid step so
+every output block is initialized.
+
+The builder runs on host numpy once per mode — same cost model as the
+paper's one-time sort (Sec. 3.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["BlockedLayout", "build_blocked_layout", "round_up"]
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-static friendly
+class BlockedLayout:
+    """Static schedule for a blocked segmented reduction.
+
+    Attributes:
+      block_nnz:   nonzeros per grid step.
+      block_rows:  rows of B/Phi per VMEM window.
+      n_rows:      true number of rows I_n.
+      n_rows_pad:  I_n padded to a multiple of block_rows.
+      n_grid:      number of grid steps.
+      gather:      (n_grid*block_nnz,) int64 indices into the *sorted*
+                   nonzero stream; padding slots point at 0.
+      valid:       (n_grid*block_nnz,) bool, False for padding slots.
+      local_rows:  (n_grid*block_nnz,) int32 row index *within* the row
+                   block (padding slots -> 0).
+      grid_rb:     (n_grid,) int32 row block per grid step (non-decreasing).
+      pad_fraction: padding overhead (reported by the roofline layer).
+    """
+
+    block_nnz: int
+    block_rows: int
+    n_rows: int
+    n_rows_pad: int
+    n_grid: int
+    gather: np.ndarray
+    valid: np.ndarray
+    local_rows: np.ndarray
+    grid_rb: np.ndarray
+    pad_fraction: float
+
+    @property
+    def n_row_blocks(self) -> int:
+        return self.n_rows_pad // self.block_rows
+
+
+def build_blocked_layout(
+    rows_sorted: np.ndarray, n_rows: int, block_nnz: int, block_rows: int
+) -> BlockedLayout:
+    """Build the static schedule from sorted mode-n coordinates.
+
+    Args:
+      rows_sorted: (nnz,) ascending mode-n coordinates.
+      n_rows: I_n.
+      block_nnz / block_rows: the parallel policy (paper's vector/team).
+    """
+    rows_sorted = np.asarray(rows_sorted)
+    if rows_sorted.size and not np.all(np.diff(rows_sorted) >= 0):
+        raise ValueError("rows_sorted must be ascending (use ModeView.rows)")
+    nnz = int(rows_sorted.shape[0])
+    n_rows_pad = round_up(max(n_rows, block_rows), block_rows)
+    n_rb = n_rows_pad // block_rows
+
+    rb_of_nnz = rows_sorted // block_rows
+    counts = np.bincount(rb_of_nnz, minlength=n_rb)
+
+    gather_parts = []
+    valid_parts = []
+    lrow_parts = []
+    grid_rb_parts = []
+    start = 0
+    for rb in range(n_rb):
+        c = int(counts[rb])
+        c_pad = max(round_up(c, block_nnz), block_nnz)  # >=1 grid step per rb
+        g = np.zeros(c_pad, dtype=np.int64)
+        v = np.zeros(c_pad, dtype=bool)
+        g[:c] = np.arange(start, start + c)
+        v[:c] = True
+        lr = np.zeros(c_pad, dtype=np.int32)
+        lr[:c] = rows_sorted[start : start + c] - rb * block_rows
+        gather_parts.append(g)
+        valid_parts.append(v)
+        lrow_parts.append(lr)
+        grid_rb_parts.append(np.full(c_pad // block_nnz, rb, dtype=np.int32))
+        start += c
+
+    gather = np.concatenate(gather_parts) if gather_parts else np.zeros(0, np.int64)
+    valid = np.concatenate(valid_parts) if valid_parts else np.zeros(0, bool)
+    local_rows = np.concatenate(lrow_parts) if lrow_parts else np.zeros(0, np.int32)
+    grid_rb = np.concatenate(grid_rb_parts) if grid_rb_parts else np.zeros(0, np.int32)
+    n_grid = int(grid_rb.shape[0])
+    total = n_grid * block_nnz
+    pad_fraction = 0.0 if nnz == 0 else 1.0 - nnz / max(total, 1)
+
+    return BlockedLayout(
+        block_nnz=block_nnz,
+        block_rows=block_rows,
+        n_rows=n_rows,
+        n_rows_pad=n_rows_pad,
+        n_grid=n_grid,
+        gather=gather,
+        valid=valid,
+        local_rows=local_rows,
+        grid_rb=grid_rb,
+        pad_fraction=float(pad_fraction),
+    )

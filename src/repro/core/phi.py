@@ -1,0 +1,238 @@
+"""Phi^(n) kernel: the CP-APR MU hot spot (81% of runtime, paper Fig. 2).
+
+    Phi^(n) = (X_(n) (/) max(B Pi, eps)) Pi^T        (Alg. 2)
+
+computed one nonzero at a time (never materializing X_(n) or Pi):
+
+    s_j   = <B[i_j, :], pi[j, :]>          # model value at nonzero j
+    w_j   = x_j / max(s_j, eps)
+    Phi[i_j, :] += w_j * pi[j, :]          # reduction by row -> conflicts
+
+Strategies (the paper's CPU/GPU composite implementation, mapped to TPU):
+
+  * ``scatter``  — XLA scatter-add on unsorted nonzeros.  Functional analog
+    of the paper's GPU Alg. 3 (atomic per nonzero).
+  * ``segment``  — sorted nonzeros + ``jax.ops.segment_sum``.  Analog of the
+    paper's CPU Alg. 4 (sort + atomic mitigation).
+  * ``blocked``  — the TPU schedule: blocked segmented reduction with one-hot
+    MXU matmuls over a :class:`BlockedLayout` (pure-jnp emulation of the
+    Pallas kernel; bitwise-same schedule).
+  * ``pallas``   — the actual Pallas TPU kernel (repro.kernels.phi).
+
+PPA perturbations (paper Sec. 3.3) are exposed uniformly via ``perturb``:
+
+  * ``no_conflict``   — drop the keyed reduction (uniform-segment sum):
+    upper bound with zero write contention (paper's "no atomics").
+  * ``perfect_reuse`` — clamp every gather index to row 0: upper bound with
+    perfect cache/VMEM reuse (paper's "single row access").
+
+Perturbed variants are *wrong on purpose* — benchmarks only.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layout import BlockedLayout, build_blocked_layout, round_up
+from .pi import pi_rows
+from .sparse_tensor import ModeView
+
+__all__ = [
+    "phi_flops_words",
+    "phi_from_rows",
+    "phi_mode",
+    "PHI_STRATEGIES",
+]
+
+PHI_STRATEGIES = ("scatter", "segment", "blocked", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Roofline operation counts (paper Eqs. 3-8)
+# ---------------------------------------------------------------------------
+
+
+def phi_flops_words(nnz: int, rank: int, variant: str = "gpu", v: int = 32) -> tuple:
+    """(W FLOPs, Q words) for Phi^(n), per paper Eqs. 3-4 / 6-7.
+
+    ``variant='gpu'``: W = nnz(4R+2), Q = nnz(5R+2)   -> I = 0.125 @ R->inf
+    ``variant='cpu'``: W = nnz(4R+R/V+3), Q = nnz(6R+2R/V+3) -> I ~ 0.27
+    """
+    if variant == "gpu":
+        return nnz * (4 * rank + 2), nnz * (5 * rank + 2)
+    if variant == "cpu":
+        w = nnz * (4 * rank + rank / v + 3)
+        q = nnz * (6 * rank + 2 * rank / v + 3)
+        return w, q
+    raise ValueError(variant)
+
+
+# ---------------------------------------------------------------------------
+# Core strategies, operating on gathered rows
+# ---------------------------------------------------------------------------
+
+
+def _weights(vals, s, eps):
+    return vals / jnp.maximum(s, eps)
+
+
+@partial(jax.jit, static_argnames=("n_rows", "perturb"))
+def _phi_scatter(rows, vals, pi, b, n_rows: int, eps, perturb: str | None = None):
+    if perturb == "perfect_reuse":
+        rows = rows * 0
+    s = jnp.sum(b[rows] * pi, axis=1)
+    w = _weights(vals, s, eps)
+    contrib = w[:, None] * pi
+    if perturb == "no_conflict":
+        return _uniform_segment_sum(contrib, n_rows)
+    return jnp.zeros((n_rows, pi.shape[1]), pi.dtype).at[rows].add(contrib)
+
+
+@partial(jax.jit, static_argnames=("n_rows", "perturb"))
+def _phi_segment(rows, vals, pi, b, n_rows: int, eps, perturb: str | None = None):
+    if perturb == "perfect_reuse":
+        rows = rows * 0
+    s = jnp.sum(b[rows] * pi, axis=1)
+    w = _weights(vals, s, eps)
+    contrib = w[:, None] * pi
+    if perturb == "no_conflict":
+        return _uniform_segment_sum(contrib, n_rows)
+    return jax.ops.segment_sum(
+        contrib, rows, num_segments=n_rows, indices_are_sorted=True
+    )
+
+
+def _uniform_segment_sum(contrib: jax.Array, n_rows: int) -> jax.Array:
+    """PPA 'no_conflict': keep the FLOPs/stream, drop the keyed reduce.
+
+    Pads nnz to a multiple of n_rows and reduces fixed-size groups — the
+    same add count with zero possibility of write conflict.
+    """
+    nnz, r = contrib.shape
+    group = max(1, -(-nnz // n_rows))  # ceil
+    pad = group * n_rows - nnz
+    c = jnp.pad(contrib, ((0, pad), (0, 0)))
+    return c.reshape(n_rows, group, r).sum(axis=1)
+
+
+def _phi_blocked(layout: BlockedLayout, vals, pi, b, eps, perturb=None):
+    """Pure-jnp emulation of the Pallas schedule (same blocking, same math).
+
+    vals/pi here are already expanded to the padded layout order:
+      vals: (n_grid*block_nnz,)   pi: (n_grid*block_nnz, R)
+    """
+    g, bn, br = layout.n_grid, layout.block_nnz, layout.block_rows
+    r = pi.shape[1]
+    local_rows = jnp.asarray(layout.local_rows)
+    grid_rb = jnp.asarray(layout.grid_rb)
+    if perturb == "perfect_reuse":
+        local_rows = local_rows * 0
+        grid_rb = grid_rb * 0
+
+    # Gather B windows per grid step: (G, block_rows, R)
+    b_pad = jnp.pad(b, ((0, layout.n_rows_pad - b.shape[0]), (0, 0)))
+    b_blocks = b_pad.reshape(-1, br, r)[grid_rb]
+
+    onehot = jax.nn.one_hot(
+        local_rows.reshape(g, bn), br, dtype=pi.dtype
+    )  # (G, bn, br)
+    pi_b = pi.reshape(g, bn, r)
+    vals_b = vals.reshape(g, bn)
+
+    # s = rows of (onehot @ B_window) dotted with pi  — both matmuls hit MXU.
+    b_rows = jnp.einsum("gvb,gbr->gvr", onehot, b_blocks)
+    s = jnp.sum(b_rows * pi_b, axis=-1)
+    w = jnp.where(vals_b > 0, vals_b / jnp.maximum(s, eps), 0.0)
+    contrib = w[..., None] * pi_b  # (G, bn, R)
+    if perturb == "no_conflict":
+        partial_blocks = contrib[:, :br, :]  # uniform write, no keyed reduce
+    else:
+        partial_blocks = jnp.einsum("gvb,gvr->gbr", onehot, contrib)
+    # Cross-grid-step combine (the "output block revisit" in the kernel):
+    n_rb = layout.n_row_blocks
+    phi_blocks = jax.ops.segment_sum(
+        partial_blocks, grid_rb, num_segments=n_rb, indices_are_sorted=True
+    )
+    return phi_blocks.reshape(n_rb * br, r)[: layout.n_rows]
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def phi_from_rows(
+    rows: jax.Array,
+    vals: jax.Array,
+    pi: jax.Array,
+    b: jax.Array,
+    n_rows: int,
+    eps: float = 1e-10,
+    strategy: str = "segment",
+    layout: BlockedLayout | None = None,
+    perturb: str | None = None,
+) -> jax.Array:
+    """Phi^(n) from pre-gathered Pi rows.  ``rows`` sorted unless 'scatter'."""
+    eps = float(eps)
+    if strategy == "scatter":
+        return _phi_scatter(rows, vals, pi, b, n_rows, eps, perturb)
+    if strategy == "segment":
+        return _phi_segment(rows, vals, pi, b, n_rows, eps, perturb)
+    if strategy == "blocked":
+        if layout is None:
+            layout = build_blocked_layout(
+                np.asarray(rows), n_rows, block_nnz=256, block_rows=256
+            )
+        vals_e, pi_e = expand_to_layout(layout, vals, pi)
+        return _phi_blocked(layout, vals_e, pi_e, b, eps, perturb)
+    if strategy == "pallas":
+        from repro.kernels.phi import ops as phi_ops
+
+        if layout is None:
+            layout = build_blocked_layout(
+                np.asarray(rows), n_rows, block_nnz=256, block_rows=256
+            )
+        vals_e, pi_e = expand_to_layout(layout, vals, pi)
+        return phi_ops.phi_blocked(layout, vals_e, pi_e, b, float(eps))[:n_rows]
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def expand_to_layout(layout: BlockedLayout, vals, pi):
+    """Expand sorted per-nonzero arrays into the padded layout order."""
+    gather = jnp.asarray(layout.gather)
+    valid = jnp.asarray(layout.valid)
+    vals_e = jnp.where(valid, vals[gather], 0.0)
+    pi_e = jnp.where(valid[:, None], pi[gather], 0.0)
+    return vals_e, pi_e
+
+
+def phi_mode(
+    mv: ModeView,
+    factors: Sequence[jax.Array],
+    b: jax.Array,
+    eps: float = 1e-10,
+    strategy: str = "segment",
+    layout: BlockedLayout | None = None,
+    perturb: str | None = None,
+) -> jax.Array:
+    """Full Phi^(n) for a mode view: Pi gather-product then reduction."""
+    n = mv.mode
+    idx = mv.sorted_idx
+    if perturb == "perfect_reuse":
+        idx = idx * 0
+    pi = pi_rows(idx, factors, n)
+    return phi_from_rows(
+        mv.rows,
+        mv.sorted_vals,
+        pi,
+        b,
+        n_rows=mv.n_rows,
+        eps=eps,
+        strategy=strategy,
+        layout=layout,
+        perturb=perturb,
+    )

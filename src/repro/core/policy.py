@@ -1,0 +1,141 @@
+"""Parallel policy for the Phi/MTTKRP kernels (paper Secs. 4.3-4.6).
+
+Kokkos exposes (league, team, vector); the TPU/Pallas analog is
+
+    strategy    in {scatter, segment, blocked, pallas}
+    block_nnz   ~ vector length: nonzeros per grid step
+    block_rows  ~ team share: rows of B/Phi held in VMEM per step
+    (grid size  ~ league: derived, = padded_nnz / block_nnz)
+
+The paper shows grid search over the policy gives 2.25x (CPU) / 1.70x (GPU)
+over defaults, and calls a selection *heuristic* "an obvious next step"
+(Sec. 5).  ``heuristic_policy`` implements one: a VMEM/cache-footprint +
+segment-run-length model, validated against grid search in bench_policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "PhiPolicy",
+    "default_policy",
+    "policy_grid",
+    "grid_search",
+    "heuristic_policy",
+    "vmem_footprint_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PhiPolicy:
+    strategy: str = "segment"
+    block_nnz: int = 256
+    block_rows: int = 256
+    gather_mode: str = "prefetch"  # 'prefetch' (stream rows) | 'vmem' (resident)
+
+    def label(self) -> str:
+        return f"{self.strategy}:{self.block_nnz}:{self.block_rows}:{self.gather_mode}"
+
+
+def default_policy(rank: int) -> PhiPolicy:
+    """The 'SparTen default' analog used as the baseline policy."""
+    return PhiPolicy(strategy="segment", block_nnz=256, block_rows=256)
+
+
+def vmem_footprint_bytes(p: PhiPolicy, rank: int, itemsize: int = 4) -> int:
+    """Working set of one grid step of the blocked kernel.
+
+    B window + Phi accumulator + Pi block + values + one-hot block.
+    """
+    r = max(rank, 128)  # lane padding
+    return itemsize * (
+        2 * p.block_rows * r  # B window + Phi accumulator
+        + p.block_nnz * r  # Pi block
+        + p.block_nnz  # values
+        + p.block_nnz * p.block_rows  # one-hot
+    )
+
+
+def policy_grid(
+    strategies: Sequence[str] = ("segment", "blocked"),
+    block_nnz: Sequence[int] = (64, 128, 256, 512, 1024),
+    block_rows: Sequence[int] = (64, 128, 256, 512),
+) -> list:
+    """Cartesian policy grid (paper's league x team x vector sweep)."""
+    out = []
+    for s in strategies:
+        if s in ("scatter", "segment"):
+            out.append(PhiPolicy(strategy=s))
+        else:
+            for bn, br in itertools.product(block_nnz, block_rows):
+                out.append(PhiPolicy(strategy=s, block_nnz=bn, block_rows=br))
+    return out
+
+
+def grid_search(
+    time_fn: Callable[[PhiPolicy], float],
+    policies: Iterable[PhiPolicy],
+) -> list:
+    """Time every policy; returns [(policy, seconds)] sorted fastest-first."""
+    results = []
+    for p in policies:
+        try:
+            secs = time_fn(p)
+        except Exception as e:  # invalid configs are part of the search space
+            secs = float("inf")
+        results.append((p, secs))
+    results.sort(key=lambda x: x[1])
+    return results
+
+
+def heuristic_policy(
+    nnz: int,
+    n_rows: int,
+    rank: int,
+    vmem_budget: int = 8 * 2**20,
+    row_hist: np.ndarray | None = None,
+    platform: str | None = None,
+) -> PhiPolicy:
+    """Pick (strategy, block_nnz, block_rows) from tensor stats + platform —
+    the paper's missing heuristic (Sec. 5 'obvious next step').
+
+    Platform selection mirrors the paper's composite implementation: on a
+    cache-hierarchy CPU the sorted segmented reduce wins (one-hot matmuls
+    are wasted work there — our Exp-3/5 benchmarks show 40-250x losses for
+    the TPU schedule on CPU); on TPU the blocked one-hot-MXU schedule is
+    the only native expression and the VMEM model below sizes it.
+
+    Model:
+      * duplication d = nnz / n_rows (mean segment run length).  Large d =>
+        revisits are cheap, prefer big block_nnz; small d => padding blows up,
+        prefer block_nnz near d.
+      * block_rows should cover the p95 segment run so one grid step rarely
+        spans row blocks (the "atomic boundary" analog), subject to the VMEM
+        cap.
+    """
+    if platform is None:
+        import jax
+
+        platform = jax.default_backend()
+    if platform == "cpu":
+        return PhiPolicy(strategy="segment")
+    d = max(1.0, nnz / max(1, n_rows))
+    if row_hist is not None and row_hist.size:
+        p95 = float(np.percentile(row_hist, 95))
+    else:
+        p95 = d
+    # block_nnz: cover ~4 average rows per step, snapped to sublane multiples.
+    bn = int(2 ** np.clip(np.round(np.log2(4 * d)), 6, 11))
+    # block_rows: enough rows that a block rarely crosses, >= 8 sublanes.
+    br = int(2 ** np.clip(np.round(np.log2(max(bn / max(p95, 1.0), 8))), 3, 10))
+    p = PhiPolicy(strategy="blocked", block_nnz=bn, block_rows=br)
+    # shrink until the working set fits VMEM
+    while vmem_footprint_bytes(p, rank) > vmem_budget and p.block_nnz > 64:
+        p = dataclasses.replace(p, block_nnz=p.block_nnz // 2)
+    while vmem_footprint_bytes(p, rank) > vmem_budget and p.block_rows > 8:
+        p = dataclasses.replace(p, block_rows=p.block_rows // 2)
+    return p

@@ -1,0 +1,44 @@
+"""Jitted wrapper for the MTTKRP Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import BlockedLayout, round_up
+
+from .kernel import mttkrp_pallas_call
+
+__all__ = ["mttkrp_blocked"]
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "interpret"))
+def _run(layout: BlockedLayout, vals_e, kr_e, interpret: bool):
+    r = kr_e.shape[1]
+    r_pad = round_up(r, 128)
+    vals2 = vals_e.reshape(-1, 1).astype(jnp.float32)
+    lrow2 = jnp.asarray(layout.local_rows, jnp.int32).reshape(-1, 1)
+    kr_p = jnp.pad(kr_e.astype(jnp.float32), ((0, 0), (0, r_pad - r)))
+    grid_rb = jnp.asarray(layout.grid_rb, jnp.int32)
+    call = mttkrp_pallas_call(
+        n_grid=layout.n_grid,
+        block_nnz=layout.block_nnz,
+        block_rows=layout.block_rows,
+        n_rows_pad=layout.n_rows_pad,
+        rank_pad=r_pad,
+        interpret=interpret,
+    )
+    return call(grid_rb, vals2, lrow2, kr_p)[:, :r]
+
+
+def mttkrp_blocked(
+    layout: BlockedLayout,
+    vals_e: jax.Array,
+    kr_e: jax.Array,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """MTTKRP via the Pallas kernel; returns padded (n_rows_pad, R)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _run(layout, vals_e, kr_e, bool(interpret))

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the MTTKRP Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import BlockedLayout
+
+__all__ = ["mttkrp_ref", "mttkrp_blocked_ref"]
+
+
+def mttkrp_ref(rows, vals, kr, n_rows: int) -> jax.Array:
+    return jax.ops.segment_sum(vals[:, None] * kr, rows, num_segments=n_rows)
+
+
+def mttkrp_blocked_ref(layout: BlockedLayout, vals_e, kr_e) -> jax.Array:
+    br = layout.block_rows
+    global_rows = (
+        jnp.repeat(jnp.asarray(layout.grid_rb), layout.block_nnz) * br
+        + jnp.asarray(layout.local_rows)
+    )
+    return mttkrp_ref(global_rows, vals_e, kr_e, layout.n_rows_pad)

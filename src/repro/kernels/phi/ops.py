@@ -1,0 +1,64 @@
+"""Jitted wrapper for the Phi Pallas kernel: padding + layout plumbing."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layout import BlockedLayout, round_up
+
+from .kernel import phi_pallas_call
+
+__all__ = ["phi_blocked"]
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "eps", "interpret"))
+def _run(layout: BlockedLayout, vals_e, pi_e, b, eps: float, interpret: bool):
+    r = pi_e.shape[1]
+    r_pad = round_up(r, 128)
+    n_rows_pad = layout.n_rows_pad
+
+    vals2 = vals_e.reshape(-1, 1).astype(jnp.float32)
+    lrow2 = jnp.asarray(layout.local_rows, jnp.int32).reshape(-1, 1)
+    pi_p = jnp.pad(pi_e.astype(jnp.float32), ((0, 0), (0, r_pad - r)))
+    b_p = jnp.pad(
+        b.astype(jnp.float32),
+        ((0, n_rows_pad - b.shape[0]), (0, r_pad - r)),
+    )
+    grid_rb = jnp.asarray(layout.grid_rb, jnp.int32)
+
+    call = phi_pallas_call(
+        n_grid=layout.n_grid,
+        block_nnz=layout.block_nnz,
+        block_rows=layout.block_rows,
+        n_rows_pad=n_rows_pad,
+        rank_pad=r_pad,
+        eps=eps,
+        interpret=interpret,
+    )
+    phi_pad = call(grid_rb, vals2, lrow2, pi_p, b_p)
+    return phi_pad[:, :r]
+
+
+def phi_blocked(
+    layout: BlockedLayout,
+    vals_e: jax.Array,
+    pi_e: jax.Array,
+    b: jax.Array,
+    eps: float = 1e-10,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Phi^(n) via the Pallas kernel on a prebuilt blocked layout.
+
+    ``vals_e``/``pi_e`` are layout-expanded (see ``phi.expand_to_layout``).
+    Returns the padded (n_rows_pad, R) result; callers slice to n_rows.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    return _run(layout, vals_e, pi_e, b, float(eps), bool(interpret))

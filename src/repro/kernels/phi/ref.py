@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the Phi Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import BlockedLayout
+
+__all__ = ["phi_ref", "phi_blocked_ref"]
+
+
+def phi_ref(rows, vals, pi, b, n_rows: int, eps: float) -> jax.Array:
+    """Reference Phi^(n) from raw (sorted or not) per-nonzero arrays."""
+    s = jnp.sum(b[rows] * pi, axis=1)
+    w = jnp.where(vals > 0, vals / jnp.maximum(s, eps), 0.0)
+    return jax.ops.segment_sum(w[:, None] * pi, rows, num_segments=n_rows)
+
+
+def phi_blocked_ref(
+    layout: BlockedLayout, vals_e, pi_e, b_pad, eps: float
+) -> jax.Array:
+    """Oracle on layout-expanded inputs; returns the padded (n_rows_pad, R)."""
+    br = layout.block_rows
+    global_rows = (
+        jnp.repeat(jnp.asarray(layout.grid_rb), layout.block_nnz) * br
+        + jnp.asarray(layout.local_rows)
+    )
+    return phi_ref(global_rows, vals_e, pi_e, b_pad, layout.n_rows_pad, eps)

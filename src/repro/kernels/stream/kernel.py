@@ -1,0 +1,64 @@
+"""Pallas TPU kernels for the STREAM fundamental tensor ops (paper Exp. 7).
+
+Copy / Scale / Add / Triad (Table 3) with a block-size policy — the
+simple-kernel end of the portability study.  Arrays are viewed as
+(rows, 128) lanes and the grid walks ``block_rows`` rows per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["stream_pallas_call", "STREAM_OPS"]
+
+STREAM_OPS = ("copy", "scale", "add", "triad")
+
+
+def _copy_kernel(b_ref, o_ref):
+    o_ref[...] = b_ref[...]
+
+
+def _scale_kernel(b_ref, o_ref, *, s):
+    o_ref[...] = s * b_ref[...]
+
+
+def _add_kernel(b_ref, c_ref, o_ref):
+    o_ref[...] = b_ref[...] + c_ref[...]
+
+
+def _triad_kernel(b_ref, c_ref, o_ref, *, s):
+    o_ref[...] = b_ref[...] + s * c_ref[...]
+
+
+def stream_pallas_call(
+    op: str,
+    n_rows: int,
+    block_rows: int,
+    lanes: int = 128,
+    s: float = 3.0,
+    interpret: bool = False,
+):
+    """Build a pallas_call for one STREAM op over a (n_rows, lanes) array."""
+    if n_rows % block_rows:
+        raise ValueError("n_rows must be a multiple of block_rows")
+    grid = (n_rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((n_rows, lanes), jnp.float32)
+    n_in = {"copy": 1, "scale": 1, "add": 2, "triad": 2}[op]
+    kernel = {
+        "copy": _copy_kernel,
+        "scale": functools.partial(_scale_kernel, s=s),
+        "add": _add_kernel,
+        "triad": functools.partial(_triad_kernel, s=s),
+    }[op]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * n_in,
+        out_specs=spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )

@@ -1,0 +1,47 @@
+"""Jitted wrappers for the STREAM Pallas kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import STREAM_OPS, stream_pallas_call
+
+__all__ = ["stream_op", "STREAM_OPS"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("op", "block_rows", "s", "interpret")
+)
+def _run(op, b, c, block_rows, s, interpret):
+    n = b.shape[0]
+    lanes = 128
+    rows = n // lanes
+    b2 = b[: rows * lanes].reshape(rows, lanes)
+    args = (b2,)
+    if op in ("add", "triad"):
+        c2 = c[: rows * lanes].reshape(rows, lanes)
+        args = (b2, c2)
+    call = stream_pallas_call(
+        op, rows, block_rows=block_rows, lanes=lanes, s=s, interpret=interpret
+    )
+    return call(*args).reshape(-1)
+
+
+def stream_op(
+    op: str,
+    b: jax.Array,
+    c: jax.Array | None = None,
+    block_rows: int = 256,
+    s: float = 3.0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One STREAM op via Pallas.  Input length must be a multiple of
+    128*block_rows (benchmarks size arrays accordingly)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if op not in STREAM_OPS:
+        raise ValueError(op)
+    c_in = c if c is not None else b
+    return _run(op, b, c_in, block_rows, s, bool(interpret))

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the STREAM ops (paper Table 3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["stream_ref", "stream_bytes_flops"]
+
+
+def stream_ref(op: str, b: jax.Array, c: jax.Array | None = None, s: float = 3.0):
+    if op == "copy":
+        return b + 0.0
+    if op == "scale":
+        return s * b
+    if op == "add":
+        return b + c
+    if op == "triad":
+        return b + s * c
+    raise ValueError(op)
+
+
+def stream_bytes_flops(op: str, n_elems: int, itemsize: int = 4) -> tuple:
+    """(bytes moved, FLOPs) per paper Table 3 (8-byte words there; we scale)."""
+    table = {"copy": (2, 0), "scale": (2, 1), "add": (3, 1), "triad": (3, 2)}
+    words, flops = table[op]
+    return words * n_elems * itemsize, flops * n_elems

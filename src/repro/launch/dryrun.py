@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every jax-touching import: jax locks the device count on
+#   first init.  512 placeholder host devices back the production meshes.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this AOT-compiles the real step function (train_step for
+train_4k, prefill/serve_step for the inference shapes) against
+ShapeDtypeStruct stand-ins — no arrays are ever allocated — and records:
+
+  * memory_analysis()   per-device argument/output/temp bytes (fits HBM?)
+  * cost_analysis()     per-device HLO FLOPs / bytes accessed
+  * collective bytes    parsed from the partitioned HLO (repro.perf.hlo)
+  * 3-term roofline     compute / memory / collective seconds (TPU v5e)
+
+Results land in ``experiments/dryrun/<mesh>/<arch>__<shape>.json`` (one
+file per cell; existing files are skipped so the sweep is restartable).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi \
+      --arch qwen3-moe-235b-a22b --shape train_4k --force
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.config import SHAPES
+from repro.configs import ARCHS, cell_skip_reason, get_arch
+from repro.models.api import build_model
+from repro.models.params import abstract_params, count_params
+from repro.perf.hlo_costs import f32_promotion_bytes, module_costs
+from repro.perf.roofline import HARDWARE, roofline_terms
+from repro.train.optimizer import make_optimizer
+from repro.train.step import make_serve_step, make_train_step, state_specs
+
+from .mesh import batch_shardings, make_production_mesh, state_shardings
+
+OUT_DIR = "experiments/dryrun"
+
+
+def _mem_dict(ma) -> dict:
+    if ma is None:
+        return {}
+    fields = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes")
+    return {f: int(getattr(ma, f, 0)) for f in fields}
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active*D train, 2*N_active*D inference."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True):
+    """Build and lower one cell's step function.  Returns (lowered, meta)."""
+    from repro.models.params import set_rules_profile
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    # the zero3 profile targets training (decode batches don't divide all
+    # axes); inference cells keep tp_fsdp
+    set_rules_profile(cfg.sharding_profile if shape.kind == "train"
+                      else "tp_fsdp")
+    model = build_model(cfg)
+    n_chips = mesh.devices.size
+
+    in_specs = model.input_specs(shape)
+    in_sh = batch_shardings(in_specs, mesh)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        sspecs = state_specs(model, opt)
+        state_sh = state_shardings(sspecs, mesh)
+        abstract_state = abstract_params(sspecs)
+        step = make_train_step(model, opt)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_sh, in_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(abstract_state, in_specs)
+        n_state = count_params(sspecs["params"])
+    elif shape.kind == "prefill":
+        p_specs = model.param_specs()
+        p_sh = state_shardings(p_specs, mesh)
+        abstract_p = abstract_params(p_specs)
+
+        def prefill_fn(params, batch):
+            logits, caches = model.prefill(params, batch)
+            return logits.argmax(-1).astype("int32"), caches
+
+        with mesh:
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(p_sh, in_sh),
+            ).lower(abstract_p, in_specs)
+        n_state = count_params(p_specs)
+    else:  # decode
+        p_specs = model.param_specs()
+        p_sh = state_shardings(p_specs, mesh)
+        abstract_p = abstract_params(p_specs)
+        c_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+        c_sh = state_shardings(c_specs, mesh)
+        abstract_c = abstract_params(c_specs)
+        step = make_serve_step(model)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, in_sh["tokens"]),
+                donate_argnums=(1,),
+            ).lower(abstract_p, abstract_c, in_specs["tokens"])
+        n_state = count_params(p_specs)
+
+    meta = {"arch": arch, "shape": shape_name, "n_chips": n_chips,
+            "n_state_params": n_state}
+    return lowered, meta
+
+
+def analyze(lowered, compiled, meta, hw=HARDWARE["tpu_v5e"]) -> dict:
+    n_chips = meta["n_chips"]
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    # trip-count-aware per-device costs (XLA's cost_analysis counts scanned
+    # layer bodies ONCE — see perf/hlo_costs.py; raw values kept for ref)
+    mc = module_costs(txt)
+    flops_dev = mc.flops
+    bytes_dev = mc.bytes
+    cfg = get_arch(meta["arch"])
+    shape = SHAPES[meta["shape"]]
+    mf = model_flops_for(cfg, shape)
+    rt = roofline_terms(
+        hlo_flops=flops_dev * n_chips,
+        hlo_bytes=bytes_dev * n_chips,
+        collective_bytes=mc.wire_bytes,
+        n_chips=n_chips,
+        hw=hw,
+        model_flops=mf,
+    )
+    return {
+        **meta,
+        "memory": _mem_dict(compiled.memory_analysis()),
+        "cost": {"flops_per_device": flops_dev,
+                 "bytes_per_device": bytes_dev,
+                 "xla_flops_per_device_noloop": float(ca.get("flops", 0.0)),
+                 "xla_bytes_per_device_noloop": float(
+                     ca.get("bytes accessed", 0.0)),
+                 "unknown_trip_loops": mc.unknown_trip_loops},
+        "collectives": {
+            "by_kind_wire": mc.wire_by_kind,
+            "by_kind_count": mc.count_by_kind,
+            "wire_bytes": mc.wire_bytes,
+        },
+        "roofline": {
+            "compute_s": rt.compute_s,
+            "memory_s": rt.memory_s,
+            "collective_s": rt.collective_s,
+            "dominant": rt.dominant,
+            "bound_s": rt.bound_s,
+            "model_flops": rt.model_flops,
+            "useful_flops_ratio": rt.useful_flops_ratio,
+            "mfu_bound": rt.mfu_bound,
+        },
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             force: bool = False) -> dict | None:
+    os.makedirs(f"{out_dir}/{mesh_kind}", exist_ok=True)
+    path = f"{out_dir}/{mesh_kind}/{arch}__{shape_name}.json"
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_arch(arch)
+    reason = cell_skip_reason(cfg, SHAPES[shape_name])
+    if reason:
+        rec = {"arch": arch, "shape": shape_name, "skipped": reason}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] SKIP  {mesh_kind:6s} {arch:28s} {shape_name:12s} {reason}")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rec = analyze(lowered, compiled, meta)
+        rec["seconds"] = {"lower": t_lower, "compile": t_compile}
+        mem = rec["memory"]
+        hbm_raw = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("output_size_in_bytes", 0)
+                   - mem.get("alias_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0))
+        promo = f32_promotion_bytes(compiled.as_text())
+        hbm = hbm_raw - promo  # TPU projection (see hlo_costs)
+        rec["hbm_bytes_per_device_xla_cpu"] = int(hbm_raw)
+        rec["cpu_f32_promotion_bytes"] = int(promo)
+        rec["hbm_bytes_per_device"] = int(hbm)
+        print(f"[dryrun] OK    {mesh_kind:6s} {arch:28s} {shape_name:12s} "
+              f"hbm/dev={hbm/2**30:6.2f}GiB "
+              f"dom={rec['roofline']['dominant']:10s} "
+              f"bound={rec['roofline']['bound_s']*1e3:8.2f}ms "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    except Exception as e:  # record the failure; the sweep continues
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        print(f"[dryrun] FAIL  {mesh_kind:6s} {arch:28s} {shape_name:12s} "
+              f"{type(e).__name__}: {str(e)[:120]}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+
+    n_fail = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh_kind, args.out,
+                               force=args.force)
+                if rec and "error" in rec:
+                    n_fail += 1
+    print(f"[dryrun] done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

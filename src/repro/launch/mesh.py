@@ -1,0 +1,71 @@
+"""Production meshes + sharding helpers.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — the dry-run sets
+``xla_force_host_platform_device_count=512`` before first jax init.
+
+Axes:
+  pod    — 2-way across pods (DP over the ICI/DCN boundary)
+  data   — 16-way data parallel / FSDP within a pod
+  model  — 16-way tensor/expert parallel (heads, mlp, experts, vocab)
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import active_rules, param_shardings, spec_for_axes
+
+__all__ = [
+    "make_production_mesh",
+    "make_smoke_mesh",
+    "batch_shardings",
+    "state_shardings",
+    "data_axes",
+]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """Largest (data, model) mesh the available devices allow (CPU tests)."""
+    n = len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0 and n >= m:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_shardings(input_specs: dict, mesh: Mesh) -> dict:
+    """Shard every input's leading (batch) dim per the active rules."""
+    rule = active_rules().get("batch", "fsdp")
+    if rule == "all":
+        axes = tuple(mesh.axis_names)
+    elif isinstance(rule, tuple):
+        axes = tuple(a for a in rule if a in mesh.axis_names)
+    else:
+        axes = data_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    out = {}
+    for name, spec in input_specs.items():
+        if spec.shape and size > 1 and spec.shape[0] % size == 0:
+            out[name] = NamedSharding(mesh, P(axes, *([None] * (len(spec.shape) - 1))))
+        else:
+            out[name] = NamedSharding(mesh, P())
+    return out
+
+
+def state_shardings(specs_tree, mesh: Mesh):
+    """ParamSpec tree -> NamedSharding tree (params, opt state, caches)."""
+    return param_shardings(specs_tree, mesh)

@@ -1,0 +1,52 @@
+"""End-to-end serving driver: batched prefill + decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b \
+      --batch 4 --prompt-len 64 --new-tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.config import ShapeConfig
+from repro.configs import get_arch, reduced
+from repro.models.api import build_model
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    shape = ShapeConfig("serve", args.prompt_len, args.batch, "prefill")
+    batch = model.make_batch(jax.random.PRNGKey(args.seed + 1), shape)
+
+    engine = Engine(model, params, ServeConfig(
+        max_new_tokens=args.new_tokens, temperature=args.temperature))
+    t0 = time.perf_counter()
+    out = engine.generate(batch, key=jax.random.PRNGKey(args.seed + 2))
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.new_tokens
+    print(f"[serve] arch={cfg.name} generated {tuple(out.shape)} tokens in "
+          f"{dt:.2f}s ({toks/dt:.1f} tok/s, includes compile)")
+    print("[serve] first sequence:", out[0, :16].tolist(), "...")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,237 @@
+"""Unified model API: ``build_model(cfg)`` -> :class:`Model`.
+
+One object per architecture family exposing the same surface:
+
+  param_specs()                ParamSpec tree (drives init / sharding / AOT)
+  init(key)                    real parameter tree
+  loss_fn(params, batch)       mean next-token CE (chunked over vocab)
+  forward(params, batch)       final hidden states
+  prefill(params, batch)       (last_logits, caches)
+  decode_step(params, caches, tokens)
+  cache_specs(batch, cache_len) ParamSpec tree for the decode cache
+  input_specs(shape)           ShapeDtypeStruct batch for AOT lowering
+  make_batch(key, shape_cfg)   synthetic concrete batch (smoke tests)
+
+Batch layouts:
+  transformer: {"tokens": (B, S+1) i32}
+  pixtral:     {"tokens": (B, S-n_patches+1) i32, "patches": (B, n_patches, d) bf16}
+  mamba2 / rglru_hybrid: {"tokens": (B, S+1) i32}
+  encdec:      {"tokens": (B, S+1) i32, "frames": (B, n_frames, d) bf16}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+
+from . import mamba2, rglru, transformer, whisper
+from .layers import norm
+from .params import (ParamSpec, abstract_params, cast_specs, init_params,
+                     logical_constraint)
+
+__all__ = ["Model", "build_model", "chunked_ce_loss"]
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(params, hidden, labels, cfg: ArchConfig,
+                    logits_fn: Callable | None = None):
+    """Mean CE over valid (label >= 0) tokens, vocab-chunked + rematted so the
+    full (B, S, V) logits tensor never exists."""
+    if logits_fn is None:
+        def logits_fn(p, h):
+            w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+            return jnp.einsum("...d,dv->...v", h, w,
+                              preferred_element_type=jnp.float32)
+
+    b, s, d = hidden.shape
+    c = min(cfg.ce_chunk, s)
+    while s % c:
+        c //= 2
+    nc = s // c
+    h_c = hidden.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    l_c = labels.reshape(b, nc, c).transpose(1, 0, 2)
+    v = cfg.vocab
+    v_pad = cfg.vocab_pad
+
+    @jax.checkpoint
+    def chunk(carry, xs):
+        h, lab = xs
+        h = logical_constraint(h, ("batch", None, None))
+        logits = logits_fn(params, h)  # (B, c, V_pad) f32
+        logits = logical_constraint(logits, ("batch", None, "vocab"))
+        viota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        logits = jnp.where(viota < v, logits, -1e30)  # mask vocab padding
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)  # (B, c)
+        gold = jnp.sum(
+            jnp.where(viota == lab[..., None], logits, 0.0), axis=-1
+        )
+        valid = (lab >= 0).astype(jnp.float32)
+        ce = (lse - gold) * valid
+        tot, cnt = carry
+        return (tot + jnp.sum(ce), cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.float32(0), jnp.float32(0)),
+                                 (h_c, l_c))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Model wrapper
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- parameters -------------------------------------------------------
+    def param_specs(self):
+        if self.cfg.family == "mamba2":
+            specs = mamba2.param_specs(self.cfg)
+        elif self.cfg.family == "rglru_hybrid":
+            specs = rglru.param_specs(self.cfg)
+        elif self.cfg.family == "encdec":
+            specs = whisper.param_specs(self.cfg)
+        else:
+            specs = transformer.param_specs(self.cfg)
+        if self.cfg.dtype == "float32":
+            specs = cast_specs(specs, jnp.float32)
+        return specs
+
+    def init(self, key):
+        return init_params(self.param_specs(), key)
+
+    def abstract_params(self):
+        return abstract_params(self.param_specs())
+
+    # ---- forward / loss ---------------------------------------------------
+    def _hidden(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"][:, :-1]
+        if cfg.family == "mamba2":
+            return mamba2.forward(params, tokens, cfg)
+        if cfg.family == "rglru_hybrid":
+            return rglru.forward(params, tokens, cfg)
+        if cfg.family == "encdec":
+            return whisper.forward(params, tokens, batch["frames"], cfg)
+        extra = batch.get("patches")
+        return transformer.forward(params, tokens, cfg, extra_embeds=extra)
+
+    def forward(self, params, batch):
+        return self._hidden(params, batch)
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        hidden = self._hidden(params, batch)
+        labels = batch["tokens"][:, 1:]
+        if "patches" in batch:
+            # hidden covers [patches; text]; only text positions have labels
+            npatch = batch["patches"].shape[1]
+            pad = jnp.full((labels.shape[0], npatch), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        return chunked_ce_loss(params, hidden, labels, cfg)
+
+    # ---- serving ----------------------------------------------------------
+    def prefill(self, params, batch, cache_len: int | None = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family == "mamba2":
+            return mamba2.prefill(params, tokens, cfg)
+        if cfg.family == "rglru_hybrid":
+            return rglru.prefill(params, tokens, cfg, cache_len=cache_len)
+        if cfg.family == "encdec":
+            return whisper.prefill(params, tokens, batch["frames"], cfg,
+                                   cache_len=cache_len)
+        return transformer.prefill(params, tokens, cfg,
+                                   extra_embeds=batch.get("patches"),
+                                   cache_len=cache_len)
+
+    def decode_step(self, params, caches, tokens):
+        cfg = self.cfg
+        mod = {"mamba2": mamba2, "rglru_hybrid": rglru,
+               "encdec": whisper}.get(cfg.family, transformer)
+        return mod.decode_step(params, caches, tokens, cfg)
+
+    def cache_specs(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        mod = {"mamba2": mamba2, "rglru_hybrid": rglru,
+               "encdec": whisper}.get(cfg.family, transformer)
+        specs = mod.cache_specs(cfg, batch, cache_len)
+        if cfg.dtype == "float32":
+            specs = cast_specs(specs, jnp.float32)
+        return specs
+
+    def abstract_caches(self, batch: int, cache_len: int):
+        return abstract_params(self.cache_specs(batch, cache_len))
+
+    def init_caches(self, batch: int, cache_len: int):
+        caches = init_params(self.cache_specs(batch, cache_len),
+                             jax.random.PRNGKey(0))
+        return _fix_fresh_caches(caches)
+
+    # ---- abstract inputs (AOT lowering) ------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt_act = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        if shape.kind == "train":
+            out = {}
+            s_tok = s
+            if cfg.family == "transformer" and cfg.n_patches:
+                s_tok = s - cfg.n_patches
+                out["patches"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_patches, cfg.d_model), dt_act)
+            if cfg.family == "encdec":
+                out["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_frames, cfg.d_model), dt_act)
+            out["tokens"] = jax.ShapeDtypeStruct((b, s_tok + 1), jnp.int32)
+            return out
+        if shape.kind == "prefill":
+            out = {}
+            s_tok = s
+            if cfg.family == "transformer" and cfg.n_patches:
+                s_tok = s - cfg.n_patches
+                out["patches"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_patches, cfg.d_model), dt_act)
+            if cfg.family == "encdec":
+                out["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_frames, cfg.d_model), dt_act)
+            out["tokens"] = jax.ShapeDtypeStruct((b, s_tok), jnp.int32)
+            return out
+        # decode: one new token against a cache of seq_len
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    # ---- synthetic concrete batch (smoke tests / examples) -----------------
+    def make_batch(self, key, shape: ShapeConfig) -> dict:
+        specs = self.input_specs(shape)
+        out = {}
+        for k, sp in specs.items():
+            key, sub = jax.random.split(key)
+            if sp.dtype == jnp.int32:
+                out[k] = jax.random.randint(sub, sp.shape, 0, self.cfg.vocab)
+            else:
+                out[k] = jax.random.normal(sub, sp.shape, jnp.float32).astype(
+                    sp.dtype) * 0.02
+        return out
+
+
+def _fix_fresh_caches(caches):
+    """Post-init fixups: kv_pos slots start at -1 (empty)."""
+    def fix(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "kv_pos":
+            return leaf - 1
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, caches)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg)

@@ -1,0 +1,346 @@
+"""Shared model layers: norms, RoPE, chunked GQA/SWA attention, MLP, MoE.
+
+Design notes
+  * Attention is query-chunked with masking from absolute positions, so the
+    same code path serves train (causal), SWA, prefill, and decode
+    (Sq=1 vs a cache).  Scores for one chunk are (q_chunk x Skv) — memory
+    stays bounded at 32k prefill.
+  * MoE uses sort-free scatter dispatch: per top-k slot, position-in-expert
+    by cumsum over the (T, E) one-hot, capacity-bounded scatter into
+    (E, C, d) buffers.  This is the same gather -> reduce-by-key pattern as
+    the paper's Phi kernel (see DESIGN.md §5) and shards over 'model' on E.
+  * Matmuls accumulate in fp32 (preferred_element_type) and cast back.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .params import logical_constraint
+
+__all__ = [
+    "norm",
+    "rope",
+    "attention",
+    "mlp",
+    "moe",
+    "causal_conv1d",
+    "NEG_INF",
+]
+
+NEG_INF = -1e30
+
+
+def _dot(a, b):
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm(x, scale=None, bias=None, kind: str = "rmsnorm", eps: float = 1e-6):
+    """rmsnorm | layernorm | nonparametric (OLMo: LN without params)."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:  # layernorm / nonparametric
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding.  x: (..., S, H, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * freq  # (..., S, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    # broadcast over head dim: (..., S, 1, half)
+    sin, cos = sin[..., None, :], cos[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + causal/SWA masks + q-chunking), shared by train/serve
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(q, k, v, q_pos, kv_pos, kv_valid, causal, window, softcap=None):
+    """q: (B, Sq, Hkv, rep, D); k/v: (B, Skv, Hkv, D)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum(
+        "bqhrd,bkhd->bhrqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - kv_pos[None, :] < window
+    if kv_valid is not None:  # (B, Skv) cache-slot validity
+        mask = mask[None] & kv_valid[:, None, :]
+        mask = mask[:, None, None]  # (B,1,1,Sq,Skv)
+    else:
+        mask = mask[None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhrqk,bkhd->bqhrd", probs, v)
+
+
+def attention(
+    q,
+    k,
+    v,
+    q_pos,
+    kv_pos,
+    kv_valid=None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+):
+    """Chunked multi-query attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); Hq % Hkv == 0.
+    q_pos: (Sq,), kv_pos: (Skv,) absolute positions; kv_valid: (B, Skv).
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    qg = q.reshape(b, sq, hkv, rep, d)
+
+    if sq <= q_chunk:
+        out = _attn_block(qg, k, v, q_pos, kv_pos, kv_valid, causal, window)
+        return out.reshape(b, sq, hq, d)
+
+    pad = (-sq) % q_chunk
+    if pad:  # pad queries to a chunk multiple; padded rows are sliced off
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=-1)
+    sq_p = sq + pad
+    n_chunks = sq_p // q_chunk
+    qg = qg.reshape(b, n_chunks, q_chunk, hkv, rep, d)
+    qp = q_pos.reshape(n_chunks, q_chunk)
+
+    def step(carry, inp):
+        q_c, qp_c = inp
+        o = _attn_block(q_c, k, v, qp_c, kv_pos, kv_valid, causal, window)
+        return carry, o
+
+    _, out = jax.lax.scan(
+        step, None, (jnp.moveaxis(qg, 1, 0), qp)
+    )  # out: (n_chunks, B, q_chunk, hkv, rep, d)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq_p, hq, d)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+
+def mlp(x, p, act: str = "silu_glu"):
+    """Dense FFN.  p: dict with wi_gate/wi_up/wo (glu) or wi/wo (gelu)."""
+    if act == "silu_glu":
+        g = _dot(x, p["wi_gate"])
+        u = _dot(x, p["wi_up"])
+        return _dot(jax.nn.silu(g) * u, p["wo"])
+    h = jax.nn.gelu(_dot(x, p["wi"]))
+    return _dot(h, p["wo"])
+
+
+def moe(x, p, n_experts: int, top_k: int, capacity_factor: float = 1.25):
+    """Top-k MoE with capacity-bounded scatter dispatch.
+
+    x: (B, S, d) -> (B, S, d).  p: router (d, E), wi_gate/wi_up (E, d, f),
+    wo (E, f, d).  The dispatch is the Phi-kernel pattern: assign ->
+    position-by-cumsum -> scatter -> grouped matmul -> gather-combine.
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt, p["router"], preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    cap = max(int(capacity_factor * top_k * t / n_experts), 4)
+    buf = jnp.zeros((n_experts, cap, d), x.dtype)
+    slot_of = []  # (T,) position in expert, per k-slot
+    for kk in range(top_k):
+        e = gate_idx[:, kk]  # (T,)
+        onehot = jax.nn.one_hot(e, n_experts, dtype=jnp.int32)  # (T, E)
+        pos_all = jnp.cumsum(onehot, axis=0) - 1  # (T, E)
+        pos = jnp.take_along_axis(pos_all, e[:, None], axis=1)[:, 0]
+        # offset by tokens already scattered in earlier k-slots
+        if kk > 0:
+            prev_counts = prev_total  # (E,)
+            pos = pos + prev_counts[e]
+            prev_total = prev_counts + onehot.sum(axis=0)
+        else:
+            prev_total = onehot.sum(axis=0)
+        keep = pos < cap
+        pos_c = jnp.where(keep, pos, cap - 1)
+        buf = buf.at[e, pos_c].add(
+            jnp.where(keep[:, None], xt, 0).astype(x.dtype)
+        )
+        slot_of.append((e, pos_c, keep))
+
+    # grouped expert FFN on (E, C, d)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"], preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"], preferred_element_type=jnp.float32)
+
+    yt = jnp.zeros((t, d), jnp.float32)
+    for kk in range(top_k):
+        e, pos_c, keep = slot_of[kk]
+        gathered = out_buf[e, pos_c]  # (T, d)
+        w = gate_vals[:, kk] * keep
+        yt = yt + w[:, None] * gathered
+    return yt.astype(x.dtype).reshape(b, s, d), probs
+
+
+def moe_grouped(x, p, n_experts: int, top_k: int, capacity_factor: float = 1.25,
+                group_size: int = 512, group_chunk: int = 1):
+    """Top-k MoE with *group-local* one-hot dispatch (GShard-style).
+
+    This is the sharding-friendly path for the pod meshes: tokens are split
+    into groups of ``group_size`` along the (data-sharded) token dim, and
+    dispatch/combine are expressed as one-hot einsums *within* each group —
+    the same one-hot-matmul reduction as the paper's Phi kernel
+    (DESIGN.md Sec. 2).  Under pjit the dispatch needs **no communication**
+    (groups are data-local); the expert einsums shard E over 'model' and the
+    combine contracts E, so SPMD inserts exactly one all-reduce per MoE
+    layer — identical collective structure to a TP FFN.
+
+    x: (B, S, d) -> ((B, S, d), router_probs (T, E)).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    gs = min(group_size, t)
+    while t % gs:
+        gs //= 2
+    ng = t // gs
+    cap = max(int(capacity_factor * top_k * gs / n_experts), 4)
+
+    e_g = gate_idx.reshape(ng, gs, top_k)
+    w_g = gate_vals.reshape(ng, gs, top_k).astype(jnp.float32)
+
+    # position of each (token, slot) within its expert, per group: rank
+    # (slot-major) by cumsum over the one-hot — the Phi-layout position-by-
+    # cumsum trick (core/layout.py) applied to expert segments.
+    onehot_i = jax.nn.one_hot(e_g, n_experts, dtype=jnp.int32)  # (ng, gs, k, E)
+    flat = onehot_i.transpose(0, 2, 1, 3).reshape(ng, top_k * gs, n_experts)
+    pos_flat = jnp.cumsum(flat, axis=1) - 1  # (ng, k*gs, E)
+    pos = pos_flat.reshape(ng, top_k, gs, n_experts).transpose(0, 2, 1, 3)
+    pos = jnp.sum(pos * onehot_i, axis=-1)  # (ng, gs, k)
+    keep = pos < cap
+    w_g = w_g * keep  # dropped tokens contribute nothing
+
+    # Dispatch/combine one-hots over the combined (E*cap) slot space, in
+    # the model dtype (bf16 halves the dominant prefill temp), accumulated
+    # per k-slot so the (ng, gs, k, E, cap) outer product never exists.
+    # Groups are processed in chunks via lax.scan so the dispatch tensors
+    # scale with the chunk, not the whole token stream (§Perf: the 32k-
+    # prefill MoE cells were HBM-bound on these temps).
+    ec = n_experts * cap
+    xg = logical_constraint(xt.reshape(ng, gs, d), ("batch", None, None))
+
+    gc = (ng if group_chunk <= 1 else
+          max(g for g in range(1, min(group_chunk, ng) + 1) if ng % g == 0))
+    nch = ng // gc
+
+    def chunk_fn(_, args):
+        e_c, w_c, keep_c, pos_c, x_c = args  # leading dim gc
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, ec), 2)
+        disp = jnp.zeros((gc, gs, ec), x.dtype)
+        comb = jnp.zeros((gc, gs, ec), x.dtype)
+        for kk in range(top_k):
+            slot = jnp.where(keep_c[..., kk],
+                             e_c[..., kk] * cap + pos_c[..., kk], ec)
+            hit = (slot[..., None] == iota).astype(x.dtype)  # (gc, gs, ec)
+            disp = disp + hit
+            comb = comb + w_c[..., kk : kk + 1].astype(x.dtype) * hit
+        disp = disp.reshape(gc, gs, n_experts, cap)
+        comb = comb.reshape(gc, gs, n_experts, cap)
+        disp = logical_constraint(disp, ("batch", None, "experts", None))
+        comb = logical_constraint(comb, ("batch", None, "experts", None))
+        buf = jnp.einsum("gsec,gsd->gecd", disp, x_c,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        buf = logical_constraint(buf, ("batch", "experts", None, None))
+        gg = jnp.einsum("gecd,edf->gecf", buf, p["wi_gate"],
+                        preferred_element_type=jnp.float32)
+        uu = jnp.einsum("gecd,edf->gecf", buf, p["wi_up"],
+                        preferred_element_type=jnp.float32)
+        hh = (jax.nn.silu(gg) * uu).astype(x.dtype)
+        out_buf = jnp.einsum("gecf,efd->gecd", hh, p["wo"],
+                             preferred_element_type=jnp.float32)
+        y_c = jnp.einsum("gsec,gecd->gsd", comb.astype(jnp.float32), out_buf)
+        return None, y_c.astype(x.dtype)
+
+    def chunked(t5):
+        return jax.tree.map(
+            lambda a: a.reshape(nch, gc, *a.shape[1:]), t5)
+
+    args = chunked((e_g, w_g, keep, pos, xg))
+    if nch == 1:
+        _, y = chunk_fn(None, jax.tree.map(lambda a: a[0], args))
+        yt = y
+    else:
+        _, ys = jax.lax.scan(chunk_fn, None, args)
+        yt = ys.reshape(ng, gs, d)
+    return yt.astype(x.dtype).reshape(b, s, d), probs
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv.  x: (B, S, C); w: (C, K).
+
+    If ``state`` is given ((B, K-1, C), decode path with S small), the conv
+    runs over [state; x] and the new state is returned.
+    """
+    k = w.shape[1]
+    if state is not None:
+        xin = jnp.concatenate([state, x], axis=1)
+        new_state = xin[:, -(k - 1) :, :] if k > 1 else state
+    else:
+        xin = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = xin[:, -(k - 1) :, :] if k > 1 else None
+    s_out = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for tap in range(k):
+        y = y + xin[:, tap : tap + s_out, :].astype(jnp.float32) * w[:, tap].astype(
+            jnp.float32
+        )
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,345 @@
+"""Mamba-2 (SSD, state-space duality) — arXiv:2405.21060.
+
+Attention-free LM: each layer is
+    in_proj -> [z | xBC | dt];  causal conv over xBC;  SSD;  gated RMSNorm;
+    out_proj
+with the SSD computed by the *chunked* algorithm (Dao & Gu 2024 Alg. 1):
+intra-chunk "attention" matmuls (MXU-friendly) + an inter-chunk state
+recurrence.  This is the dense-chunked analog of the paper's blocked
+segmented reduction: the chunk size plays the role of ``block_nnz`` (it is
+a tunable policy knob, ``cfg.ssm_chunk``).
+
+Decode carries an O(1) state (B, H, P, N) + conv tail — this is why
+mamba2 runs the ``long_500k`` cell that full-attention archs must skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+
+from .layers import causal_conv1d, norm
+from .params import ParamSpec, logical_constraint
+
+__all__ = [
+    "param_specs",
+    "forward",
+    "prefill",
+    "decode_step",
+    "cache_specs",
+    "ssd_chunked",
+    "ssd_ref",
+]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x):
+    """Stable 'segment sum' for the intra-chunk decay matrix.
+
+    x: (..., q).  Returns (..., q, q) where out[i, j] = sum_{k=j+1..i} x_k
+    for i >= j, -inf otherwise.
+    """
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # [i,j] = cs_i - cs_j
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    Args:
+      x:  (B, S, H, P) inputs (already conv'd / activated).
+      dt: (B, S, H) softplus'd step sizes (> 0).
+      a_log: (H,) log of -A (A = -exp(a_log) < 0).
+      b, c: (B, S, G, N) input/output projections (G groups broadcast to H).
+      d_skip: (H,) skip connection.
+      chunk: intra-chunk length Q (policy knob).
+      h0: optional initial state (B, H, P, N).
+
+    Returns: (y (B, S, H, P), h_final (B, H, P, N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc, q = s // chunk, chunk
+    rep = h // g
+
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,) negative
+    dta = dt.astype(jnp.float32) * a  # (B, S, H)
+    dtx = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # reshape into chunks
+    def ch(t):  # (B, S, ...) -> (B, nc, q, ...)
+        return t.reshape(bsz, nc, q, *t.shape[2:])
+
+    dta_c = ch(dta)  # (B, nc, q, H)
+    dtx_c = ch(dtx)  # (B, nc, q, H, P)
+    b_c = ch(b.astype(jnp.float32))  # (B, nc, q, G, N)
+    c_c = ch(c.astype(jnp.float32))  # (B, nc, q, G, N)
+
+    # --- intra-chunk (the "quadratic attention" branch) --------------------
+    lmat = jnp.exp(_segsum(jnp.moveaxis(dta_c, -1, -2)))  # (B, nc, H, q, q)
+    # scores[i, j] = (C_i . B_j) * L[i, j]
+    cb = jnp.einsum("bzqgn,bzkgn->bzgqk", c_c, b_c)  # (B, nc, G, q, q)
+    cb = jnp.repeat(cb, rep, axis=2)  # (B, nc, H, q, q)
+    y_diag = jnp.einsum("bzhqk,bzkhp->bzqhp", cb * lmat, dtx_c)
+
+    # --- chunk states -------------------------------------------------------
+    cum = jnp.cumsum(dta_c, axis=2)  # (B, nc, q, H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B, nc, q, H)
+    b_h = jnp.repeat(b_c, rep, axis=3) if g != h else b_c  # (B, nc, q, H, N)
+    states = jnp.einsum("bzqh,bzqhn,bzqhp->bzhpn", decay_to_end, b_h, dtx_c)
+
+    # --- inter-chunk recurrence --------------------------------------------
+    chunk_decay = jnp.exp(jnp.sum(dta_c, axis=2))  # (B, nc, H)
+    init = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+
+    def step(carry, inp):
+        dec, st = inp  # (B, H), (B, H, P, N)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* the chunk
+
+    h_final, h_prev = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B, nc, H, P, N)
+
+    # --- off-diagonal (state -> output) -------------------------------------
+    decay_from_start = jnp.exp(cum)  # (B, nc, q, H)
+    c_h = jnp.repeat(c_c, rep, axis=3) if g != h else c_c
+    y_off = jnp.einsum("bzqhn,bzhpn,bzqh->bzqhp", c_h, h_prev, decay_from_start)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_ref(x, dt, a_log, b, c, d_skip, h0=None):
+    """Sequential-scan oracle for ssd_chunked (tests)."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    state = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    b_h = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    c_h = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    ys = []
+    for t in range(s):
+        dta = dt[:, t].astype(jnp.float32) * a  # (B, H)
+        decay = jnp.exp(dta)
+        upd = jnp.einsum(
+            "bh,bhp,bhn->bhpn",
+            dt[:, t].astype(jnp.float32),
+            x[:, t].astype(jnp.float32),
+            b_h[:, t],
+        )
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, c_h[:, t])
+        y = y + x[:, t].astype(jnp.float32) * d_skip.astype(jnp.float32)[None, :, None]
+        ys.append(y)
+    return jnp.stack(ys, axis=1).astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Layer / model
+# ---------------------------------------------------------------------------
+
+
+def _layer_specs(cfg: ArchConfig) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    g, n, hd = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.n_ssm_heads
+    conv_dim = din + 2 * g * n
+    l = cfg.n_layers
+    la = ("layers",)
+    return {
+        # in_proj -> [z (din) | x (din) | B (g n) | C (g n) | dt (h)]
+        "in_proj": ParamSpec((l, d, 2 * din + 2 * g * n + h), la + ("embed", "mlp")),
+        "conv_w": ParamSpec((l, conv_dim, cfg.d_conv), la + ("mlp", None)),
+        "conv_b": ParamSpec((l, conv_dim), la + ("mlp",), init="zeros"),
+        "a_log": ParamSpec((l, h), la + (None,), dtype=jnp.float32, init="ones"),
+        "d_skip": ParamSpec((l, h), la + (None,), dtype=jnp.float32, init="ones"),
+        "dt_bias": ParamSpec((l, h), la + (None,), dtype=jnp.float32, init="zeros"),
+        "norm_scale": ParamSpec((l, din), la + ("mlp",), dtype=jnp.float32, init="ones"),
+        "out_proj": ParamSpec((l, din, d), la + ("mlp", "embed")),
+        "ln": ParamSpec((l, d), la + ("embed",), dtype=jnp.float32, init="ones"),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    return {
+        "embed": ParamSpec((cfg.vocab_pad, cfg.d_model), ("vocab", "embed")),
+        "blocks": _layer_specs(cfg),
+        "final_norm": ParamSpec(
+            (cfg.d_model,), ("embed",), dtype=jnp.float32, init="ones"
+        ),
+    }
+
+
+def _split_proj(z_all, cfg: ArchConfig):
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    z = z_all[..., :din]
+    xbc = z_all[..., din : din + din + 2 * g * n]
+    dt = z_all[..., -h:]
+    return z, xbc, dt
+
+
+def _mamba_mix(x_in, p, cfg: ArchConfig, state=None, conv_state=None, chunk=None):
+    """One mamba2 mixer.  x_in: (B, S, d).  Returns (y, new_state, new_conv)."""
+    bsz, s, _ = x_in.shape
+    din, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    h, hd = cfg.n_ssm_heads, cfg.ssm_head_dim
+    chunk = chunk or cfg.ssm_chunk
+
+    x_in = logical_constraint(x_in, ("batch", None, None))
+    z_all = jnp.einsum(
+        "bsd,dk->bsk", x_in, p["in_proj"], preferred_element_type=jnp.float32
+    ).astype(x_in.dtype)
+    z_all = logical_constraint(z_all, ("batch", None, "mlp"))
+    z, xbc, dt_raw = _split_proj(z_all, cfg)
+
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"], state=conv_state)
+    xbc = jax.nn.silu(xbc + p["conv_b"].astype(xbc.dtype))
+    xs = xbc[..., :din].reshape(bsz, s, h, hd)
+    b = xbc[..., din : din + g * n].reshape(bsz, s, g, n)
+    c = xbc[..., din + g * n :].reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+
+    if s == 1 and state is not None:
+        # O(1) decode update (no chunking)
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))
+        decay = jnp.exp(dt[:, 0] * a)  # (B, H)
+        rep = h // g
+        b_h = jnp.repeat(b[:, 0], rep, axis=1).astype(jnp.float32)  # (B, H, N)
+        c_h = jnp.repeat(c[:, 0], rep, axis=1).astype(jnp.float32)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dt[:, 0], xs[:, 0].astype(jnp.float32), b_h)
+        new_state = state.astype(jnp.float32) * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", new_state, c_h)
+        y = y + xs[:, 0].astype(jnp.float32) * p["d_skip"][None, :, None]
+        y = y[:, None].astype(x_in.dtype)  # (B, 1, H, P)
+    else:
+        pad = (-s) % chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, new_state = ssd_chunked(
+            xs, dt, p["a_log"], b, c, p["d_skip"], chunk, h0=state
+        )
+        if pad:
+            y = y[:, :s]
+            # final state must not include padded steps: dt=0 there => decay=1,
+            # upd=0, so padding is a no-op on the state already.
+        new_state = new_state
+
+    y = y.reshape(bsz, s, din)
+    y = norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+             p["norm_scale"], kind="rmsnorm")
+    out = jnp.einsum(
+        "bsk,kd->bsd", y, p["out_proj"], preferred_element_type=jnp.float32
+    ).astype(x_in.dtype)
+    return out, new_state, new_conv
+
+
+def _block(x, p, cfg: ArchConfig, state=None, conv_state=None):
+    h = norm(x, p["ln"], kind="rmsnorm")
+    y, ns, nc = _mamba_mix(h, p, cfg, state=state, conv_state=conv_state)
+    return x + y, ns, nc
+
+
+def _run(params, x, cfg: ArchConfig, caches=None):
+    blocks = params["blocks"]
+    if caches is None:
+        def body(h, blk):
+            h2, _, _ = _block(h, blk, cfg)
+            return h2, None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, blocks)
+        return x, None
+
+    def body_c(h, xs):
+        blk, st, cv = xs
+        h2, ns, nc = _block(h, blk, cfg, state=st, conv_state=cv)
+        return h2, (ns, nc)
+
+    x, (ns, nc) = jax.lax.scan(body_c, x, (blocks, caches["ssm"], caches["conv"]))
+    return x, {"ssm": ns, "conv": nc, "pos": caches["pos"] + x.shape[1]}
+
+
+def forward(params, tokens, cfg: ArchConfig):
+    x = params["embed"][tokens].astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    )
+    x = logical_constraint(x, ("batch", None, None))
+    x, _ = _run(params, x, cfg, None)
+    return norm(x, params["final_norm"], kind="rmsnorm")
+
+
+def _logits(params, hidden, cfg):
+    return jnp.einsum(
+        "...d,dv->...v", hidden, params["embed"].T,
+        preferred_element_type=jnp.float32,
+    )
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int = 0) -> dict:
+    l = cfg.n_layers
+    h, hd, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "ssm": ParamSpec((l, batch, h, hd, n), ("layers", "batch", None, None, "state"),
+                         dtype=jnp.float32, init="zeros"),
+        "conv": ParamSpec((l, batch, cfg.d_conv - 1, conv_dim),
+                          ("layers", "batch", None, "mlp"), dtype=dt, init="zeros"),
+        "pos": ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def prefill(params, tokens, cfg: ArchConfig, cache_len: int | None = None):
+    """Prefill: run the chunked scan, keep final states as the cache
+    (``cache_len`` is irrelevant: the state is O(1))."""
+    bsz, s = tokens.shape
+    x = params["embed"][tokens].astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    )
+    l = cfg.n_layers
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    caches = {
+        "ssm": jnp.zeros(
+            (l, bsz, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jnp.zeros((l, bsz, cfg.d_conv - 1, conv_dim), x.dtype),
+        "pos": jnp.int32(0),
+    }
+    x, new_caches = _run(params, x, cfg, caches)
+    h_last = norm(x[:, -1:], params["final_norm"], kind="rmsnorm")
+    return _logits(params, h_last[:, 0], cfg), new_caches
+
+
+def decode_step(params, caches, tokens, cfg: ArchConfig):
+    x = params["embed"][tokens].astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    )
+    x, new_caches = _run(params, x, cfg, caches)
+    h = norm(x, params["final_norm"], kind="rmsnorm")
+    return _logits(params, h[:, 0], cfg), new_caches

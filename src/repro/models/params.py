@@ -1,0 +1,242 @@
+"""Logical-axis parameter system (lightweight, flax-free).
+
+Models declare parameter trees of :class:`ParamSpec` with *logical* axis
+names; the distribution layer maps logical axes to mesh axes via rules
+(megatron TP on 'model', fsdp on ('pod','data')).  The same tree drives
+``init`` (real arrays), ``eval_shape`` (dry-run), and NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ParamSpec",
+    "cast_specs",
+    "logical_constraint",
+    "DEFAULT_RULES",
+    "abstract_params",
+    "init_params",
+    "param_shardings",
+    "spec_for_axes",
+    "count_params",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple  # logical axis name per dim (None = replicated dim)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 1.0  # stddev multiplier for 'normal'
+
+    def struct(self):
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+# logical axis -> mesh axis (or tuple).  'fsdp' is resolved by mesh axes
+# present: ('pod','data') on the multi-pod mesh, ('data',) on single-pod.
+DEFAULT_RULES = {
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "kv_seq": "model",  # decode-cache seq dim: flash-decoding-style split
+    "mlp": "model",
+    "experts": "model",
+    "embed": "fsdp",
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "batch": "fsdp",
+    "seq": None,
+}
+
+# ZeRO-3 profile: small dense models on a 256-chip pod are *collective*-
+# bound under 16-way TP (per-layer activation all-reduces).  This profile
+# data-parallels the batch over EVERY mesh axis and FSDP-shards each
+# weight's first shardable dim over ('data','model') — wire becomes
+# 3x(weight bytes) per layer instead of 4x(activation bytes), a ~10x win
+# for <3B models (EXPERIMENTS.md §Perf Cell D).
+ZERO3_RULES = {
+    "vocab": ("data", "model"),
+    "heads": ("data", "model"),
+    "kv": ("data", "model"),
+    "kv_seq": None,
+    "mlp": ("data", "model"),
+    "experts": ("data", "model"),
+    "embed": ("data", "model"),
+    "layers": None,
+    "conv": None,
+    "state": None,
+    # 256-way on both meshes (global_batch=256); the multi-pod 'pod' axis
+    # pure-DP-replicates state (cheap: it is already 256-way sharded)
+    "batch": ("data", "model"),
+    "seq": None,
+}
+
+RULE_PROFILES = {"tp_fsdp": DEFAULT_RULES, "zero3": ZERO3_RULES}
+
+_ACTIVE_RULES = [DEFAULT_RULES]
+
+
+def set_rules_profile(name_or_rules):
+    """Select the active logical-axis rules (affects spec_for_axes /
+    param_shardings / logical_constraint defaults).  Returns the rules."""
+    rules = (RULE_PROFILES[name_or_rules]
+             if isinstance(name_or_rules, str) else name_or_rules)
+    _ACTIVE_RULES[0] = rules
+    return rules
+
+
+def active_rules():
+    return _ACTIVE_RULES[0]
+
+
+# When two dims of one tensor want the same mesh axis (e.g. a KV cache whose
+# 'kv' heads AND 'kv_seq' positions both map to 'model'), the lower-priority
+# dim replicates.  kv wins over kv_seq: head-split attention needs no
+# softmax reduction; seq-split is the fallback when kv_heads < axis size.
+# Under zero3 the first shardable weight dim wins ('embed' before 'heads').
+_AXIS_PRIORITY = {"kv_seq": 1}
+
+
+def _resolve(axis_name, mesh: Mesh, rules: dict):
+    rule = rules.get(axis_name)
+    if rule is None:
+        return None
+    if rule == "fsdp":
+        return tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    if rule == "all":
+        return tuple(mesh.axis_names)
+    if isinstance(rule, tuple):
+        out = tuple(a for a in rule if a in mesh.axis_names)
+        return out or None
+    return rule if rule in mesh.axis_names else None
+
+
+def spec_for_axes(axes: tuple, shape: tuple, mesh: Mesh, rules=None) -> P:
+    """PartitionSpec for logical axes.
+
+    Replicates non-divisible dims; resolves same-axis conflicts between two
+    dims of one tensor by ``_AXIS_PRIORITY`` (lower number wins).
+    """
+    rules = rules or active_rules()
+    cand = []
+    for dim, ax in zip(shape, axes):
+        r = _resolve(ax, mesh, rules) if ax else None
+        if r is None:
+            cand.append(None)
+            continue
+        names = (r,) if isinstance(r, str) else tuple(r)
+        size = 1
+        for nm in names:
+            size *= mesh.shape[nm]
+        cand.append(r if dim % size == 0 else None)
+    order = sorted(range(len(cand)),
+                   key=lambda i: _AXIS_PRIORITY.get(axes[i] or "", 0))
+    parts = [None] * len(cand)
+    used: set = set()
+    for i in order:
+        r = cand[i]
+        if r is None:
+            continue
+        names = (r,) if isinstance(r, str) else tuple(r)
+        if any(nm in used for nm in names):
+            continue  # lower-priority dim replicates
+        parts[i] = r
+        used.update(names)
+    return P(*parts)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(tree):
+    """ParamSpec tree -> ShapeDtypeStruct tree (for AOT lowering)."""
+    return jax.tree.map(lambda s: s.struct(), tree, is_leaf=_is_spec)
+
+
+def init_params(tree, key: jax.Array):
+    """ParamSpec tree -> initialized array tree."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, spec.dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = spec.scale / (fan_in**0.5)
+            out.append(
+                (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(
+                    spec.dtype
+                )
+            )
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_shardings(tree, mesh: Mesh, rules=None):
+    """ParamSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for_axes(s.axes, s.shape, mesh, rules)),
+        tree,
+        is_leaf=_is_spec,
+    )
+
+
+def _ambient_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def logical_constraint(x, axes: tuple):
+    """with_sharding_constraint via logical axis names (no-op without mesh).
+
+    SPMD propagation loses the batch sharding inside rematted layer scans;
+    pinning activations at layer boundaries keeps every intermediate
+    (attention scores, MoE buffers, CE chunks) sharded — the standard
+    MaxText-style discipline.
+    """
+    m = _ambient_mesh()
+    if m is None:
+        return x
+    spec = spec_for_axes(axes, x.shape, m, rules=active_rules())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(m, spec))
+
+
+def cast_specs(tree, dtype):
+    """Replace the default bf16 weight dtype (norms/int specs untouched).
+
+    Smoke tests run float32 on XLA:CPU (whose thunks lack some bf16 dot
+    combos); the full configs keep bf16 for the TPU dry-run.
+    """
+    def f(s):
+        if s.dtype == jnp.bfloat16:
+            return dataclasses.replace(s, dtype=dtype)
+        return s
+
+    return jax.tree.map(f, tree, is_leaf=_is_spec)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=_is_spec)
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in (s.shape if _is_spec(s) else s.shape):
+            n *= d
+        total += n
+    return total

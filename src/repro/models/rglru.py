@@ -1,0 +1,421 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention,
+in a (rec, rec, local-attn) repeating pattern — arXiv:2402.19427.
+
+Temporal mix per layer:
+  * recurrent block: two branches — gate = gelu(W_gate x); rec = RG-LRU(
+    conv1d(W_rec x)); y = W_out (gate * rec)
+  * local-attn block: GQA/MQA with a sliding window (bounded KV cache)
+Each layer is followed by a GLU MLP; pre-RMSNorm residuals throughout.
+
+The RG-LRU diagonal recurrence
+  r_t = sigmoid(W_a x_t + b_a);  i_t = sigmoid(W_x x_t + b_x)
+  a_t = exp(-c * softplus(Lambda) * r_t)          (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is computed with ``jax.lax.associative_scan`` (log-depth) in train/prefill
+and as an O(1) update in decode — giving the bounded-state property that
+lets this arch run the ``long_500k`` cell.
+
+Layers are scanned over the repeating period (homogeneous super-block of
+hybrid_period sub-layers); trailing non-multiple layers are recurrent
+blocks applied unscanned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+
+from .layers import attention, causal_conv1d, mlp, norm, rope
+from .params import ParamSpec, logical_constraint
+
+__all__ = [
+    "param_specs",
+    "forward",
+    "prefill",
+    "decode_step",
+    "cache_specs",
+    "rg_lru",
+    "rg_lru_ref",
+]
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+
+def _lru_coeffs(x, p):
+    """a (decay) and b (input) coefficient streams.  x: (B, S, W)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r  # (B, S, W)
+    a = jnp.exp(log_a)
+    # multiplier sqrt(1 - a^2), computed stably via log1p(-exp(2 log_a))
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = mult * (i * xf)
+    return a, b
+
+
+def rg_lru(x, p, h0=None):
+    """RG-LRU over a sequence via associative scan.
+
+    x: (B, S, W).  Returns (y (B, S, W) f32, h_last (B, W) f32).
+    """
+    a, b = _lru_coeffs(x, p)
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rg_lru_ref(x, p, h0=None):
+    """Sequential oracle for rg_lru."""
+    a, b = _lru_coeffs(x, p)
+    bsz, s, w = x.shape
+    h = jnp.zeros((bsz, w), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    ys = []
+    for t in range(s):
+        h = a[:, t] * h + b[:, t]
+        ys.append(h)
+    return jnp.stack(ys, axis=1), h
+
+
+def _rg_lru_step(x1, p, h0):
+    """O(1) decode update.  x1: (B, 1, W); h0: (B, W)."""
+    a, b = _lru_coeffs(x1, p)
+    h = a[:, 0] * h0.astype(jnp.float32) + b[:, 0]
+    return h[:, None], h
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _rec_specs(cfg: ArchConfig, lead, la) -> dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    return {
+        "ln1": ParamSpec(lead + (d,), la + ("embed",), dtype=jnp.float32, init="ones"),
+        "w_gate_in": ParamSpec(lead + (d, w), la + ("embed", "heads")),
+        "w_rec_in": ParamSpec(lead + (d, w), la + ("embed", "heads")),
+        "conv_w": ParamSpec(lead + (w, cfg.d_conv), la + ("heads", None)),
+        "conv_b": ParamSpec(lead + (w,), la + ("heads",), init="zeros"),
+        "w_a": ParamSpec(lead + (w, w), la + ("heads", None), dtype=jnp.float32,
+                         scale=0.1),
+        "b_a": ParamSpec(lead + (w,), la + (None,), dtype=jnp.float32, init="zeros"),
+        "w_x": ParamSpec(lead + (w, w), la + ("heads", None), dtype=jnp.float32,
+                         scale=0.1),
+        "b_x": ParamSpec(lead + (w,), la + (None,), dtype=jnp.float32, init="zeros"),
+        "lam": ParamSpec(lead + (w,), la + (None,), dtype=jnp.float32, init="ones"),
+        "w_rec_out": ParamSpec(lead + (w, d), la + ("heads", "embed")),
+    }
+
+
+def _attn_specs(cfg: ArchConfig, lead, la) -> dict:
+    d, (qd, kvd) = cfg.d_model, cfg.qkv_dims
+    return {
+        "ln1": ParamSpec(lead + (d,), la + ("embed",), dtype=jnp.float32, init="ones"),
+        "wq": ParamSpec(lead + (d, qd), la + ("embed", "heads")),
+        "wk": ParamSpec(lead + (d, kvd), la + ("embed", "kv")),
+        "wv": ParamSpec(lead + (d, kvd), la + ("embed", "kv")),
+        "wo": ParamSpec(lead + (qd, d), la + ("heads", "embed")),
+    }
+
+
+def _mlp_specs(cfg: ArchConfig, lead, la) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln2": ParamSpec(lead + (d,), la + ("embed",), dtype=jnp.float32, init="ones"),
+        "wi_gate": ParamSpec(lead + (d, f), la + ("embed", "mlp")),
+        "wi_up": ParamSpec(lead + (d, f), la + ("embed", "mlp")),
+        "wo_mlp": ParamSpec(lead + (f, d), la + ("mlp", "embed")),
+    }
+
+
+def _layout(cfg: ArchConfig):
+    """(n_super, trailing) — scanned periods + trailing recurrent layers."""
+    period = cfg.hybrid_period or 3
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    period = cfg.hybrid_period or 3
+    n_super, trailing = _layout(cfg)
+    lead, la = (n_super,), ("layers",)
+    # super-block: (period-1) recurrent sub-layers + 1 local-attn sub-layer,
+    # each followed by an MLP.
+    blocks = {
+        "rec": {
+            k: ParamSpec((n_super, period - 1) + s.shape[1:],
+                         ("layers", None) + s.axes[1:], dtype=s.dtype,
+                         init=s.init, scale=s.scale)
+            for k, s in _rec_specs(cfg, (n_super,), ("layers",)).items()
+        },
+        "attn": _attn_specs(cfg, lead, la),
+        "mlp": {
+            k: ParamSpec((n_super, period) + s.shape[1:],
+                         ("layers", None) + s.axes[1:], dtype=s.dtype,
+                         init=s.init, scale=s.scale)
+            for k, s in _mlp_specs(cfg, (n_super,), ("layers",)).items()
+        },
+    }
+    specs = {
+        "embed": ParamSpec((cfg.vocab_pad, cfg.d_model), ("vocab", "embed")),
+        "blocks": blocks,
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), dtype=jnp.float32,
+                                init="ones"),
+    }
+    if trailing:
+        specs["trailing"] = {
+            "rec": {
+                k: ParamSpec((trailing,) + s.shape[1:], ("layers",) + s.axes[1:],
+                             dtype=s.dtype, init=s.init, scale=s.scale)
+                for k, s in _rec_specs(cfg, (trailing,), ("layers",)).items()
+            },
+            "mlp": {
+                k: ParamSpec((trailing,) + s.shape[1:], ("layers",) + s.axes[1:],
+                             dtype=s.dtype, init=s.init, scale=s.scale)
+                for k, s in _mlp_specs(cfg, (trailing,), ("layers",)).items()
+            },
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer application
+# ---------------------------------------------------------------------------
+
+
+def _rec_sublayer(x, p, cfg: ArchConfig, cache=None):
+    """Recurrent temporal-mix.  cache: {'h': (B, W), 'conv': (B, K-1, W)}."""
+    x = logical_constraint(x, ("batch", None, None))
+    h_in = norm(x, p["ln1"], kind=cfg.norm)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", h_in, p["w_gate_in"],
+                   preferred_element_type=jnp.float32)
+    )
+    rec = jnp.einsum("bsd,dw->bsw", h_in, p["w_rec_in"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    rec, new_conv = causal_conv1d(rec, p["conv_w"], state=None if cache is None else cache["conv"])
+    rec = rec + p["conv_b"].astype(rec.dtype)
+    if cache is not None and x.shape[1] == 1:
+        y, new_h = _rg_lru_step(rec, p, cache["h"])
+    else:
+        y, new_h = rg_lru(rec, p, h0=None if cache is None else cache["h"])
+    y = y * gate
+    out = jnp.einsum("bsw,wd->bsd", y.astype(x.dtype), p["w_rec_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    new_cache = None if cache is None else {"h": new_h, "conv": new_conv}
+    return x + out, new_cache
+
+
+def _attn_sublayer(x, p, cfg: ArchConfig, q_pos, cache=None):
+    """Local (sliding-window) attention with a ring KV cache."""
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    window = cfg.window or 2048
+    x = logical_constraint(x, ("batch", None, None))
+    h = norm(x, p["ln1"], kind=cfg.norm)
+    q = jnp.einsum("bsd,dq->bsq", h, p["wq"]).reshape(b, s, hq, dh)
+    k = jnp.einsum("bsd,dk->bsk", h, p["wk"]).reshape(b, s, hkv, dh)
+    v = jnp.einsum("bsd,dk->bsk", h, p["wv"]).reshape(b, s, hkv, dh)
+    q = rope(q, q_pos, cfg.rope_theta)
+    k = rope(k, q_pos, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        o = attention(q, k, v, q_pos, q_pos, causal=True, window=window,
+                      q_chunk=cfg.attn_q_chunk)
+    else:
+        skv = cache["k"].shape[1]
+        pos0 = cache["pos"]
+        if s == 1:
+            slot = pos0 % skv
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+            ckp = jax.lax.dynamic_update_slice(
+                cache["kv_pos"], q_pos.astype(jnp.int32), (slot,))
+            kv_valid = (ckp >= 0)[None, :].repeat(b, axis=0)
+            o = attention(q, ck, cv, q_pos, ckp, kv_valid=kv_valid,
+                          causal=True, window=window, q_chunk=cfg.attn_q_chunk)
+        else:  # prefill
+            kk, vv = k[:, -skv:], v[:, -skv:]
+            pp = q_pos[-skv:].astype(jnp.int32)
+            slots = pp % skv
+            ck = cache["k"].at[:, slots].set(kk)
+            cv = cache["v"].at[:, slots].set(vv)
+            ckp = jnp.full((skv,), -1, jnp.int32).at[slots].set(pp)
+            o = attention(q, k, v, q_pos, q_pos, causal=True, window=window,
+                          q_chunk=cfg.attn_q_chunk)
+        new_cache = {"k": ck, "v": cv, "kv_pos": ckp, "pos": pos0 + s}
+    o = jnp.einsum("bsq,qd->bsd", o.reshape(b, s, hq * dh), p["wo"])
+    return x + o.astype(x.dtype), new_cache
+
+
+def _mlp_sublayer(x, p, cfg: ArchConfig):
+    x = logical_constraint(x, ("batch", None, None))
+    h = norm(x, p["ln2"], kind=cfg.norm)
+    y = mlp(h, {"wi_gate": p["wi_gate"], "wi_up": p["wi_up"], "wo": p["wo_mlp"]},
+            act="silu_glu")
+    return x + y.astype(x.dtype)
+
+
+def _super_block(x, blk, cfg: ArchConfig, q_pos, caches=None):
+    """period-1 recurrent sub-layers + 1 local-attn sub-layer (+ MLPs)."""
+    period = cfg.hybrid_period or 3
+    new_rec, new_attn = [], None
+    for j in range(period - 1):
+        p_rec = jax.tree.map(lambda a: a[j], blk["rec"])
+        c_j = None if caches is None else jax.tree.map(lambda a: a[j], caches["rec"])
+        x, nc = _rec_sublayer(x, p_rec, cfg, c_j)
+        x = _mlp_sublayer(x, jax.tree.map(lambda a: a[j], blk["mlp"]), cfg)
+        new_rec.append(nc)
+    c_a = None if caches is None else caches["attn"]
+    x, na = _attn_sublayer(x, blk["attn"], cfg, q_pos, c_a)
+    x = _mlp_sublayer(x, jax.tree.map(lambda a: a[period - 1], blk["mlp"]), cfg)
+    if caches is None:
+        return x, None
+    new_caches = {
+        "rec": jax.tree.map(lambda *a: jnp.stack(a), *new_rec),
+        "attn": na,
+    }
+    return x, new_caches
+
+
+def _run(params, x, cfg: ArchConfig, q_pos, caches=None):
+    blocks = params["blocks"]
+    if caches is None:
+        def body(h, blk):
+            h2, _ = _super_block(h, blk, cfg, q_pos, None)
+            return h2, None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, blocks)
+        new_caches = None
+    else:
+        def body_c(h, xs):
+            blk, cache = xs
+            return _super_block(h, blk, cfg, q_pos, cache)
+        x, new_caches = jax.lax.scan(body_c, x, (blocks, caches["scan"]))
+        new_caches = {"scan": new_caches}
+
+    if "trailing" in params:
+        tr = params["trailing"]
+        n_tr = tr["rec"]["w_a"].shape[0] if hasattr(tr["rec"]["w_a"], "shape") else 0
+        new_tr = []
+        for j in range(n_tr):
+            p_rec = jax.tree.map(lambda a: a[j], tr["rec"])
+            c_j = (None if caches is None
+                   else jax.tree.map(lambda a: a[j], caches["trailing"]))
+            x, nc = _rec_sublayer(x, p_rec, cfg, c_j)
+            x = _mlp_sublayer(x, jax.tree.map(lambda a: a[j], tr["mlp"]), cfg)
+            new_tr.append(nc)
+        if caches is not None:
+            new_caches["trailing"] = jax.tree.map(lambda *a: jnp.stack(a), *new_tr)
+    if caches is not None:
+        new_caches["pos"] = caches["pos"] + x.shape[1]
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def forward(params, tokens, cfg: ArchConfig):
+    x = params["embed"][tokens].astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    )
+    x = logical_constraint(x, ("batch", None, None))
+    q_pos = jnp.arange(x.shape[1])
+    x, _ = _run(params, x, cfg, q_pos, None)
+    return norm(x, params["final_norm"], kind=cfg.norm)
+
+
+def _logits(params, hidden, cfg):
+    return jnp.einsum("...d,dv->...v", hidden, params["embed"].T,
+                      preferred_element_type=jnp.float32)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    period = cfg.hybrid_period or 3
+    n_super, trailing = _layout(cfg)
+    w = cfg.lru_width or cfg.d_model
+    window = cfg.window or 2048
+    skv = min(cache_len, window)
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def rec_cache(lead, la):
+        return {
+            "h": ParamSpec(lead + (batch, w), la + ("batch", "heads"),
+                           dtype=jnp.float32, init="zeros"),
+            "conv": ParamSpec(lead + (batch, cfg.d_conv - 1, w),
+                              la + ("batch", None, "heads"), dtype=dt, init="zeros"),
+        }
+
+    specs = {
+        "scan": {
+            "rec": rec_cache((n_super, period - 1), ("layers", None)),
+            "attn": {
+                "k": ParamSpec((n_super, batch, skv, hkv, dh),
+                               ("layers", "batch", "kv_seq", "kv", None),
+                               dtype=dt, init="zeros"),
+                "v": ParamSpec((n_super, batch, skv, hkv, dh),
+                               ("layers", "batch", "kv_seq", "kv", None),
+                               dtype=dt, init="zeros"),
+                "kv_pos": ParamSpec((n_super, skv), ("layers", "kv_seq"),
+                                    dtype=jnp.int32, init="zeros"),
+                "pos": ParamSpec((n_super,), ("layers",), dtype=jnp.int32,
+                                 init="zeros"),
+            },
+        },
+        "pos": ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+    }
+    if trailing:
+        specs["trailing"] = rec_cache((trailing,), ("layers",))
+    return specs
+
+
+def _init_caches(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    from .params import init_params
+    import jax.random as jr
+    return init_params(cache_specs(cfg, batch, cache_len), jr.PRNGKey(0))
+
+
+def prefill(params, tokens, cfg: ArchConfig, cache_len: int | None = None):
+    bsz, s = tokens.shape
+    cache_len = max(cache_len or s, s)
+    x = params["embed"][tokens].astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    )
+    q_pos = jnp.arange(s)
+    caches = _init_caches(cfg, bsz, cache_len, x.dtype)
+    # kv_pos must start at -1 (empty slots)
+    caches = jax.tree.map(lambda a: a, caches)
+    caches["scan"]["attn"]["kv_pos"] = caches["scan"]["attn"]["kv_pos"] - 1
+    x, new_caches = _run(params, x, cfg, q_pos, caches)
+    h_last = norm(x[:, -1:], params["final_norm"], kind=cfg.norm)
+    return _logits(params, h_last[:, 0], cfg), new_caches
+
+
+def decode_step(params, caches, tokens, cfg: ArchConfig):
+    x = params["embed"][tokens].astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    )
+    pos0 = caches["pos"]
+    q_pos = pos0[None] if pos0.ndim == 0 else pos0
+    x, new_caches = _run(params, x, cfg, q_pos, caches)
+    h = norm(x, params["final_norm"], kind=cfg.norm)
+    return _logits(params, h[:, 0], cfg), new_caches

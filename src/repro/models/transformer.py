@@ -1,0 +1,323 @@
+"""Decoder-only transformer family (dense / GQA / SWA / MoE / VLM-backbone).
+
+Covers: olmo-1b (non-parametric LN), granite-8b, stablelm-3b,
+h2o-danube-1.8b (SWA), pixtral-12b (stub patch embeds + mistral-nemo
+backbone), qwen3-moe-235b (top-8, every layer), llama4-maverick-400b
+(top-1, alternating dense/MoE).
+
+Layers are scanned in super-blocks of ``moe_every`` sublayers (the last
+sublayer of a block is MoE when configured) with optional remat — keeps
+the HLO small enough to compile 94-layer configs on one host core.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+
+from .layers import attention, mlp, moe, moe_grouped, norm, rope
+from .params import ParamSpec, logical_constraint
+
+__all__ = [
+    "param_specs",
+    "forward",
+    "prefill",
+    "decode_step",
+    "cache_specs",
+]
+
+
+def _norm_spec(cfg, lead=()):
+    if cfg.norm == "nonparametric":
+        return None
+    return ParamSpec(lead + (cfg.d_model,), tuple([None] * len(lead)) + ("embed",),
+                     dtype=jnp.float32, init="ones")
+
+
+def _block_specs(cfg: ArchConfig) -> dict:
+    """Specs for one scanned super-block (moe_every sublayers)."""
+    l = cfg.n_layers // max(cfg.moe_every, 1)
+    sub = max(cfg.moe_every, 1)
+    d, qd, kvd, f = cfg.d_model, *cfg.qkv_dims, cfg.d_ff
+    lead = (l, sub)
+    la = ("layers", None)
+    specs = {
+        "wq": ParamSpec(lead + (d, qd), la + ("embed", "heads")),
+        "wk": ParamSpec(lead + (d, kvd), la + ("embed", "kv")),
+        "wv": ParamSpec(lead + (d, kvd), la + ("embed", "kv")),
+        "wo": ParamSpec(lead + (qd, d), la + ("heads", "embed")),
+    }
+    for nm in ("ln1", "ln2"):
+        ns = _norm_spec(cfg, lead)
+        if ns is not None:
+            specs[nm] = ns
+    # dense FFN params exist for every sublayer; MoE sublayers additionally
+    # carry expert weights (dense ones unused there — zero-sized would break
+    # scan homogeneity, so MoE-every-layer configs set d_ff small).
+    if cfg.n_experts and cfg.moe_every == 1:
+        pass  # pure-MoE: no dense FFN weights at all
+    else:
+        if cfg.act == "silu_glu":
+            specs["wi_gate"] = ParamSpec(lead + (d, f), la + ("embed", "mlp"))
+            specs["wi_up"] = ParamSpec(lead + (d, f), la + ("embed", "mlp"))
+        else:
+            specs["wi"] = ParamSpec(lead + (d, f), la + ("embed", "mlp"))
+        specs["wo_mlp"] = ParamSpec(lead + (f, d), la + ("mlp", "embed"))
+    if cfg.n_experts:
+        e, fe = cfg.n_experts, cfg.d_ff_expert
+        specs["router"] = ParamSpec((l, d, e), ("layers", "embed", None),
+                                    dtype=jnp.float32)
+        specs["e_wi_gate"] = ParamSpec((l, e, d, fe), ("layers", "experts", "embed", "mlp"))
+        specs["e_wi_up"] = ParamSpec((l, e, d, fe), ("layers", "experts", "embed", "mlp"))
+        specs["e_wo"] = ParamSpec((l, e, fe, d), ("layers", "experts", "mlp", "embed"))
+    return specs
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    specs = {
+        "embed": ParamSpec((cfg.vocab_pad, cfg.d_model), ("vocab", "embed"),
+                           scale=1.0),
+        "blocks": _block_specs(cfg),
+    }
+    fn = _norm_spec(cfg)
+    if fn is not None:
+        specs["final_norm"] = fn
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_pad), ("embed", "vocab"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer application
+# ---------------------------------------------------------------------------
+
+
+def _sub(tree, j):
+    """Index sublayer j out of a super-block param tree (static j)."""
+    out = {}
+    for k, v in tree.items():
+        if k in ("router", "e_wi_gate", "e_wi_up", "e_wo"):
+            out[k] = v  # per-super-block (single MoE sublayer)
+        else:
+            out[k] = v[j]
+    return out
+
+
+def _attn_sublayer(x, p, cfg: ArchConfig, q_pos, cache=None):
+    """Pre-norm attention.  cache: dict(k, v, kv_pos, pos) or None."""
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    x = logical_constraint(x, ("batch", None, None))
+    h = norm(x, p.get("ln1"), kind=cfg.norm)
+    q = jnp.einsum("bsd,dq->bsq", h, p["wq"]).reshape(b, s, hq, dh)
+    k = jnp.einsum("bsd,dk->bsk", h, p["wk"]).reshape(b, s, hkv, dh)
+    v = jnp.einsum("bsd,dk->bsk", h, p["wv"]).reshape(b, s, hkv, dh)
+    q = rope(q, q_pos, cfg.rope_theta)
+    k = rope(k, q_pos, cfg.rope_theta)
+    # NOTE (§Perf iteration 3, REFUTED): seq-sharding q over 'model' for
+    # non-divisible head counts (llama4's 40H on the 16-way axis) conflicts
+    # with the q-chunk scan's seq reshape — SPMD involuntary remats doubled
+    # the wire.  Heads shard when divisible; otherwise attention stays
+    # head-replicated (documented in EXPERIMENTS.md).
+    q = logical_constraint(q, ("batch", None, "heads", None))
+    k = logical_constraint(k, ("batch", None, "kv", None))
+    v = logical_constraint(v, ("batch", None, "kv", None))
+
+    new_cache = None
+    if cache is None:
+        o = attention(
+            q, k, v, q_pos, q_pos, causal=True, window=cfg.window,
+            q_chunk=cfg.attn_q_chunk,
+        )
+    else:
+        skv = cache["k"].shape[1]
+        pos0 = cache["pos"]  # scalar int32: tokens already cached
+        if s == 1:
+            slot = pos0 % skv
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+            ckp = jax.lax.dynamic_update_slice(
+                cache["kv_pos"], q_pos.astype(jnp.int32), (slot,)
+            )
+        else:  # prefill: write last skv tokens ring-consistently (slot = pos % skv)
+            kk, vv = k[:, -skv:], v[:, -skv:]
+            pp = q_pos[-skv:].astype(jnp.int32)
+            slots = pp % skv
+            ck = cache["k"].at[:, slots].set(kk)
+            cv = cache["v"].at[:, slots].set(vv)
+            ckp = jnp.full((skv,), -1, jnp.int32).at[slots].set(pp)
+        kv_valid = (ckp >= 0)[None, :].repeat(b, axis=0)
+        o = attention(
+            q, ck if s == 1 else k, cv if s == 1 else v,
+            q_pos, ckp if s == 1 else q_pos,
+            kv_valid=kv_valid if s == 1 else None,
+            causal=(s != 1), window=cfg.window, q_chunk=cfg.attn_q_chunk,
+        )
+        new_cache = {"k": ck, "v": cv, "kv_pos": ckp, "pos": pos0 + s}
+    o = jnp.einsum("bsq,qd->bsd", o.reshape(b, s, hq * dh), p["wo"])
+    return x + o.astype(x.dtype), new_cache
+
+
+def _ffn_sublayer(x, p, cfg: ArchConfig, is_moe: bool):
+    x = logical_constraint(x, ("batch", None, None))
+    h = norm(x, p.get("ln2"), kind=cfg.norm)
+    if is_moe:
+        moe_fn = moe_grouped if cfg.moe_impl == "grouped" else moe
+        kw = ({"group_size": cfg.moe_group, "group_chunk": cfg.moe_group_chunk}
+              if cfg.moe_impl == "grouped" else {})
+        y, _ = moe_fn(
+            h,
+            {"router": p["router"], "wi_gate": p["e_wi_gate"],
+             "wi_up": p["e_wi_up"], "wo": p["e_wo"]},
+            cfg.n_experts, cfg.top_k, cfg.capacity_factor, **kw,
+        )
+    else:
+        mp = {k: p[k] for k in ("wi_gate", "wi_up", "wi") if k in p}
+        mp["wo"] = p["wo_mlp"]
+        y = mlp(h, mp, act=cfg.act)
+    return x + y.astype(x.dtype)
+
+
+def _super_block(x, blk, cfg: ArchConfig, q_pos, caches=None):
+    """Apply moe_every sublayers; last one is MoE if configured."""
+    sub = max(cfg.moe_every, 1)
+    new_caches = []
+    for j in range(sub):
+        p = _sub(blk, j)
+        c_j = None if caches is None else jax.tree.map(lambda a: a[j], caches)
+        x, nc = _attn_sublayer(x, p, cfg, q_pos, c_j)
+        is_moe = bool(cfg.n_experts) and (j == sub - 1)
+        x = _ffn_sublayer(x, p, cfg, is_moe)
+        if caches is not None:
+            new_caches.append(nc)
+    if caches is not None:
+        new_caches = jax.tree.map(lambda *a: jnp.stack(a), *new_caches)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, tokens, cfg, extra_embeds=None):
+    x = params["embed"][tokens].astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    x = logical_constraint(x, ("batch", None, None))
+    if extra_embeds is not None:  # pixtral: prepend stub patch embeddings
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        x = logical_constraint(x, ("batch", None, None))
+    return x
+
+
+def _run_blocks(params, x, cfg: ArchConfig, q_pos, caches=None):
+    blocks = params["blocks"]
+
+    if caches is None:
+        def body(h, blk):
+            h, _ = _super_block(h, blk, cfg, q_pos, None)
+            return h, None
+
+        k = cfg.remat_block
+        n_sb = jax.tree.leaves(blocks)[0].shape[0]
+        if cfg.remat and k and n_sb % k == 0:
+            # two-level remat: store activations only at block-of-k
+            # boundaries; the inner k layers recompute in backward.  Cuts
+            # stored activations ~k-fold for ~one extra forward of compute
+            # (cheap when the step is collective/memory-bound).
+            grouped = jax.tree.map(
+                lambda a: a.reshape(n_sb // k, k, *a.shape[1:]), blocks)
+            inner = jax.checkpoint(body)  # per-layer remat inside the block
+
+            @jax.checkpoint
+            def outer(h, grp):
+                h, _ = jax.lax.scan(inner, h, grp)
+                return h, None
+
+            x, _ = jax.lax.scan(outer, x, grouped)
+            return x, None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, blocks)
+        return x, None
+
+    def body_c(h, xs):
+        blk, cache = xs
+        h, nc = _super_block(h, blk, cfg, q_pos, cache)
+        return h, nc
+
+    x, new_caches = jax.lax.scan(body_c, x, (blocks, caches))
+    return x, new_caches
+
+
+def forward(params, tokens, cfg: ArchConfig, extra_embeds=None):
+    """Training forward: returns final hidden states (B, S_total, d)."""
+    x = _embed_in(params, tokens, cfg, extra_embeds)
+    q_pos = jnp.arange(x.shape[1])
+    x, _ = _run_blocks(params, x, cfg, q_pos, None)
+    return norm(x, params.get("final_norm"), kind=cfg.norm)
+
+
+def logits_from_hidden(params, hidden, cfg: ArchConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum(
+        "...d,dv->...v", hidden, w, preferred_element_type=jnp.float32
+    )
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    """Abstract cache tree for decode (stacked over super-blocks/sublayers)."""
+    l = cfg.n_layers // max(cfg.moe_every, 1)
+    sub = max(cfg.moe_every, 1)
+    skv = min(cache_len, cfg.window) if cfg.window else cache_len
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "k": ParamSpec((l, sub, batch, skv, hkv, dh),
+                       ("layers", None, "batch", "kv_seq", "kv", None),
+                       dtype=dt, init="zeros"),
+        "v": ParamSpec((l, sub, batch, skv, hkv, dh),
+                       ("layers", None, "batch", "kv_seq", "kv", None),
+                       dtype=dt, init="zeros"),
+        "kv_pos": ParamSpec((l, sub, skv), ("layers", None, "kv_seq"),
+                            dtype=jnp.int32, init="zeros"),
+        "pos": ParamSpec((l, sub), ("layers", None), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def prefill(params, tokens, cfg: ArchConfig, extra_embeds=None,
+            cache_len: int | None = None):
+    """Prefill: forward pass + build caches sized ``cache_len`` (>= prompt;
+    defaults to the prompt length — pass headroom for decode)."""
+    x = _embed_in(params, tokens, cfg, extra_embeds)
+    s = x.shape[1]
+    cache_len = max(cache_len or s, s)
+    q_pos = jnp.arange(s)
+    l = cfg.n_layers // max(cfg.moe_every, 1)
+    sub = max(cfg.moe_every, 1)
+    skv = min(cache_len, cfg.window) if cfg.window else cache_len
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    b = x.shape[0]
+    caches = {
+        "k": jnp.zeros((l, sub, b, skv, hkv, dh), x.dtype),
+        "v": jnp.zeros((l, sub, b, skv, hkv, dh), x.dtype),
+        "kv_pos": jnp.full((l, sub, skv), -1, jnp.int32),
+        "pos": jnp.zeros((l, sub), jnp.int32),
+    }
+    x, new_caches = _run_blocks(params, x, cfg, q_pos, caches)
+    h_last = norm(x[:, -1:], params.get("final_norm"), kind=cfg.norm)
+    return logits_from_hidden(params, h_last[:, 0], cfg), new_caches
+
+
+def decode_step(params, caches, tokens, cfg: ArchConfig):
+    """One decode step.  tokens: (B, 1).  Returns (logits (B, V), caches)."""
+    x = _embed_in(params, tokens, cfg)
+    pos0 = caches["pos"][0, 0]  # uniform across layers
+    q_pos = pos0[None]
+    x, new_caches = _run_blocks(params, x, cfg, q_pos, caches)
+    h = norm(x, params.get("final_norm"), kind=cfg.norm)
+    return logits_from_hidden(params, h[:, 0], cfg), new_caches

@@ -1,0 +1,18 @@
+"""Performance-portability methodology layer (the paper's analysis tooling).
+
+  roofline — paper Eqs. 1-8 + the 3-term pod roofline from compiled HLO
+  ppa      — pressure-point analysis harness (Sec. 3.3)
+  hlo      — collective-byte accounting over partitioned HLO
+  timing   — wall-clock harness (host CPU)
+"""
+from .hlo import CollectiveStats, collective_stats, shape_bytes
+from .ppa import PERTURBATIONS, PPAResult, run_ppa
+from .roofline import (
+    HARDWARE,
+    HardwareSpec,
+    RooflineTerms,
+    attainable_gflops,
+    operational_intensity_phi,
+    roofline_terms,
+)
+from .timing import bandwidth_gbs, bench_seconds

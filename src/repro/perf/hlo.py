@@ -1,0 +1,123 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+``compiled.cost_analysis()`` does not report collective traffic, so we
+parse the post-SPMD-partitioning HLO (``compiled.as_text()``) and sum the
+result-shape bytes of every collective op, with per-op ring-algorithm
+wire factors derived from that op's own ``replica_groups`` size N:
+
+    all-reduce         2 (N-1)/N x size     (reduce-scatter + all-gather)
+    all-gather           (N-1)/N x size     (size = gathered output)
+    reduce-scatter       (N-1)   x size     (input ~= output x N)
+    all-to-all           (N-1)/N x size
+    collective-permute   1       x size
+
+Group sizes come from ``replica_groups={{0,1,..},..}`` (explicit) or the
+iota form ``replica_groups=[G,N]<=[...]`` (G groups of N).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["CollectiveStats", "collective_stats", "shape_bytes"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_DONE_RE = re.compile(
+    r"=\s*.*?\s(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)-done\("
+)
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(type_str: str) -> float:
+    """Bytes of an HLO result type (handles tuples)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [G, N] <= [...]: G groups of N
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return default
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    if n <= 1 and kind != "collective-permute":
+        return 0.0  # single-participant collective moves nothing
+    ring = (n - 1) / n
+    return {
+        "all-reduce": 2 * ring,
+        "all-gather": ring,
+        "reduce-scatter": ring * n,  # input bytes ~= output x N
+        "all-to-all": ring,
+        "collective-permute": 1.0,
+    }[kind]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_kind_bytes: dict  # raw result bytes per kind
+    by_kind_count: dict
+    by_kind_wire: dict  # ring-adjusted wire bytes per kind
+    wire_bytes: float  # total per-chip wire traffic
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.by_kind_bytes.values()))
+
+
+def collective_stats(hlo_text: str, n_participants: int = 0) -> CollectiveStats:
+    """Sum collective bytes over a partitioned HLO module.
+
+    ``n_participants``: fallback ring size when an op line has no
+    parseable replica_groups (0 disables the wire adjustment for it).
+    """
+    by_bytes: dict = defaultdict(float)
+    by_count: dict = defaultdict(int)
+    by_wire: dict = defaultdict(float)
+    for line in hlo_text.splitlines():
+        if _DONE_RE.search(line):
+            continue  # async pair: count the -start only
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        b = shape_bytes(type_str)
+        n = _group_size(line, n_participants)
+        by_bytes[kind] += b
+        by_count[kind] += 1
+        by_wire[kind] += b * (_wire_factor(kind, n) if n else 1.0)
+    return CollectiveStats(
+        by_kind_bytes=dict(by_bytes),
+        by_kind_count=dict(by_count),
+        by_kind_wire=dict(by_wire),
+        wire_bytes=float(sum(by_wire.values())),
+    )

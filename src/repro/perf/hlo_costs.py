@@ -1,0 +1,473 @@
+"""Trip-count-aware cost extraction from partitioned HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop (lax.scan) body ONCE,
+so for layer-scanned models it under-reports FLOPs/bytes/collectives by a
+factor of n_layers (validated in tests/test_hlo_costs.py).  This module
+re-derives the three roofline inputs from ``compiled.as_text()`` with loop
+multiplicity:
+
+  * the module is split into named computations;
+  * a call graph is built (fusion ``calls=``, while ``body=/condition=``,
+    ``to_apply=``, conditional branches);
+  * while trip counts are read from the loop condition's
+    ``constant(N)`` + ``compare direction=LT`` pattern (jax scans lower to
+    0..N step 1); data-dependent loops fall back to 1 and are flagged;
+  * per instruction:
+      flops — dot: 2 * |result| * prod(contracting dims); elementwise /
+              reduce ops inside fusions: |result| (XLA's convention);
+      bytes — operands + result for HBM-touching ops (fusion internals
+              excluded: fused values never round-trip HBM);
+      wire  — collective result bytes x ring factor for that op's
+              replica_groups (see .hlo).
+
+Everything is per-device (the module is the post-SPMD per-device program).
+
+Bytes mode: the module text comes from the XLA:CPU pipeline, which fuses
+far less than the TPU pipeline — raw per-op bytes would over-charge the
+memory term ~10x.  With ``assume_fused_elementwise=True`` (default) bytes
+are charged only at HBM-forced boundaries: dot operands/results, fusion
+boundaries, gathers/scatters/dynamic-slices, copies/converts/transposes,
+concatenates, collectives, and custom calls — approximating what the TPU
+pipeline keeps in VMEM/registers.  Raw mode is kept for reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from functools import lru_cache
+
+from .hlo import _group_size, _wire_factor, shape_bytes
+
+__all__ = ["ModuleCosts", "module_costs", "f32_promotion_bytes"]
+
+# ops that do arithmetic: 1 flop per output element (XLA convention-ish)
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "tanh", "logistic", "rsqrt", "sqrt", "negate",
+    "abs", "cosine", "sine", "expm1", "log1p", "atan2", "remainder",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "exponential-minus-one", "cbrt", "erf",
+}
+_ZERO_BYTES_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "iota", "reshape", "after-all", "partition-id", "replica-id",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops that vanish entirely inside a TPU fusion
+_FUSION_TRIVIAL = _ELEMENTWISE | _ZERO_BYTES_OPS | {
+    "select", "compare", "clamp", "broadcast", "copy", "convert", "slice",
+    "pad", "transpose", "reverse", "concatenate", "dynamic-slice",
+}
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list
+    line: str
+
+
+def _match_paren(s: str, start: int) -> int:
+    """Index just past the paren group opening at s[start] == '('."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR_START_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLED_RE = re.compile(
+    r"(?:calls|body|condition|to_apply|branch_computations)=\{?%?([\w.\-,% ]+)\}?"
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _parse_instr(line: str) -> Instr | None:
+    m = _INSTR_START_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    # type: either a tuple "(...)" or "dtype[dims]{layout}"
+    if rest.startswith("("):
+        end = _match_paren(rest, 0)
+        type_str = rest[:end]
+        rest = rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        rest = rest[sp + 1:]
+    om = re.match(r"([\w\-]+)\(", rest)
+    if not om:
+        return None
+    op = om.group(1)
+    close = _match_paren(rest, om.end() - 1)
+    operand_str = rest[om.end():close - 1]
+    operands = _OPERAND_RE.findall(operand_str)
+    return Instr(name=name, type_str=type_str, op=op, operands=operands,
+                 line=line)
+
+
+def _split_computations(txt: str) -> dict:
+    comps: dict = {}
+    cur = None
+    body: list = []
+    for line in txt.splitlines():
+        if cur is None:
+            if line.rstrip().endswith("{") and ("->" in line):
+                m = _HEADER_RE.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    body = []
+            continue
+        if line.startswith("}"):
+            comps[cur] = body
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins:
+            body.append(ins)
+    return comps
+
+
+def _dot_flops(ins: Instr, shapes: dict) -> float:
+    out_elems = _elems(ins.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    if not m or not ins.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs_shape = shapes.get(ins.operands[0])
+    if lhs_shape is None:
+        return 2.0 * out_elems
+    contract = 1
+    dims = _dims(lhs_shape)
+    for d in m.group(1).split(","):
+        if d.strip():
+            i = int(d)
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+_SHAPE_ONE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _dims(type_str: str) -> list:
+    m = _SHAPE_ONE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _elems(type_str: str) -> float:
+    total = 0
+    for _, dims in _SHAPE_ONE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return float(total)
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    flops: float
+    bytes: float
+    wire_by_kind: dict
+    count_by_kind: dict
+    unknown_trip_loops: int
+
+    @property
+    def wire_bytes(self) -> float:
+        return float(sum(self.wire_by_kind.values()))
+
+
+def _fusion_boundary_bytes(ins: Instr, shapes: dict, comp: list) -> float:
+    """HBM traffic at a non-trivial fusion's boundary, slice-aware.
+
+    CPU fusions often absorb the per-iteration dynamic-slice of a scanned
+    stack (weights, KV caches): the fusion *operand* is the full stack but
+    only one slice is read per call — and in-place dynamic-update-slice
+    roots alias their target.  A TPU (or any sane runtime with donation)
+    touches only the slice, so:
+      * a fusion parameter consumed ONLY by dynamic-slice/gather ops is
+        charged those ops' result sizes, not the full operand;
+      * a parameter that is only the in-place target (operand 0) of a
+        dynamic-update-slice is charged 0 (aliased);
+      * a fusion whose computation updates via DUS is charged the update
+        sizes on the result side instead of the full result.
+    """
+    params: dict = {}
+    for i2 in comp:
+        if i2.op == "parameter":
+            m = re.search(r"parameter\((\d+)\)", i2.line)
+            if m:
+                params[i2.name] = int(m.group(1))
+    consumers: dict = defaultdict(list)
+    for i2 in comp:
+        for o in i2.operands:
+            consumers[o].append(i2)
+    inner_shapes = {i2.name: i2.type_str for i2 in comp}
+
+    _PASSTHROUGH = ("convert", "bitcast", "copy", "reshape")
+
+    def effective_consumers(name, depth=0):
+        """Consumers of ``name``, looking through dtype/layout passthroughs
+        (XLA:CPU interposes a convert between a bf16 stack param and its
+        per-iteration dynamic-slice; TPU reads the slice directly)."""
+        out = []
+        if depth > 4:
+            return out
+        for c2 in consumers.get(name, []):
+            if c2.op in _PASSTHROUGH:
+                out.extend(effective_consumers(c2.name, depth + 1))
+            else:
+                out.append(c2)
+        return out
+
+    charges: dict = {}
+    for pname, pidx in params.items():
+        full = (shape_bytes(shapes.get(ins.operands[pidx], ""))
+                if pidx < len(ins.operands) else 0.0)
+        cons = effective_consumers(pname)
+        if cons and all(
+            c.op in ("dynamic-slice", "gather", "dynamic-update-slice")
+            for c in cons
+        ):
+            # read-slices charge their result; in-place DUS targets alias
+            charges[pname] = sum(shape_bytes(c.type_str) for c in cons
+                                 if c.op in ("dynamic-slice", "gather"))
+        else:
+            charges[pname] = full
+    result_bytes = shape_bytes(ins.type_str)
+    dus = [i2 for i2 in comp if i2.op == "dynamic-update-slice"]
+    if dus:
+        result_bytes = sum(shape_bytes(inner_shapes.get(d.operands[1], ""))
+                           for d in dus if len(d.operands) > 1)
+    else:
+        # masked in-place update: scan-output stacking lowers on CPU to
+        # select(iota == i, update, old_stack) over the FULL stack.  TPU
+        # writes it as an in-place DUS.  Detect: a param with result-equal
+        # dims + a select in the computation => alias that param, charge
+        # the result as the largest remaining (update-sized) param.
+        has_select = any(i2.op == "select" for i2 in comp)
+        if has_select:
+            rdims = _dims(ins.type_str)
+            alias = next(
+                (pn for pn, pi in params.items()
+                 if pi < len(ins.operands)
+                 and _dims(shapes.get(ins.operands[pi], "")) == rdims),
+                None)
+            if alias is not None:
+                charges[alias] = 0.0
+                others = [v for pn, v in charges.items() if pn != alias]
+                result_bytes = max(others) if others else 0.0
+    return sum(charges.values()) + result_bytes
+
+
+def f32_promotion_bytes(txt: str) -> float:
+    """Bytes of loop-hoisted bf16->f32 promotions of entry parameters.
+
+    XLA:CPU's float-support pass cannot execute bf16 dots natively, so it
+    converts bf16 operands to f32 and hoists the conversion of loop-
+    invariant weights / KV caches OUT of the layer scan — materializing an
+    f32 copy of the whole parameter in HBM.  A real TPU executes bf16 dots
+    on the MXU with f32 accumulation in registers; these copies do not
+    exist there.  We detect them (entry-level convert/copy/trivial-fusion
+    whose single operand is a bf16 parameter/GTE of identical dims with an
+    f32 result) and report their total so the dry-run can publish a
+    TPU-projected HBM figure alongside the raw XLA:CPU one.
+    """
+    comps = _split_computations(txt)
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", txt, re.M)
+    if not m or m.group(1) not in comps:
+        return 0.0
+    entry = comps[m.group(1)]
+    shapes = {i.name: i.type_str for i in entry}
+    param_like = {i.name for i in entry
+                  if i.op in ("parameter", "get-tuple-element")}
+    total = 0.0
+    for ins in entry:
+        if ins.op not in ("convert", "copy", "fusion") or len(ins.operands) != 1:
+            continue
+        src = ins.operands[0]
+        if src not in param_like:
+            continue
+        src_t = shapes.get(src, "")
+        if not src_t.startswith("bf16") or not ins.type_str.startswith("f32"):
+            continue
+        if _dims(src_t) == _dims(ins.type_str):
+            total += shape_bytes(ins.type_str)
+    return total
+
+
+def module_costs(txt: str, assume_fused_elementwise: bool = True) -> ModuleCosts:
+    comps = _split_computations(txt)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", txt, re.M)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: largest computation
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else None
+    unknown = [0]
+
+    def trip_count(cond_name: str) -> float:
+        consts = []
+        for ins in comps.get(cond_name, []):
+            consts += [int(c) for c in _CONST_RE.findall(ins.line)
+                       if ins.op == "constant" or "compare" in ins.line]
+        if consts:
+            return float(max(consts))
+        unknown[0] += 1
+        return 1.0
+
+    memo: dict = {}
+
+    def cost_of(name: str, inside_fusion: bool):
+        key = (name, inside_fusion)
+        if key in memo:
+            return memo[key]
+        flops = 0.0
+        byts = 0.0
+        wire: dict = defaultdict(float)
+        counts: dict = defaultdict(float)
+        shapes = {i.name: i.type_str for i in comps.get(name, [])}
+        for ins in comps.get(name, []):
+            op = ins.op
+            # --- control flow ---------------------------------------------
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                trips = trip_count(cm.group(1)) if cm else 1.0
+                if bm:
+                    f, b, w, c = cost_of(bm.group(1), False)
+                    flops += f * trips
+                    byts += b * trips
+                    for k, v in w.items():
+                        wire[k] += v * trips
+                    for k, v in c.items():
+                        counts[k] += v * trips
+                continue
+            if op in ("call", "fusion", "conditional", "custom-call",
+                      "async-start"):
+                cm = _CALLED_RE.search(ins.line)
+                if op == "fusion" and cm:
+                    sub_name = cm.group(1).split(",")[0].strip(" %")
+                    f, _b, w, c = cost_of(sub_name, True)
+                    flops += f
+                    for k, v in w.items():
+                        wire[k] += v
+                    for k, v in c.items():
+                        counts[k] += v
+                    # fusion touches HBM only at its boundary; a purely
+                    # elementwise fusion (the XLA:CPU "wrapped_*" pattern)
+                    # would fold into its producer/consumer on TPU — charge
+                    # its result once (write), not its operands.
+                    trivial = assume_fused_elementwise and all(
+                        i.op in _FUSION_TRIVIAL for i in comps.get(sub_name, [])
+                    )
+                    if trivial:
+                        byts += shape_bytes(ins.type_str)
+                    else:
+                        byts += _fusion_boundary_bytes(
+                            ins, shapes, comps.get(sub_name, []))
+                    continue
+                if op in ("call", "conditional") and cm:
+                    for sub in cm.group(1).split(","):
+                        f, b, w, c = cost_of(sub.strip(" %"), inside_fusion)
+                        flops += f
+                        byts += b
+                        for k, v in w.items():
+                            wire[k] += v
+                        for k, v in c.items():
+                            counts[k] += v
+                    continue
+                # custom-call / async: bytes at boundary
+                byts += shape_bytes(ins.type_str) + sum(
+                    shape_bytes(shapes.get(o, "")) for o in ins.operands)
+                continue
+            # --- collectives -----------------------------------------------
+            kind = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+            if kind is not None:
+                if op.endswith("-done"):
+                    continue
+                b = shape_bytes(ins.type_str)
+                n = _group_size(ins.line, 0)
+                wire[kind] += b * (_wire_factor(kind, n) if n else 1.0)
+                counts[kind] += 1
+                byts += b
+                continue
+            # --- arithmetic / data movement --------------------------------
+            if op == "dot":
+                flops += _dot_flops(ins, shapes)
+                byts += shape_bytes(ins.type_str) + sum(
+                    shape_bytes(shapes.get(o, "")) for o in ins.operands)
+                continue
+            if op == "convolution":
+                flops += 2.0 * _elems(ins.type_str) * 8  # coarse (unused here)
+                byts += shape_bytes(ins.type_str)
+                continue
+            if op in _ELEMENTWISE or op in ("select", "compare", "clamp"):
+                flops += _elems(ins.type_str)
+                if not inside_fusion and not assume_fused_elementwise:
+                    byts += shape_bytes(ins.type_str) + sum(
+                        shape_bytes(shapes.get(o, "")) for o in ins.operands)
+                continue
+            if op in ("reduce", "reduce-window"):
+                # approximate: one flop per input element
+                flops += sum(
+                    _elems(shapes.get(o, "")) for o in ins.operands[:1]
+                ) or _elems(ins.type_str)
+                if not inside_fusion and not assume_fused_elementwise:
+                    byts += shape_bytes(ins.type_str) + sum(
+                        shape_bytes(shapes.get(o, "")) for o in ins.operands)
+                continue
+            if op in _ZERO_BYTES_OPS:
+                continue
+            if assume_fused_elementwise and op in ("broadcast", "pad",
+                                                   "slice", "reverse",
+                                                   "convert"):
+                continue  # TPU fuses these into neighbors
+            # slicing/updating ops touch only the slice, not the operand:
+            # scan bodies stream per-layer weights via dynamic-slice and
+            # write caches via in-place (donated) dynamic-update-slice.
+            if op in ("dynamic-slice", "gather"):
+                if not inside_fusion:
+                    byts += 2.0 * shape_bytes(ins.type_str)
+                continue
+            if op == "dynamic-update-slice":
+                if not inside_fusion and len(ins.operands) >= 2:
+                    byts += 2.0 * shape_bytes(shapes.get(ins.operands[1], ""))
+                continue
+            if op == "scatter":
+                if not inside_fusion and len(ins.operands) >= 3:
+                    byts += 2.0 * shape_bytes(shapes.get(ins.operands[2], ""))
+                continue
+            # copy/transpose/concatenate/...: real data movement
+            if not inside_fusion:
+                byts += shape_bytes(ins.type_str) + sum(
+                    shape_bytes(shapes.get(o, "")) for o in ins.operands)
+        out = (flops, byts, dict(wire), dict(counts))
+        memo[key] = out
+        return out
+
+    if entry is None:
+        return ModuleCosts(0.0, 0.0, {}, {}, 0)
+    f, b, w, c = cost_of(entry, False)
+    return ModuleCosts(flops=f, bytes=b, wire_by_kind=w, count_by_kind=c,
+                       unknown_trip_loops=unknown[0])

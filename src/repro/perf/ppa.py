@@ -1,0 +1,90 @@
+"""Pressure Point Analysis harness (paper Sec. 3.3, Exps. 1-2).
+
+PPA deliberately breaks correctness to measure how much a suspected
+hardware resource limits performance.  Perturbations (see core/phi.py):
+
+  no_conflict    — keyed reduction replaced with uniform-segment sum:
+                   the "remove atomics" pressure point (Sec. 3.3.1).
+  perfect_reuse  — all gather indices clamped to row 0:
+                   the "perfect cache reuse" pressure point (Sec. 3.3.2).
+  both           — the combined upper bound (paper Figs. 5-6 teal bars).
+
+``run_ppa`` measures real wall-clock on the host CPU, mirroring the
+paper's Xeon experiments; speedups are vs. the unperturbed strategy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core.phi import phi_mode
+from repro.core.sparse_tensor import KTensor, SparseTensor, sort_mode
+
+from .timing import bench_seconds
+
+__all__ = ["PPAResult", "run_ppa", "PERTURBATIONS"]
+
+PERTURBATIONS = (None, "no_conflict", "perfect_reuse", "both")
+
+
+@dataclasses.dataclass
+class PPAResult:
+    strategy: str
+    mode: int
+    seconds: dict  # perturbation -> seconds
+    speedup: dict  # perturbation -> baseline/perturbed
+
+
+def _phi_fn(mv, factors, b, strategy, perturb):
+    if perturb == "both":
+        # compose: conflict-free write + clamped reads
+        def f():
+            return phi_mode(mv, factors, b, strategy=strategy, perturb="no_conflict")
+
+        # 'both' is approximated by applying perfect_reuse to reads and
+        # no_conflict to the reduce; phi_mode handles one at a time, so we
+        # inline the combination here.
+        from repro.core.phi import phi_from_rows
+        from repro.core.pi import pi_rows
+
+        def f_both():
+            idx = mv.sorted_idx * 0
+            pi = pi_rows(idx, factors, mv.mode)
+            return phi_from_rows(
+                mv.rows * 0,
+                mv.sorted_vals,
+                pi,
+                b,
+                n_rows=mv.n_rows,
+                strategy=strategy,
+                perturb="no_conflict",
+            )
+
+        return f_both
+
+    def f():
+        return phi_mode(mv, factors, b, strategy=strategy, perturb=perturb)
+
+    return f
+
+
+def run_ppa(
+    t: SparseTensor,
+    kt: KTensor,
+    mode: int = 0,
+    strategy: str = "segment",
+    perturbations: Sequence = PERTURBATIONS,
+    iters: int = 5,
+) -> PPAResult:
+    mv = sort_mode(t, mode)
+    b = kt.factors[mode] * kt.lam[None, :]
+    secs = {}
+    for p in perturbations:
+        fn = _phi_fn(mv, kt.factors, b, strategy, p)
+        secs[str(p)] = bench_seconds(fn, iters=iters)
+    base = secs["None"]
+    speedup = {k: base / v if v > 0 else float("inf") for k, v in secs.items()}
+    return PPAResult(strategy=strategy, mode=mode, seconds=secs, speedup=speedup)

@@ -1,0 +1,145 @@
+"""Roofline model (paper Sec. 3.2, Eqs. 1-8) + the 3-term pod roofline.
+
+Two uses:
+  1. Paper-faithful: operational intensity of the Phi kernel (Eqs. 3-8)
+     against a hardware balance line (Figs. 3-4).
+  2. Framework-wide: for every (arch x shape x mesh) dry-run we derive
+         compute term    = HLO_FLOPs   / (chips * peak_FLOPs)
+         memory term     = HLO_bytes   / (chips * HBM_bw)
+         collective term = coll_bytes  / (chips * link_bw)
+     from the compiled artifact (cost_analysis + HLO parse).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = [
+    "HardwareSpec",
+    "HARDWARE",
+    "attainable_gflops",
+    "operational_intensity_phi",
+    "RooflineTerms",
+    "roofline_terms",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float  # FLOP/s per chip (bf16 for TPU; f64-ish for paper CPUs)
+    hbm_bw: float  # bytes/s per chip
+    link_bw: float = 0.0  # bytes/s per ICI link (0 = single device)
+    vmem_bytes: int = 0
+
+    @property
+    def balance(self) -> float:
+        """FLOP/byte at the roofline knee."""
+        return self.peak_flops / self.hbm_bw
+
+
+HARDWARE = {
+    # Target chip for all TPU-derived numbers in EXPERIMENTS.md:
+    "tpu_v5e": HardwareSpec(
+        "TPU v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
+        vmem_bytes=128 * 2**20,
+    ),
+    # The paper's two systems (Sec. 3.2), for reproducing Figs. 3-4:
+    "e5_2690v4_dual": HardwareSpec(
+        "dual Intel E5-2690v4", peak_flops=1164.8e9, hbm_bw=153.6e9
+    ),
+    "k80": HardwareSpec("NVIDIA Tesla K80", peak_flops=2910e9, hbm_bw=480e9),
+    # The container host (1 core); bandwidth measured by bench_stream.
+    "host_cpu": HardwareSpec("host XLA:CPU (1 core)", peak_flops=50e9, hbm_bw=20e9),
+}
+
+
+def attainable_gflops(intensity: float, hw: HardwareSpec) -> float:
+    """P = min(pi, beta * I)   (paper Eq. 2), in GFLOP/s."""
+    return min(hw.peak_flops, hw.hbm_bw * intensity) / 1e9
+
+
+# The intensities the paper *states* (Eq. 5 / Eq. 8, FLOP/byte).  Note:
+# evaluating the paper's own Eqs. 3-4 / 6-7 literally gives W/Q ~ 0.80 / 0.67
+# FLOP/word (= 0.10 / 0.084 FLOP/byte with the paper's 8-byte words) — the
+# stated 0.125 / 0.27 don't follow from the formulas, but they are what the
+# paper's headline bounds derive from (480 GB/s x 0.125 = 60 GFLOP/s K80;
+# 153.6 GB/s x 0.27 = 41.5 GFLOP/s Xeon).  We report both.
+PAPER_STATED_INTENSITY = {"gpu": 0.125, "cpu": 0.27}  # FLOP/byte
+
+
+def operational_intensity_phi(
+    rank: int, variant: str = "gpu", v: int = 32, word_bytes: int = 8
+) -> float:
+    """Operational intensity of Phi^(n) from the paper's Eqs. 3-4 / 6-7,
+    evaluated literally, in FLOP/byte (paper words are 8-byte doubles)."""
+    from repro.core.phi import phi_flops_words
+
+    w, q = phi_flops_words(10**6, rank, variant=variant, v=v)
+    return (w / q) / word_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """Three-term roofline for one (arch x shape x mesh) cell."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float  # global (all chips)
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float  # 6*N*D (dense) or 6*N_active*D (MoE); 0 if n/a
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU implied by the three terms."""
+        if not self.model_flops or not self.bound_s:
+            return 0.0
+        return self.model_flops / (self.bound_s * self.n_chips) / _PEAK_CACHE
+
+
+_PEAK_CACHE = HARDWARE["tpu_v5e"].peak_flops
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    n_chips: int,
+    hw: HardwareSpec = HARDWARE["tpu_v5e"],
+    model_flops: float = 0.0,
+) -> RooflineTerms:
+    """Build the 3-term roofline.  ``hlo_flops``/``hlo_bytes`` are GLOBAL
+    (sum over chips); ``collective_bytes`` is the per-chip wire traffic
+    (sum of collective operand bytes in the per-device partitioned module).
+    """
+    return RooflineTerms(
+        compute_s=hlo_flops / (n_chips * hw.peak_flops),
+        memory_s=hlo_bytes / (n_chips * hw.hbm_bw),
+        collective_s=(collective_bytes / hw.link_bw) if hw.link_bw else 0.0,
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes,
+        model_flops=model_flops,
+        n_chips=n_chips,
+    )

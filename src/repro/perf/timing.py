@@ -1,0 +1,35 @@
+"""Wall-clock measurement harness (host XLA:CPU).
+
+The paper averages 5 runs per experiment (Sec. 4); we report the median
+of ``iters`` timed calls after ``warmup`` untimed ones, with
+``block_until_ready`` fencing.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+__all__ = ["bench_seconds", "bandwidth_gbs"]
+
+
+def bench_seconds(
+    fn: Callable, *args, warmup: int = 2, iters: int = 5, **kwargs
+) -> float:
+    """Median seconds per call of a JAX function (fenced)."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def bandwidth_gbs(bytes_moved: float, seconds: float) -> float:
+    return bytes_moved / seconds / 1e9 if seconds > 0 else 0.0

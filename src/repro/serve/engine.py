@@ -1,0 +1,75 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+One engine per (model, params).  Requests are token prompts of equal
+padded length; the engine prefixes them in one prefill call and then
+decodes step-by-step with the per-family cache (KV ring / SSM state /
+RG-LRU state), jitted end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 = greedy
+    eos_id: int | None = None
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(self._decode_impl)
+
+    def _sample(self, logits, key):
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def _decode_impl(self, caches, first_tokens, key):
+        n = self.cfg.max_new_tokens
+
+        def body(carry, _):
+            caches, tok, key, done = carry
+            key, sub = jax.random.split(key)
+            logits, caches = self.model.decode_step(self.params, caches, tok)
+            nxt = self._sample(logits, sub)[:, None]
+            if self.cfg.eos_id is not None:
+                done = done | (nxt[:, 0] == self.cfg.eos_id)
+                nxt = jnp.where(done[:, None], nxt * 0 + self.cfg.eos_id, nxt)
+            return (caches, nxt, key, done), nxt[:, 0]
+
+        b = first_tokens.shape[0]
+        done0 = jnp.zeros((b,), bool)
+        (caches, _, _, _), toks = jax.lax.scan(
+            body, (caches, first_tokens, key, done0), None, length=n)
+        return jnp.moveaxis(toks, 0, 1), caches  # (B, n)
+
+    def generate(self, batch: dict, key=None) -> jax.Array:
+        """batch: prompt batch (see Model.input_specs with kind='prefill').
+
+        Returns generated tokens (B, max_new_tokens).
+        """
+        key = key if key is not None else jax.random.PRNGKey(0)
+        prompt_len = batch["tokens"].shape[1]
+        npatch = batch.get("patches", None)
+        extra = npatch.shape[1] if npatch is not None else 0
+        logits, caches = self.model.prefill(
+            self.params, batch,
+            cache_len=prompt_len + extra + self.cfg.max_new_tokens)
+        key, sub = jax.random.split(key)
+        first = self._sample(logits, sub)[:, None]
+        out, _ = self._decode(caches, first, key)
+        return jnp.concatenate([first, out[:, :-1]], axis=1)

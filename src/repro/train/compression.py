@@ -1,0 +1,74 @@
+"""Error-feedback gradient compression (bf16 / int8) for the DP reduction.
+
+At pod scale the data-parallel gradient all-reduce is the largest
+recurring collective.  Compressing it with *error feedback* (Seide et al.
+2014; Karimireddy et al. 2019) keeps convergence while cutting wire bytes
+2-4x:
+
+    e      <- residual + g          # fold in the carried error
+    q      <- Q(e)                  # bf16 round or int8 per-tensor scale
+    resid' <- e - DQ(q)             # carry the quantization error
+    update uses DQ(q)
+
+Honesty note (DESIGN.md Sec. 8): under ``jit`` the all-reduce is inserted
+by XLA SPMD, which does not expose a "reduce in int8" hook — so this
+module is *value-faithful* (the optimizer consumes exactly what a
+compressed wire would deliver, error feedback included) while the dry-run
+accounts wire bytes at the compressed width via
+``CollectiveStats``/roofline (the collective term is scaled by
+``wire_fraction``).  On hardware the same transform would wrap a
+``shard_map`` psum over the quantized payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionConfig", "init_residual", "compress_grads", "wire_fraction"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"  # none | bf16 | int8
+
+
+def init_residual(params, cfg: CompressionConfig):
+    if cfg.kind == "none":
+        return None
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q_bf16(x):
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _q_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, residual, cfg: CompressionConfig):
+    """Returns (decompressed_grads, new_residual)."""
+    if cfg.kind == "none":
+        return grads, residual
+    quant = {"bf16": _q_bf16, "int8": _q_int8}[cfg.kind]
+
+    def leaf(g, r):
+        e = g.astype(jnp.float32) + r
+        dq = quant(e)
+        return dq, e - dq
+
+    out = jax.tree.map(leaf, grads, residual)
+    is_pair = lambda x: isinstance(x, tuple)
+    dq = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+    new_r = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+    return dq, new_r
+
+
+def wire_fraction(cfg: CompressionConfig) -> float:
+    """Wire-byte fraction vs f32 gradients (for the roofline collective term)."""
+    return {"none": 1.0, "bf16": 0.5, "int8": 0.25}[cfg.kind]

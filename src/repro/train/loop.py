@@ -1,0 +1,114 @@
+"""Fault-tolerant training loop.
+
+Production behaviors, all exercised by tests/examples at smoke scale:
+
+  * checkpoint every ``ckpt_every`` steps (atomic, rolling window) and on
+    SIGTERM/SIGINT (preemption-safe);
+  * resume from the latest checkpoint — data pipeline is stateless in
+    ``step`` so replay is exact;
+  * elastic re-mesh: restore() re-places leaves under the current mesh's
+    shardings, so a job can come back on a different device count;
+  * straggler watchdog: per-step wall time is tracked against a rolling
+    median; steps slower than ``straggler_factor``x are logged as events
+    (at pod scale this signal feeds the re-scheduling controller — here it
+    is surfaced in metrics and tested with an injected delay).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from .checkpoint import Checkpointer
+
+__all__ = ["TrainLoopConfig", "TrainLoop"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    straggler_window: int = 20
+
+
+class TrainLoop:
+    def __init__(self, train_step: Callable, make_batch: Callable,
+                 cfg: TrainLoopConfig, state_shardings=None):
+        self.train_step = train_step
+        self.make_batch = make_batch
+        self.cfg = cfg
+        self.ckpt = Checkpointer(cfg.ckpt_dir, keep=cfg.keep)
+        self.state_shardings = state_shardings
+        self.step_times: list = []
+        self.straggler_events: list = []
+        self.history: list = []
+        self._stop = False
+
+    # -- fault-tolerance plumbing -------------------------------------------
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._stop = True  # finish the current step, checkpoint, exit
+
+        self._old = {
+            s: signal.signal(s, handler) for s in (signal.SIGTERM, signal.SIGINT)
+        }
+
+    def _restore_signal_handlers(self):
+        for s, h in getattr(self, "_old", {}).items():
+            signal.signal(s, h)
+
+    def resume_or_init(self, init_state_fn: Callable):
+        """Return (state, start_step): restored if a checkpoint exists."""
+        last = self.ckpt.latest_step()
+        if last is None:
+            return init_state_fn(), 0
+        target = jax.eval_shape(init_state_fn)
+        state, step = self.ckpt.restore(target, shardings=self.state_shardings)
+        return state, step
+
+    # -- straggler watchdog ---------------------------------------------------
+    def _watch(self, step: int, dt: float):
+        w = self.cfg.straggler_window
+        if len(self.step_times) >= 5:
+            med = float(np.median(self.step_times[-w:]))
+            if dt > self.cfg.straggler_factor * med:
+                self.straggler_events.append(
+                    {"step": step, "seconds": dt, "median": med}
+                )
+        self.step_times.append(dt)
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, state, start_step: int = 0, on_metrics: Callable | None = None):
+        self._install_signal_handlers()
+        step = start_step
+        try:
+            while step < self.cfg.total_steps and not self._stop:
+                batch = self.make_batch(step)
+                t0 = time.perf_counter()
+                state, metrics = self.train_step(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                step += 1
+                self._watch(step, dt)
+                rec = {"step": step, "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "seconds": dt}
+                self.history.append(rec)
+                if on_metrics:
+                    on_metrics(rec)
+                if step % self.cfg.ckpt_every == 0:
+                    self.ckpt.save(step, state, extra={"wall": time.time()})
+            # final / preemption checkpoint
+            self.ckpt.save(step, state, extra={"wall": time.time(),
+                                               "preempted": self._stop})
+        finally:
+            self._restore_signal_handlers()
+        return state, step

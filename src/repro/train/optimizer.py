@@ -1,0 +1,204 @@
+"""Sharded optimizers: AdamW and Adafactor (for the 235B/400B MoE configs).
+
+Functional, optax-shaped but self-contained (optax is not installed):
+
+    opt = make_optimizer(cfg)        # from ArchConfig.optimizer
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Optimizer-state sharding is derived from the *ParamSpec* tree so the
+dry-run can lower the full train step with every state leaf placed:
+
+  * adamw: m, v shaped/sharded exactly like the parameter (f32).
+  * adafactor: factored second moment — v_row drops the last dim's axis,
+    v_col drops the second-to-last; <2-D params keep a full v.  This is the
+    standard memory trick that makes 400B-param states fit the pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec, spec_for_axes
+
+__all__ = [
+    "Optimizer",
+    "make_optimizer",
+    "adamw",
+    "adafactor",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+    "opt_state_specs",
+]
+
+
+class Optimizer(NamedTuple):
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params,
+        updates,
+    )
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mh = m2 / bc1
+            vh = v2 / bc2
+            u = -lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32))
+            return u, m2, v2
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {
+                    "v_row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "v_col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(leaf, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)  # increasing decay schedule
+
+        def upd(g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "v_row" in s:
+                v_row = beta * s["v_row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                v_col = beta * s["v_col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                row_mean = jnp.mean(v_row, axis=-1, keepdims=True)
+                r = (v_row / jnp.maximum(row_mean, eps))[..., None]
+                c = v_col[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(r * c, eps))
+                ns = {"v_row": v_row, "v_col": v_col}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                ns = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr * u, ns
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["v"])
+        outs = [upd(g, s) for g, s in zip(flat_g, flat_s)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        new_v = tdef.unflatten([o[1] for o in outs])
+        return updates, {"step": step, "v": new_v}
+
+    return Optimizer("adafactor", init, update)
+
+
+def make_optimizer(name: str, lr: float = 3e-4, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr=lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Abstract state (for AOT lowering + sharding)
+# ---------------------------------------------------------------------------
+
+
+def opt_state_specs(name: str, param_specs_tree):
+    """ParamSpec tree for the optimizer state (drives dry-run shardings)."""
+    is_spec = lambda x: isinstance(x, ParamSpec)
+
+    def like(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.axes, dtype=jnp.float32, init="zeros")
+
+    step = ParamSpec((), (), dtype=jnp.int32, init="zeros")
+    if name == "adamw":
+        return {
+            "step": step,
+            "m": jax.tree.map(like, param_specs_tree, is_leaf=is_spec),
+            "v": jax.tree.map(like, param_specs_tree, is_leaf=is_spec),
+        }
+    if name == "adafactor":
+        def leaf(s: ParamSpec):
+            if _factored(s.shape):
+                return {
+                    "v_row": ParamSpec(s.shape[:-1], s.axes[:-1],
+                                       dtype=jnp.float32, init="zeros"),
+                    "v_col": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                       s.axes[:-2] + s.axes[-1:],
+                                       dtype=jnp.float32, init="zeros"),
+                }
+            return {"v": ParamSpec(s.shape, s.axes, dtype=jnp.float32,
+                                   init="zeros")}
+
+        return {"step": step,
+                "v": jax.tree.map(leaf, param_specs_tree, is_leaf=is_spec)}
+    raise ValueError(name)

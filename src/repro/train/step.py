@@ -1,0 +1,129 @@
+"""Train/serve step builders, shared by the training loop and the dry-run.
+
+``make_train_step`` assembles the full pod-scale step:
+  microbatched grad accumulation (lax.scan, f32 accumulators)
+  -> global-norm clip -> optional error-feedback grad compression
+  -> optimizer update.
+
+State is a plain dict {"params", "opt", ["resid"]} so ``state_specs``
+can hand the dry-run a ParamSpec tree covering *every* leaf the compiled
+step touches (in_shardings == out_shardings => donation-safe).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.models.params import ParamSpec
+
+from .compression import CompressionConfig, compress_grads, init_residual
+from .optimizer import (
+    Optimizer,
+    apply_updates,
+    clip_by_global_norm,
+    opt_state_specs,
+)
+
+__all__ = ["make_train_step", "make_serve_step", "make_prefill", "state_specs",
+           "init_state"]
+
+
+def state_specs(model: Model, optimizer: Optimizer,
+                compression: CompressionConfig | None = None) -> dict:
+    p_specs = model.param_specs()
+    out = {"params": p_specs, "opt": opt_state_specs(optimizer.name, p_specs)}
+    if compression and compression.kind != "none":
+        is_spec = lambda x: isinstance(x, ParamSpec)
+        out["resid"] = jax.tree.map(
+            lambda s: ParamSpec(s.shape, s.axes, dtype=jnp.float32, init="zeros"),
+            p_specs, is_leaf=is_spec)
+    return out
+
+
+def init_state(model: Model, optimizer: Optimizer, key,
+               compression: CompressionConfig | None = None) -> dict:
+    params = model.init(key)
+    state = {"params": params, "opt": optimizer.init(params)}
+    if compression and compression.kind != "none":
+        state["resid"] = init_residual(params, compression)
+    return state
+
+
+def _split_microbatches(batch: dict, n_mb: int) -> dict:
+    def f(x):
+        b = x.shape[0]
+        assert b % n_mb == 0, f"batch {b} % microbatches {n_mb} != 0"
+        return x.reshape(n_mb, b // n_mb, *x.shape[1:])
+
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    n_microbatches: int | None = None,
+                    clip_norm: float = 1.0,
+                    compression: CompressionConfig | None = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    n_mb = n_microbatches or model.cfg.n_microbatches
+    comp = compression or CompressionConfig("none")
+    acc_dt = jnp.bfloat16 if model.cfg.grad_accum_dtype == "bfloat16"         else jnp.float32
+
+    def grads_of(params, batch):
+        if n_mb == 1:
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            return loss, jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        mbs = _split_microbatches(batch, n_mb)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(acc_dt), g_acc, grads)
+            return (loss_acc + loss, g_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        (loss_sum, g_sum), _ = jax.lax.scan(
+            body, (jnp.float32(0), zeros), mbs)
+        inv = 1.0 / n_mb
+        return loss_sum * inv, jax.tree.map(
+            lambda g: g.astype(jnp.float32) * inv, g_sum)
+
+    def train_step(state, batch):
+        params = state["params"]
+        loss, grads = grads_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_state = {}
+        if comp.kind != "none":
+            grads, new_state["resid"] = compress_grads(
+                grads, state["resid"], comp)
+        updates, new_opt = optimizer.update(grads, state["opt"], params)
+        new_state["params"] = apply_updates(params, updates)
+        new_state["opt"] = new_opt
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": new_opt["step"]}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model):
+    """decode: (params, caches, tokens (B,1)) -> (next_tokens (B,1), caches)."""
+
+    def serve_step(params, caches, tokens):
+        logits, caches = model.decode_step(params, caches, tokens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, caches
+
+    return serve_step
+
+
+def make_prefill(model: Model):
+    def prefill(params, batch):
+        logits, caches = model.prefill(params, batch)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, caches
+
+    return prefill

@@ -1,0 +1,22 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests see 1 device;
+only tests/test_distributed.py (its own process via pytest-forked? no —
+it uses the devices it finds) and the dry-run set device counts."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.sparse_tensor import random_poisson_tensor
+
+
+@pytest.fixture(scope="session")
+def small_tensor():
+    t, kt = random_poisson_tensor(jax.random.PRNGKey(0), (40, 30, 25),
+                                  nnz=1500, rank=4)
+    return t, kt
+
+
+@pytest.fixture(scope="session")
+def tensor4d():
+    t, kt = random_poisson_tensor(jax.random.PRNGKey(1), (30, 12, 20, 9),
+                                  nnz=1200, rank=3)
+    return t, kt

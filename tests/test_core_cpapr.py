@@ -1,0 +1,128 @@
+"""CP-APR MU correctness: strategy equivalence + algorithm invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CPAPRConfig,
+    KTensor,
+    cpapr_mu,
+    cp_als,
+    dense_from_coo,
+    kkt_violation,
+    ktensor_full,
+    mttkrp,
+    phi_mode,
+    poisson_loglik,
+    random_poisson_tensor,
+    sort_mode,
+)
+from repro.core.phi import PHI_STRATEGIES
+
+
+@pytest.mark.parametrize("strategy", ["segment", "blocked", "pallas"])
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_phi_strategies_match_scatter(small_tensor, strategy, mode):
+    t, kt = small_tensor
+    mv = sort_mode(t, mode)
+    b = kt.factors[mode] * kt.lam[None, :]
+    ref = phi_mode(mv, kt.factors, b, strategy="scatter")
+    out = phi_mode(mv, kt.factors, b, strategy=strategy)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=1e-5)
+
+
+def test_phi_matches_dense_oracle(small_tensor):
+    """Phi = (X_(n) / max(B Pi, eps)) Pi^T computed densely (paper Alg. 2)."""
+    t, kt = small_tensor
+    n = 0
+    dense = np.asarray(dense_from_coo(t))
+    x_n = dense.reshape(t.shape[0], -1)  # mode-0 matricization (C order)
+    # Pi rows: khatri-rao of factors 1..N-1 in C-order linearization
+    b_mat = np.asarray(kt.factors[0] * kt.lam[None, :], np.float64)
+    f1 = np.asarray(kt.factors[1], np.float64)
+    f2 = np.asarray(kt.factors[2], np.float64)
+    pi = (f1[:, None, :] * f2[None, :, :]).reshape(-1, kt.rank)  # (I1*I2, R)
+    m = np.maximum(b_mat @ pi.T, 1e-10)
+    phi_dense = (x_n / m) @ pi
+    # sparse path: division only applied where x is nonzero; zero entries of
+    # x contribute x/m = 0, so the dense oracle matches exactly.
+    mv = sort_mode(t, n)
+    out = phi_mode(mv, kt.factors, jnp.asarray(b_mat, jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), phi_dense, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("strategy", ["segment", "blocked"])
+def test_cpapr_loglik_monotone(small_tensor, strategy):
+    """MU iterations must not decrease the Poisson log-likelihood."""
+    t, _ = small_tensor
+    res = cpapr_mu(t, rank=4,
+                   config=CPAPRConfig(rank=4, max_outer=8, strategy=strategy))
+    ll = res.loglik_history
+    assert len(ll) >= 2
+    for a, b in zip(ll, ll[1:]):
+        assert b >= a - 1e-3 * abs(a), f"loglik decreased: {a} -> {b}"
+
+
+def test_cpapr_factors_nonnegative_and_normalized(small_tensor):
+    t, _ = small_tensor
+    res = cpapr_mu(t, rank=4, config=CPAPRConfig(rank=4, max_outer=4))
+    for f in res.ktensor.factors:
+        assert float(jnp.min(f)) >= 0.0
+        colsums = np.asarray(jnp.sum(f, axis=0))
+        np.testing.assert_allclose(colsums, 1.0, atol=1e-3)
+    assert float(jnp.min(res.ktensor.lam)) >= 0.0
+
+
+def test_cpapr_kkt_improves(small_tensor):
+    """KKT violation is not monotone per sweep (inner loops truncate at
+    max_inner), but the best-so-far violation must improve."""
+    t, _ = small_tensor
+    res = cpapr_mu(t, rank=4, config=CPAPRConfig(rank=4, max_outer=10))
+    assert min(res.kkt_history) <= res.kkt_history[0]
+
+
+def test_cpapr_recovers_planted_model():
+    """On an easy planted low-rank tensor, fit should clearly improve."""
+    t, kt_true = random_poisson_tensor(jax.random.PRNGKey(3), (50, 40, 30),
+                                       nnz=8000, rank=3)
+    res = cpapr_mu(t, rank=3, config=CPAPRConfig(rank=3, max_outer=15))
+    ll0 = poisson_loglik(t, KTensor(res.ktensor.lam * 0 + 1.0,
+                                    tuple(jnp.ones_like(f) / f.shape[0]
+                                          for f in res.ktensor.factors)))
+    ll_true = poisson_loglik(t, kt_true.normalize())
+    ll_fit = res.loglik_history[-1]
+    # fitted loglik should be much closer to ground truth than to uniform
+    assert ll_fit > float(ll0) + 0.5 * (float(ll_true) - float(ll0))
+
+
+def test_cpapr_4way(tensor4d):
+    t, _ = tensor4d
+    res = cpapr_mu(t, rank=3, config=CPAPRConfig(rank=3, max_outer=4))
+    assert res.ktensor.shape == t.shape
+    for f in res.ktensor.factors:
+        assert not bool(jnp.isnan(f).any())
+
+
+def test_mttkrp_matches_dense(small_tensor):
+    t, kt = small_tensor
+    dense = np.asarray(dense_from_coo(t), np.float64)
+    f1 = np.asarray(kt.factors[1], np.float64)
+    f2 = np.asarray(kt.factors[2], np.float64)
+    kr = (f1[:, None, :] * f2[None, :, :]).reshape(-1, kt.rank)
+    ref = dense.reshape(t.shape[0], -1) @ kr
+    out = mttkrp(t.indices, t.values, tuple(kt.factors), 0, t.shape[0])
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_cp_als_fit_improves(small_tensor):
+    t, _ = small_tensor
+    _, fits = cp_als(t, rank=4, n_iters=6)
+    assert fits[-1] >= fits[0] - 1e-6
+
+
+def test_kkt_violation_zero_at_fixed_point():
+    b = jnp.ones((5, 3)) * 0.5
+    phi = jnp.ones((5, 3))
+    assert float(kkt_violation(b, phi)) == 0.0

@@ -1,0 +1,134 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp ref.py oracles.
+
+All kernels run in interpret mode on CPU (the kernel body is executed in
+Python), asserting allclose against the reference implementation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.layout import build_blocked_layout
+from repro.core.phi import expand_to_layout
+from repro.core.pi import pi_rows
+from repro.core.sparse_tensor import random_poisson_tensor, sort_mode
+from repro.kernels.mttkrp.ops import mttkrp_blocked
+from repro.kernels.mttkrp.ref import mttkrp_blocked_ref, mttkrp_ref
+from repro.kernels.phi.ops import phi_blocked
+from repro.kernels.phi.ref import phi_blocked_ref, phi_ref
+from repro.kernels.stream.ops import STREAM_OPS, stream_op
+from repro.kernels.stream.ref import stream_ref
+
+
+def _mode_data(shape, nnz, rank, mode, seed=0):
+    t, kt = random_poisson_tensor(jax.random.PRNGKey(seed), shape, nnz=nnz,
+                                  rank=rank)
+    mv = sort_mode(t, mode)
+    pi = pi_rows(mv.sorted_idx, kt.factors, mode)
+    b = kt.factors[mode] * kt.lam[None, :]
+    return t, mv, pi, b
+
+
+PHI_CASES = [
+    # (tensor shape, nnz, rank, block_nnz, block_rows)
+    ((40, 30, 25), 1500, 4, 64, 32),
+    ((40, 30, 25), 1500, 8, 128, 64),
+    ((100, 7, 11), 900, 16, 32, 128),
+    ((8, 60, 60), 2500, 4, 256, 8),
+    ((64, 64, 64, 8), 3000, 12, 128, 16),
+]
+
+
+@pytest.mark.parametrize("shape,nnz,rank,bn,br", PHI_CASES)
+def test_phi_pallas_sweep(shape, nnz, rank, bn, br):
+    for mode in range(min(len(shape), 2)):
+        t, mv, pi, b = _mode_data(shape, nnz, rank, mode)
+        layout = build_blocked_layout(np.asarray(mv.rows), mv.n_rows, bn, br)
+        vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
+        out = phi_blocked(layout, vals_e, pi_e, b, eps=1e-10)
+        b_pad = jnp.pad(b, ((0, layout.n_rows_pad - b.shape[0]), (0, 0)))
+        ref = phi_blocked_ref(layout, vals_e, pi_e, b_pad, eps=1e-10)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-5, atol=1e-5)
+        # and against the unblocked per-nonzero oracle
+        ref2 = phi_ref(mv.rows, mv.sorted_vals, pi, b, mv.n_rows, 1e-10)
+        np.testing.assert_allclose(np.asarray(out[: mv.n_rows]),
+                                   np.asarray(ref2), rtol=3e-5, atol=1e-5)
+
+
+def test_phi_pallas_empty_rows():
+    """Rows with zero nonzeros must come back exactly zero."""
+    t, mv, pi, b = _mode_data((200, 10, 10), 300, 4, 0)  # many empty rows
+    layout = build_blocked_layout(np.asarray(mv.rows), mv.n_rows, 64, 32)
+    vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
+    out = np.asarray(phi_blocked(layout, vals_e, pi_e, b)[: mv.n_rows])
+    occupied = np.zeros(mv.n_rows, bool)
+    occupied[np.asarray(mv.rows)] = True
+    assert np.all(out[~occupied] == 0.0)
+
+
+@pytest.mark.parametrize("bn,br", [(32, 32), (128, 16), (64, 128)])
+def test_mttkrp_pallas_sweep(bn, br):
+    t, mv, kr, _ = _mode_data((50, 30, 40), 2000, 8, 0, seed=4)
+    layout = build_blocked_layout(np.asarray(mv.rows), mv.n_rows, bn, br)
+    vals_e, kr_e = expand_to_layout(layout, mv.sorted_vals, kr)
+    out = mttkrp_blocked(layout, vals_e, kr_e)[: mv.n_rows]
+    ref = mttkrp_ref(mv.rows, mv.sorted_vals, kr, mv.n_rows)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("op", STREAM_OPS)
+@pytest.mark.parametrize("n,block_rows", [(128 * 256, 256), (128 * 512, 64)])
+def test_stream_pallas_sweep(op, n, block_rows):
+    b = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    c = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    out = stream_op(op, b, c, block_rows=block_rows)
+    ref = stream_ref(op, b, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_ssd_chunked_vs_ref():
+    from repro.models.mamba2 import ssd_chunked, ssd_ref
+    key = jax.random.PRNGKey(2)
+    for (B, S, H, P, G, N, chunk) in [(2, 24, 4, 8, 2, 8, 8),
+                                      (1, 32, 8, 16, 1, 4, 16),
+                                      (3, 16, 2, 4, 2, 8, 4)]:
+        ks = jax.random.split(key, 7)
+        key = ks[6]
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        a_log = jax.random.normal(ks[2], (H,)) * 0.5
+        b = jax.random.normal(ks[3], (B, S, G, N))
+        c = jax.random.normal(ks[4], (B, S, G, N))
+        d = jax.random.normal(ks[5], (H,))
+        h0 = jax.random.normal(ks[0], (B, H, P, N)) * 0.1
+        y1, hf1 = ssd_chunked(x, dt, a_log, b, c, d, chunk, h0=h0)
+        y2, hf2 = ssd_ref(x, dt, a_log, b, c, d, h0=h0)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(hf1), np.asarray(hf2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_rg_lru_vs_ref():
+    from repro.models.rglru import rg_lru, rg_lru_ref
+    key = jax.random.PRNGKey(5)
+    B, S, W = 2, 20, 12
+    x = jax.random.normal(key, (B, S, W))
+    p = {
+        "w_a": jax.random.normal(jax.random.PRNGKey(6), (W, W)) * 0.3,
+        "b_a": jnp.zeros(W),
+        "w_x": jax.random.normal(jax.random.PRNGKey(7), (W, W)) * 0.3,
+        "b_x": jnp.zeros(W),
+        "lam": jnp.ones(W),
+    }
+    h0 = jax.random.normal(jax.random.PRNGKey(8), (B, W))
+    for h_init in (None, h0):
+        y1, hf1 = rg_lru(x, p, h0=h_init)
+        y2, hf2 = rg_lru_ref(x, p, h0=h_init)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(hf1), np.asarray(hf2),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,138 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import build_blocked_layout, round_up
+from repro.core.phi import expand_to_layout, phi_from_rows
+from repro.core.policy import PhiPolicy, heuristic_policy, vmem_footprint_bytes
+from repro.perf.hlo import collective_stats, shape_bytes
+from repro.train.compression import (
+    CompressionConfig,
+    compress_grads,
+    init_residual,
+)
+
+# keep hypothesis fast + deterministic for CI
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def sorted_rows(draw):
+    n_rows = draw(st.integers(1, 50))
+    nnz = draw(st.integers(0, 200))
+    rows = draw(st.lists(st.integers(0, n_rows - 1), min_size=nnz,
+                         max_size=nnz))
+    return np.sort(np.asarray(rows, np.int32)), n_rows
+
+
+@given(sorted_rows(), st.sampled_from([16, 32, 64]),
+       st.sampled_from([8, 16, 64]))
+@settings(**SETTINGS)
+def test_layout_partition_invariants(rows_nrows, bn, br):
+    """The blocked layout is a *partition*: every nonzero appears exactly
+    once, every block maps to one row block, grid_rb is non-decreasing."""
+    rows, n_rows = rows_nrows
+    layout = build_blocked_layout(rows, n_rows, bn, br)
+    gather = layout.gather[layout.valid]
+    # every sorted-stream index appears exactly once among valid slots
+    assert sorted(gather.tolist()) == list(range(len(rows)))
+    # grid_rb non-decreasing and covers every row block at least once
+    assert np.all(np.diff(layout.grid_rb) >= 0)
+    assert set(layout.grid_rb.tolist()) == set(range(layout.n_row_blocks))
+    # local rows in range; valid slots land in their block's row window
+    assert np.all(layout.local_rows >= 0)
+    assert np.all(layout.local_rows < br)
+    rb_of_slot = np.repeat(layout.grid_rb, bn)
+    glob = rb_of_slot * br + layout.local_rows
+    assert np.all(glob[layout.valid] == rows[gather.argsort().argsort()]
+                  if False else glob[layout.valid] == rows[gather])
+    # padding fraction consistent
+    assert 0.0 <= layout.pad_fraction < 1.0
+
+
+@given(sorted_rows(), st.sampled_from([16, 32]), st.sampled_from([8, 32]))
+@settings(**SETTINGS)
+def test_phi_blocked_equals_segment_any_layout(rows_nrows, bn, br):
+    """Blocked Phi == segment Phi for arbitrary row multisets/policies."""
+    rows, n_rows = rows_nrows
+    if len(rows) == 0:
+        return
+    rank = 4
+    key = jax.random.PRNGKey(int(rows.sum()) % 1000)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vals = jax.random.uniform(k1, (len(rows),), minval=0.5, maxval=2.0)
+    pi = jax.random.uniform(k2, (len(rows), rank), minval=0.1, maxval=1.0)
+    b = jax.random.uniform(k3, (n_rows, rank), minval=0.1, maxval=1.0)
+    ref = phi_from_rows(jnp.asarray(rows), vals, pi, b, n_rows,
+                        strategy="segment")
+    layout = build_blocked_layout(rows, n_rows, bn, br)
+    out = phi_from_rows(jnp.asarray(rows), vals, pi, b, n_rows,
+                        strategy="blocked", layout=layout)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=1e-5)
+
+
+@given(st.integers(1, 10**7), st.integers(1, 10**5), st.sampled_from([4, 16, 64]))
+@settings(**SETTINGS)
+def test_heuristic_policy_fits_vmem(nnz, n_rows, rank):
+    p = heuristic_policy(nnz, n_rows, rank, platform="tpu")
+    assert vmem_footprint_bytes(p, rank) <= 8 * 2**20 or (
+        p.block_nnz == 64 and p.block_rows == 8)
+    assert p.block_nnz >= 8 and p.block_rows >= 8
+
+
+@given(st.integers(0, 10))
+@settings(**SETTINGS)
+def test_round_up(k):
+    for m in (1, 8, 128):
+        assert round_up(k, m) % m == 0
+        assert 0 <= round_up(k, m) - k < m
+
+
+@given(st.sampled_from(["bf16", "int8"]), st.integers(0, 5))
+@settings(**SETTINGS)
+def test_error_feedback_compression_bounded_error(kind, seed):
+    """With error feedback, the *cumulative* compressed signal tracks the
+    cumulative true gradient (residual stays bounded)."""
+    cfg = CompressionConfig(kind)
+    key = jax.random.PRNGKey(seed)
+    g_shape = (32, 17)
+    params = {"w": jnp.zeros(g_shape)}
+    resid = init_residual(params, cfg)
+    total_true = jnp.zeros(g_shape)
+    total_sent = jnp.zeros(g_shape)
+    for i in range(6):
+        key, sub = jax.random.split(key)
+        g = {"w": jax.random.normal(sub, g_shape)}
+        total_true = total_true + g["w"]
+        dq, resid = compress_grads(g, resid, cfg)
+        total_sent = total_sent + dq["w"]
+    # residual = total_true - total_sent exactly (error feedback identity)
+    np.testing.assert_allclose(np.asarray(resid["w"]),
+                               np.asarray(total_true - total_sent),
+                               rtol=1e-4, atol=1e-4)
+    # and it is bounded by one quantization step's worth of error
+    scale = float(jnp.max(jnp.abs(total_true))) + 1.0
+    assert float(jnp.max(jnp.abs(resid["w"]))) < scale
+
+
+def test_shape_bytes_tuples():
+    assert shape_bytes("f32[4,8]") == 128
+    assert shape_bytes("(f32[2], bf16[3,3])") == 8 + 18
+    assert shape_bytes("pred[7]") == 7
+
+
+def test_collective_stats_parses_groups():
+    txt = """
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[64,64]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+"""
+    cs = collective_stats(txt)
+    assert cs.by_kind_count["all-reduce"] == 1
+    assert cs.by_kind_count["all-gather"] == 1
+    # AR: 4096 bytes * 2*(15/16); AG: 8192 * (3/4)
+    np.testing.assert_allclose(cs.by_kind_wire["all-reduce"],
+                               4096 * 2 * 15 / 16)
+    np.testing.assert_allclose(cs.by_kind_wire["all-gather"], 8192 * 0.75)
