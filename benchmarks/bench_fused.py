@@ -1,0 +1,109 @@
+"""Fused MU fast path vs the unfused inner sweep (the tentpole's receipt).
+
+The unfused baseline mirrors what the seed solver executed per inner
+iteration, timed bench_breakdown-style as separate jitted dispatches with
+HBM-materialized intermediates:
+
+    phi  = Phi^(n)(B)            (for blocked: re-expanding Pi each call,
+                                  as the pre-hoist inner loop did)
+    viol = max |min(B, 1-phi)|   (reads B and phi back)
+    B'   = where(viol>tol, B*phi, B)
+
+The fused path is one ``phi_mu_step`` dispatch (for pallas: one
+VMEM-resident kernel pass; for jnp strategies: one XLA-fused program with
+the expansion hoisted).  ``speedup = unfused_s / fused_s`` is the ratio
+reported in BENCH_phi.json.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kkt_violation, sort_mode
+from repro.core.layout import build_blocked_layout
+from repro.core.phi import expand_to_layout, phi_from_rows, phi_mu_step
+from repro.core.pi import pi_rows
+from repro.core.policy import default_policy
+from repro.perf.timing import bench_seconds
+
+from .common import QUICK_TENSORS, RANK, Reporter, geomean, get_tensor
+
+TOL = 1e-4
+
+# Per-nonzero arrays are jit arguments, never closure constants — XLA
+# embeds closed-over arrays as literals, distorting CPU timings ~10-50x.
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "strategy", "layout"))
+def _phi_dispatch(rows, vals, pi, b, n_rows, strategy, layout):
+    # No pre-expanded arrays: the seed inner loop re-expanded per call.
+    return phi_from_rows(rows, vals, pi, b, n_rows=n_rows,
+                         strategy=strategy, layout=layout)
+
+
+_kkt_dispatch = jax.jit(kkt_violation)
+
+
+@jax.jit
+def _mu_dispatch(b, phi, viol):
+    return jnp.where(viol > TOL, b * phi, b)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "strategy", "layout"))
+def _fused_dispatch(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy, layout):
+    return phi_mu_step(rows, vals, pi, b, n_rows=n_rows, tol=TOL,
+                       strategy=strategy, layout=layout,
+                       vals_e=vals_e, pi_e=pi_e)
+
+
+def _bench_pair(mv, pi, b, strategy, layout, iters):
+    """(unfused seconds, fused seconds) for one mode problem."""
+    if layout is not None:
+        vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
+    else:
+        vals_e = pi_e = None
+
+    def unfused(b_):
+        # three dispatches; phi and viol round-trip through HBM between them
+        phi = _phi_dispatch(mv.rows, mv.sorted_vals, pi, b_,
+                            n_rows=mv.n_rows, strategy=strategy, layout=layout)
+        viol = _kkt_dispatch(b_, phi)
+        return _mu_dispatch(b_, phi, viol), viol
+
+    t_unf = bench_seconds(unfused, b, iters=iters)
+    t_fus = bench_seconds(_fused_dispatch, mv.rows, mv.sorted_vals, pi, b,
+                          vals_e, pi_e, n_rows=mv.n_rows, strategy=strategy,
+                          layout=layout, iters=iters)
+    return t_unf, t_fus
+
+
+def run(tensors=QUICK_TENSORS, iters: int = 3, strategies=("segment", "blocked")):
+    rep = Reporter("fused")
+    ratios = {s: [] for s in strategies}
+    for name in tensors:
+        t, kt = get_tensor(name)
+        mv = sort_mode(t, 0)
+        pi = pi_rows(mv.sorted_idx, kt.factors, 0)
+        b = kt.factors[0] * kt.lam[None, :]
+        pol = default_policy(RANK)
+        for strategy in strategies:
+            layout = None
+            if strategy in ("blocked", "pallas"):
+                layout = build_blocked_layout(np.asarray(mv.rows), mv.n_rows,
+                                              pol.block_nnz, pol.block_rows)
+            t_unf, t_fus = _bench_pair(mv, pi, b, strategy, layout, iters)
+            rep.row(tensor=name, strategy=strategy,
+                    unfused_s=round(t_unf, 6), fused_s=round(t_fus, 6),
+                    speedup=round(t_unf / t_fus, 3))
+            ratios[strategy].append(t_unf / t_fus)
+    for strategy in strategies:
+        rep.row(summary="geomean", strategy=strategy,
+                speedup=round(geomean(ratios[strategy]), 3))
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -6,10 +6,16 @@ the paper's (league, team, vector) — on each tensor, reporting:
   * best/worst grid times (the paper's 2.25x-average headline + the
     "bad policies lose 10x" caution),
   * the heuristic policy's regret vs the grid optimum (the paper's
-    proposed-but-unbuilt selection heuristic, implemented here).
+    proposed-but-unbuilt selection heuristic, implemented here),
+  * the online autotuner's chosen policy + regret vs the grid optimum
+    (repro.perf.autotune; what ``CPAPRConfig(policy="auto")`` runs).
 """
 from __future__ import annotations
 
+import functools
+import os
+
+import jax
 import numpy as np
 
 from repro.core import sort_mode
@@ -22,23 +28,32 @@ from repro.core.policy import (
     heuristic_policy,
     policy_grid,
 )
+from repro.perf.autotune import Autotuner
 from repro.perf.timing import bench_seconds
 
-from .common import QUICK_TENSORS, RANK, Reporter, geomean, get_tensor
+from .common import OUT_DIR, QUICK_TENSORS, RANK, Reporter, geomean, get_tensor
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "strategy", "layout"))
+def _jit_phi(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy, layout):
+    # One compiled dispatch per probe — what the solver actually runs.
+    # Arrays are jit arguments, not closure constants (XLA embeds
+    # closed-over arrays as literals, distorting CPU timings ~10-50x).
+    return phi_from_rows(rows, vals, pi, b, n_rows=n_rows, strategy=strategy,
+                         layout=layout, vals_e=vals_e, pi_e=pi_e)
 
 
 def _time_policy(mv, pi, b, pol, iters=3) -> float:
     if pol.strategy in ("scatter", "segment"):
         return bench_seconds(
-            lambda: phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
-                                  strategy=pol.strategy), iters=iters)
+            _jit_phi, mv.rows, mv.sorted_vals, pi, b, None, None,
+            n_rows=mv.n_rows, strategy=pol.strategy, layout=None, iters=iters)
     layout = build_blocked_layout(np.asarray(mv.rows), mv.n_rows,
                                   pol.block_nnz, pol.block_rows)
     vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
     return bench_seconds(
-        lambda: phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
-                              strategy="blocked", layout=layout),
-        iters=iters)
+        _jit_phi, mv.rows, mv.sorted_vals, pi, b, vals_e, pi_e,
+        n_rows=mv.n_rows, strategy=pol.strategy, layout=layout, iters=iters)
 
 
 def run(tensors=QUICK_TENSORS, iters: int = 3, quick: bool = True):
@@ -48,7 +63,12 @@ def run(tensors=QUICK_TENSORS, iters: int = 3, quick: bool = True):
         block_nnz=(128, 256, 512) if quick else (64, 128, 256, 512, 1024),
         block_rows=(64, 256) if quick else (32, 64, 128, 256, 512),
     )
-    gains, regrets = [], []
+    # fresh autotune cache per bench run so "chosen policy" is re-measured
+    cache_path = os.path.join(OUT_DIR, "autotune_cache.json")
+    if os.path.exists(cache_path):
+        os.unlink(cache_path)
+    tuner = Autotuner(cache_path=cache_path, iters=iters, warmup=1)
+    gains, regrets, auto_regrets = [], [], []
     for name in tensors:
         t, kt = get_tensor(name)
         mv = sort_mode(t, 0)
@@ -56,25 +76,34 @@ def run(tensors=QUICK_TENSORS, iters: int = 3, quick: bool = True):
         b = kt.factors[0] * kt.lam[None, :]
 
         ranked = grid_search(lambda p: _time_policy(mv, pi, b, p, iters), grid)
+        n_failed = sum(1 for _, s, _ in ranked if not np.isfinite(s))
         t_default = _time_policy(mv, pi, b, default_policy(RANK), iters)
         h = heuristic_policy(t.nnz, mv.n_rows, RANK)  # platform-aware (cpu)
         t_heur = _time_policy(mv, pi, b, h, iters)
         h_tpu = heuristic_policy(t.nnz, mv.n_rows, RANK, platform="tpu")
-        best_p, t_best = ranked[0]
-        worst_p, t_worst = next((p, s) for p, s in reversed(ranked)
-                                if np.isfinite(s))
+        auto_p = tuner.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                                       n_rows=mv.n_rows, rank=RANK)
+        t_auto = _time_policy(mv, pi, b, auto_p, iters)
+        best_p, t_best, _ = ranked[0]
+        worst_p, t_worst, _ = next((p, s, e) for p, s, e in reversed(ranked)
+                                   if np.isfinite(s))
         rep.row(tensor=name, default_s=round(t_default, 6),
                 best=best_p.label(), best_s=round(t_best, 6),
                 worst=worst_p.label(), worst_s=round(t_worst, 6),
+                grid_failed=n_failed,
                 heuristic=h.label(), heuristic_s=round(t_heur, 6),
                 tpu_heuristic=h_tpu.label(),
+                autotune=auto_p.label(), autotune_s=round(t_auto, 6),
                 speedup_best_vs_default=round(t_default / t_best, 3),
                 slowdown_worst_vs_default=round(t_worst / t_default, 3),
-                heuristic_regret=round(t_heur / t_best, 3))
+                heuristic_regret=round(t_heur / t_best, 3),
+                autotune_regret=round(t_auto / t_best, 3))
         gains.append(t_default / t_best)
         regrets.append(t_heur / t_best)
+        auto_regrets.append(t_auto / t_best)
     rep.row(summary="geomean", speedup_best_vs_default=round(geomean(gains), 3),
-            heuristic_regret=round(geomean(regrets), 3))
+            heuristic_regret=round(geomean(regrets), 3),
+            autotune_regret=round(geomean(auto_regrets), 3))
     return rep.finish()
 
 

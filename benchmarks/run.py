@@ -2,15 +2,23 @@
 
   PYTHONPATH=src python -m benchmarks.run           # quick tier
   PYTHONPATH=src python -m benchmarks.run --only ppa,stream
+
+After the benches finish, the Phi-centric results (runtime breakdown,
+policy winners + autotuner regret, fused-vs-unfused speedups) are
+distilled into machine-readable ``BENCH_phi.json`` at the repo root so
+the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 import traceback
 
 from . import (
     bench_breakdown,
+    bench_fused,
     bench_mttkrp,
     bench_modes,
     bench_policy,
@@ -18,16 +26,93 @@ from . import (
     bench_roofline,
     bench_stream,
 )
+from .common import OUT_DIR
 
 ALL = {
     "breakdown": bench_breakdown.run,  # Fig. 2
     "roofline": bench_roofline.run,    # Figs. 3-4 / Eqs. 3-8
     "ppa": bench_ppa.run,              # Exps. 1-2 / Figs. 5-7
     "policy": bench_policy.run,        # Exps. 3-5 / Figs. 8-13
+    "fused": bench_fused.run,          # tentpole: fused MU fast path
     "modes": bench_modes.run,          # Exp. 6 / Figs. 14-15
     "stream": bench_stream.run,        # Exp. 7 / Figs. 16-17
     "mttkrp": bench_mttkrp.run,        # Exp. 8 / Figs. 18-19
 }
+
+BENCH_PHI_PATH = "BENCH_phi.json"
+
+
+def _load_rows(name: str):
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f).get("rows", [])
+    except (OSError, ValueError):
+        return None
+
+
+def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
+    """Distill experiments/bench/{breakdown,policy,fused}.json -> BENCH_phi.json.
+
+    Schema (all medians in seconds):
+      breakdown: {tensor: {kernel: seconds, ..., phi_share: float}}
+      policy:    {tensor: {default_s, best, best_s, heuristic, heuristic_regret,
+                           autotune, autotune_s, autotune_regret}}
+      fused:     {tensor: {strategy: {unfused_s, fused_s, speedup}}}
+      summary:   geomeans (policy speedup, autotune regret, fused speedup)
+    """
+    out: dict = {"schema": 1, "generated_unix": time.time(),
+                 "breakdown": {}, "policy": {}, "fused": {}, "summary": {}}
+    found = False
+
+    rows = _load_rows("breakdown")
+    if rows:
+        found = True
+        per: dict = {}
+        for r in rows:
+            if "tensor" in r:
+                per.setdefault(r["tensor"], {})[r["kernel"]] = r["seconds"]
+        for tensor, kernels in per.items():
+            total = sum(kernels.values()) or 1.0
+            kernels["phi_share"] = round(kernels.get("phi", 0.0) / total, 4)
+        out["breakdown"] = per
+
+    rows = _load_rows("policy")
+    if rows:
+        found = True
+        keep = ("default_s", "best", "best_s", "worst_s", "heuristic",
+                "heuristic_s", "heuristic_regret", "autotune", "autotune_s",
+                "autotune_regret", "speedup_best_vs_default")
+        for r in rows:
+            if "tensor" in r:
+                out["policy"][r["tensor"]] = {k: r[k] for k in keep if k in r}
+            elif r.get("summary") == "geomean":
+                for k in ("speedup_best_vs_default", "heuristic_regret",
+                          "autotune_regret"):
+                    if k in r:
+                        out["summary"][k] = r[k]
+
+    rows = _load_rows("fused")
+    if rows:
+        found = True
+        for r in rows:
+            if "tensor" in r:
+                out["fused"].setdefault(r["tensor"], {})[r["strategy"]] = {
+                    "unfused_s": r["unfused_s"],
+                    "fused_s": r["fused_s"],
+                    "speedup": r["speedup"],
+                }
+            elif r.get("summary") == "geomean":
+                out["summary"][f"fused_speedup_{r['strategy']}"] = r["speedup"]
+
+    if not found:
+        return None
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"[benchmarks] phi summary -> {path}", flush=True)
+    return out
 
 
 def main(argv=None) -> int:
@@ -44,6 +129,10 @@ def main(argv=None) -> int:
         except Exception:
             traceback.print_exc()
             failed.append(name)
+    try:  # distillation gets the same containment as the benches
+        emit_bench_phi()
+    except Exception:
+        traceback.print_exc()
     print(f"\n[benchmarks] {len(names) - len(failed)}/{len(names)} ok "
           f"in {time.time() - t0:.0f}s; failed: {failed or 'none'}")
     return 1 if failed else 0

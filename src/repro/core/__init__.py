@@ -4,15 +4,32 @@ Public API:
   SparseTensor / KTensor / ModeView  — data substrate
   cpapr_mu / CPAPRConfig             — the algorithm (Alg. 1)
   phi_mode / phi_from_rows           — the hot kernel (Alg. 2-4), all strategies
+  phi_mu_step                        — fused Phi + KKT + MU inner step
   mttkrp / cp_als                    — the PASTA-family baseline (Exp. 8)
-  PhiPolicy / heuristic_policy       — the parallel policy (Exps. 3-6)
+  PhiPolicy / heuristic_policy       — the parallel policy (Exps. 3-6);
+                                       CPAPRConfig(policy="auto") engages the
+                                       persistent autotuner (repro.perf.autotune)
 """
 from .cpals import cp_als, fit_score, mttkrp
 from .cpapr import CPAPRConfig, CPAPRResult, cpapr_mu, kkt_violation, poisson_loglik
 from .layout import BlockedLayout, build_blocked_layout
-from .phi import PHI_STRATEGIES, phi_flops_words, phi_from_rows, phi_mode
+from .phi import (
+    PHI_STRATEGIES,
+    expand_to_layout,
+    phi_flops_words,
+    phi_from_rows,
+    phi_mode,
+    phi_mu_step,
+)
 from .pi import pi_rows
-from .policy import PhiPolicy, default_policy, grid_search, heuristic_policy, policy_grid
+from .policy import (
+    SEARCH_ERRORS,
+    PhiPolicy,
+    default_policy,
+    grid_search,
+    heuristic_policy,
+    policy_grid,
+)
 from .sparse_tensor import (
     KTensor,
     ModeView,

@@ -11,10 +11,26 @@ Faithful reproduction of the SparTen algorithm:
           B <- B * Phi
         lam <- e^T B;  A^(n) <- B Lambda^-1
 
-The per-mode inner solve is a single jitted ``lax.while_loop``; the outer
-sweep is a host loop (k_max is small and convergence is data-dependent,
-mirroring SparTen's driver).  Phi uses any strategy from ``repro.core.phi``
-— strategy choice + blocking policy is the paper's "parallel policy".
+The per-mode inner solve is a single jitted ``lax.while_loop`` whose body
+is the *fused* ``phi_mu_step`` — Phi, the KKT check, and ``B <- B*Phi``
+in one pass (for ``pallas``, one VMEM-resident kernel sweep instead of
+three HBM round trips).  The layout expansion of the Pi rows (the gather
+into the padded blocked order) is hoisted out of the inner loop: it runs
+once per mode update, not once per inner iteration.  The outer sweep is a
+host loop (k_max is small and convergence is data-dependent, mirroring
+SparTen's driver).
+
+Strategy + blocking policy is the paper's "parallel policy".  It can be:
+
+  * implicit — ``CPAPRConfig.strategy`` with default block sizes;
+  * explicit — ``CPAPRConfig.policy`` set to a :class:`PhiPolicy` (its
+    block sizes are used; ``strategy`` still picks the algorithm);
+  * ``policy="auto"`` — the persistent autotuner
+    (:mod:`repro.perf.autotune`) picks a policy per mode, keyed on
+    ``(nnz, n_rows, rank, platform)`` and cached across processes in a
+    JSON store (default ``~/.cache/repro/autotune.json``; override with
+    ``CPAPRConfig.autotuner`` or ``$REPRO_AUTOTUNE_CACHE``), so repeat
+    decompositions of same-shaped data pay zero search cost.
 """
 from __future__ import annotations
 
@@ -28,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .layout import BlockedLayout, build_blocked_layout
-from .phi import phi_from_rows
+from .phi import expand_to_layout, phi_from_rows, phi_mu_step
 from .pi import pi_rows
 from .policy import PhiPolicy, default_policy
 from .sparse_tensor import KTensor, ModeView, SparseTensor, random_ktensor, sort_mode
@@ -46,7 +62,11 @@ class CPAPRConfig:
     kappa: float = 1e-2  # "scooch" offset for inadmissible zeros
     kappa_tol: float = 1e-10
     strategy: str = "segment"
-    policy: PhiPolicy | None = None
+    # PhiPolicy (explicit blocking), "auto" (persistent autotuner), or None.
+    policy: "PhiPolicy | str | None" = None
+    # Optional repro.perf.autotune.Autotuner for policy="auto"; a default
+    # one (persistent user-level cache) is created when absent.
+    autotuner: "object | None" = None
     track_loglik: bool = True
 
 
@@ -59,6 +79,7 @@ class CPAPRResult:
     inner_iters: list  # per outer iter: total inner iterations
     converged: bool
     seconds: float
+    policies: list | None = None  # per-mode PhiPolicy when policy="auto"
 
 
 def kkt_violation(b: jax.Array, phi: jax.Array) -> jax.Array:
@@ -78,45 +99,62 @@ def poisson_loglik(t: SparseTensor, kt: KTensor, eps: float = 1e-10) -> jax.Arra
 def _make_mode_update(
     mv: ModeView,
     cfg: CPAPRConfig,
+    strategy: str,
     layout: BlockedLayout | None,
 ):
     """Jitted per-mode solve: returns (A_n', lam', kkt, n_inner)."""
 
     n = mv.mode
     n_rows = mv.n_rows
+    uses_layout = strategy in ("blocked", "pallas")
 
     @jax.jit
     def update(factors: tuple, lam: jax.Array):
         a_n = factors[n]
         pi = pi_rows(mv.sorted_idx, factors, n)
-
-        def phi_of(b):
-            return phi_from_rows(
-                mv.rows,
-                mv.sorted_vals,
-                pi,
-                b,
-                n_rows=n_rows,
-                eps=cfg.eps,
-                strategy=cfg.strategy,
-                layout=layout,
-            )
+        # Hoisted layout expansion: one gather per mode update, shared by
+        # the scooch Phi and every fused inner iteration below.
+        if uses_layout and layout is not None:
+            vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
+        else:
+            vals_e = pi_e = None
 
         # --- scooch: lift inadmissible zeros (Alg. 1 line 3) --------------
-        phi0 = phi_of(a_n * lam[None, :])
+        phi0 = phi_from_rows(
+            mv.rows,
+            mv.sorted_vals,
+            pi,
+            a_n * lam[None, :],
+            n_rows=n_rows,
+            eps=cfg.eps,
+            strategy=strategy,
+            layout=layout,
+            vals_e=vals_e,
+            pi_e=pi_e,
+        )
         s = jnp.where((a_n < cfg.kappa_tol) & (phi0 > 1.0), cfg.kappa, 0.0)
         b0 = (a_n + s) * lam[None, :]
 
-        # --- inner MU loop (Alg. 1 lines 5-8) ------------------------------
+        # --- fused inner MU loop (Alg. 1 lines 5-8) ------------------------
         def cond(state):
             i, _, viol = state
             return (i < cfg.max_inner) & (viol > cfg.tol)
 
         def body(state):
             i, b, _ = state
-            phi = phi_of(b)
-            viol = kkt_violation(b, phi)
-            b_new = jnp.where(viol > cfg.tol, b * phi, b)
+            b_new, viol = phi_mu_step(
+                mv.rows,
+                mv.sorted_vals,
+                pi,
+                b,
+                n_rows=n_rows,
+                eps=cfg.eps,
+                tol=cfg.tol,
+                strategy=strategy,
+                layout=layout,
+                vals_e=vals_e,
+                pi_e=pi_e,
+            )
             return (i + 1, b_new, viol)
 
         i, b, viol = jax.lax.while_loop(
@@ -130,6 +168,49 @@ def _make_mode_update(
         return a_new, lam_new, viol, i
 
     return update
+
+
+def _resolve_mode_policies(
+    cfg: CPAPRConfig,
+    mvs: Sequence[ModeView],
+    factors: Sequence[jax.Array],
+    lam: jax.Array,
+) -> tuple:
+    """Per-mode (strategy, layout, policy) from the config's policy field."""
+    n_modes = len(mvs)
+    strategies = [cfg.strategy] * n_modes
+    layouts: list = [None] * n_modes
+    policies: list = [None] * n_modes
+
+    if cfg.policy == "auto":
+        from repro.perf.autotune import Autotuner  # deferred: avoids cycle
+
+        tuner = cfg.autotuner if cfg.autotuner is not None else Autotuner()
+        for n in range(n_modes):
+            mv = mvs[n]
+            pi_n = pi_rows(mv.sorted_idx, tuple(factors), n)
+            b_n = factors[n] * lam[None, :]
+            pol = tuner.policy_for_mode(
+                mv.rows, mv.sorted_vals, pi_n, b_n, n_rows=mv.n_rows, rank=cfg.rank
+            )
+            policies[n] = pol
+            strategies[n] = pol.strategy
+            if pol.strategy in ("blocked", "pallas"):
+                layouts[n] = build_blocked_layout(
+                    np.asarray(mv.rows), mv.n_rows, pol.block_nnz, pol.block_rows
+                )
+        return strategies, layouts, policies
+
+    if cfg.strategy in ("blocked", "pallas"):
+        pol = cfg.policy if isinstance(cfg.policy, PhiPolicy) else default_policy(
+            cfg.rank
+        )
+        for n in range(n_modes):
+            policies[n] = pol
+            layouts[n] = build_blocked_layout(
+                np.asarray(mvs[n].rows), mvs[n].n_rows, pol.block_nnz, pol.block_rows
+            )
+    return strategies, layouts, policies
 
 
 def cpapr_mu(
@@ -154,15 +235,12 @@ def cpapr_mu(
     mvs = list(mode_views) if mode_views is not None else [
         sort_mode(t, n) for n in range(n_modes)
     ]
-    layouts: list = [None] * n_modes
-    if cfg.strategy in ("blocked", "pallas"):
-        pol = cfg.policy or default_policy(rank)
-        for n in range(n_modes):
-            layouts[n] = build_blocked_layout(
-                np.asarray(mvs[n].rows), mvs[n].n_rows, pol.block_nnz, pol.block_rows
-            )
+    strategies, layouts, policies = _resolve_mode_policies(cfg, mvs, factors, lam)
 
-    updates = [_make_mode_update(mvs[n], cfg, layouts[n]) for n in range(n_modes)]
+    updates = [
+        _make_mode_update(mvs[n], cfg, strategies[n], layouts[n])
+        for n in range(n_modes)
+    ]
 
     kkt_hist, ll_hist, inner_hist = [], [], []
     converged = False
@@ -195,4 +273,5 @@ def cpapr_mu(
         inner_iters=inner_hist,
         converged=converged,
         seconds=seconds,
+        policies=policies if cfg.policy == "auto" else None,
     )

@@ -31,6 +31,21 @@ from .sparse_tensor import KTensor, SparseTensor, random_ktensor, sort_mode
 __all__ = ["DistCPAPRConfig", "dist_cpapr_mu", "shard_mode_views"]
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map moved out of jax.experimental (and check_rep was
+    renamed check_vma); support every combination by inspection."""
+    import inspect
+
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    params = inspect.signature(sm).parameters
+    check_kw = "check_vma" if "check_vma" in params else "check_rep"
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{check_kw: False})
+
+
 @dataclasses.dataclass(frozen=True)
 class DistCPAPRConfig:
     rank: int
@@ -134,8 +149,8 @@ def _mode_update_dist(mesh: Mesh, cfg: DistCPAPRConfig, n: int, n_rows: int,
         lam_spec,
     )
     out_specs = (f_spec, lam_spec, P(), P())
-    fn = jax.shard_map(local_update, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = _shard_map(local_update, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs)
     return jax.jit(fn)
 
 

@@ -27,6 +27,15 @@ PPA perturbations (paper Sec. 3.3) are exposed uniformly via ``perturb``:
     perfect cache/VMEM reuse (paper's "single row access").
 
 Perturbed variants are *wrong on purpose* — benchmarks only.
+
+The CP-APR inner loop's hot sequence — Phi, the KKT check, and the MU
+update ``B <- B*Phi`` — is exposed as one fused entry point,
+:func:`phi_mu_step`, shared by all strategies.  For ``pallas`` it maps to
+the fused-epilogue kernel (one VMEM-resident pass instead of three HBM
+sweeps); the jnp strategies mirror the same math in a single traced
+expression so XLA fuses the elementwise epilogue into the reduction.
+``vals_e``/``pi_e`` accept pre-expanded layout arrays so callers (the
+solver) can hoist the Pi gather out of the inner loop.
 """
 from __future__ import annotations
 
@@ -45,6 +54,8 @@ __all__ = [
     "phi_flops_words",
     "phi_from_rows",
     "phi_mode",
+    "phi_mu_step",
+    "expand_to_layout",
     "PHI_STRATEGIES",
 ]
 
@@ -119,11 +130,14 @@ def _uniform_segment_sum(contrib: jax.Array, n_rows: int) -> jax.Array:
     return c.reshape(n_rows, group, r).sum(axis=1)
 
 
-def _phi_blocked(layout: BlockedLayout, vals, pi, b, eps, perturb=None):
+def _phi_blocked_padded(layout: BlockedLayout, vals, pi, b, eps, perturb=None):
     """Pure-jnp emulation of the Pallas schedule (same blocking, same math).
 
     vals/pi here are already expanded to the padded layout order:
       vals: (n_grid*block_nnz,)   pi: (n_grid*block_nnz, R)
+
+    Returns the *padded* (n_rows_pad, R) result, mirroring the kernel's
+    output window; :func:`_phi_blocked` slices to n_rows.
     """
     g, bn, br = layout.n_grid, layout.block_nnz, layout.block_rows
     r = pi.shape[1]
@@ -157,12 +171,31 @@ def _phi_blocked(layout: BlockedLayout, vals, pi, b, eps, perturb=None):
     phi_blocks = jax.ops.segment_sum(
         partial_blocks, grid_rb, num_segments=n_rb, indices_are_sorted=True
     )
-    return phi_blocks.reshape(n_rb * br, r)[: layout.n_rows]
+    return phi_blocks.reshape(n_rb * br, r)
+
+
+def _phi_blocked(layout: BlockedLayout, vals, pi, b, eps, perturb=None):
+    return _phi_blocked_padded(layout, vals, pi, b, eps, perturb)[: layout.n_rows]
 
 
 # ---------------------------------------------------------------------------
 # Public entry points
 # ---------------------------------------------------------------------------
+
+
+def _resolve_layout(rows, n_rows, layout, vals, pi, vals_e, pi_e):
+    """Default layout + expansion for the blocked/pallas strategies.
+
+    Pre-expanded ``vals_e``/``pi_e`` (from a hoisted :func:`expand_to_layout`)
+    are passed through untouched so the solver's inner loop never re-gathers.
+    """
+    if layout is None:
+        layout = build_blocked_layout(
+            np.asarray(rows), n_rows, block_nnz=256, block_rows=256
+        )
+    if vals_e is None or pi_e is None:
+        vals_e, pi_e = expand_to_layout(layout, vals, pi)
+    return layout, vals_e, pi_e
 
 
 def phi_from_rows(
@@ -175,29 +208,95 @@ def phi_from_rows(
     strategy: str = "segment",
     layout: BlockedLayout | None = None,
     perturb: str | None = None,
+    vals_e: jax.Array | None = None,
+    pi_e: jax.Array | None = None,
 ) -> jax.Array:
-    """Phi^(n) from pre-gathered Pi rows.  ``rows`` sorted unless 'scatter'."""
+    """Phi^(n) from pre-gathered Pi rows.  ``rows`` sorted unless 'scatter'.
+
+    For ``blocked``/``pallas``, optional ``vals_e``/``pi_e`` are the
+    layout-expanded arrays (see :func:`expand_to_layout`); pass them to
+    skip per-call re-expansion.
+    """
     eps = float(eps)
     if strategy == "scatter":
         return _phi_scatter(rows, vals, pi, b, n_rows, eps, perturb)
     if strategy == "segment":
         return _phi_segment(rows, vals, pi, b, n_rows, eps, perturb)
     if strategy == "blocked":
-        if layout is None:
-            layout = build_blocked_layout(
-                np.asarray(rows), n_rows, block_nnz=256, block_rows=256
-            )
-        vals_e, pi_e = expand_to_layout(layout, vals, pi)
+        layout, vals_e, pi_e = _resolve_layout(
+            rows, n_rows, layout, vals, pi, vals_e, pi_e
+        )
         return _phi_blocked(layout, vals_e, pi_e, b, eps, perturb)
     if strategy == "pallas":
         from repro.kernels.phi import ops as phi_ops
 
-        if layout is None:
-            layout = build_blocked_layout(
-                np.asarray(rows), n_rows, block_nnz=256, block_rows=256
-            )
-        vals_e, pi_e = expand_to_layout(layout, vals, pi)
+        layout, vals_e, pi_e = _resolve_layout(
+            rows, n_rows, layout, vals, pi, vals_e, pi_e
+        )
         return phi_ops.phi_blocked(layout, vals_e, pi_e, b, float(eps))[:n_rows]
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def _mu_epilogue(b: jax.Array, phi: jax.Array, tol) -> tuple:
+    """Shared unblocked epilogue: KKT violation + conditional MU update.
+
+    ``B`` is left untouched on the iteration that detects convergence
+    (viol <= tol), matching Chi & Kolda's check-before-update semantics.
+    """
+    viol = jnp.max(jnp.abs(jnp.minimum(b, 1.0 - phi)))
+    return jnp.where(viol > tol, b * phi, b), viol
+
+
+def phi_mu_step(
+    rows: jax.Array,
+    vals: jax.Array,
+    pi: jax.Array,
+    b: jax.Array,
+    n_rows: int,
+    eps: float = 1e-10,
+    tol: float = 1e-4,
+    strategy: str = "segment",
+    layout: BlockedLayout | None = None,
+    vals_e: jax.Array | None = None,
+    pi_e: jax.Array | None = None,
+) -> tuple:
+    """One fused CP-APR inner MU step: ``(B', viol)`` in a single pass.
+
+    Computes Phi^(n), the KKT violation ``max |min(B, 1 - Phi)|`` and the
+    multiplicative update ``B' = B * Phi`` (applied only while
+    ``viol > tol``) for any strategy.  For ``pallas`` the epilogue runs
+    inside the kernel on the last visit to each row block — the Phi window
+    never round-trips through HBM; for the jnp strategies the whole step
+    is one traced expression so XLA fuses the epilogue into the reduction.
+    This is the entry point ``cpapr_mu``'s inner ``lax.while_loop`` calls.
+    """
+    eps = float(eps)
+    if strategy in ("scatter", "segment"):
+        phi = (
+            _phi_scatter(rows, vals, pi, b, n_rows, eps)
+            if strategy == "scatter"
+            else _phi_segment(rows, vals, pi, b, n_rows, eps)
+        )
+        return _mu_epilogue(b, phi, tol)
+    if strategy == "blocked":
+        layout, vals_e, pi_e = _resolve_layout(
+            rows, n_rows, layout, vals, pi, vals_e, pi_e
+        )
+        # Mirror of the fused kernel epilogue on the padded windows: the
+        # padded region of B/Phi is zero, so it adds |min(0, 1)| = 0 to the
+        # violation max and nothing to B*Phi.
+        phi_pad = _phi_blocked_padded(layout, vals_e, pi_e, b, eps)
+        b_pad = jnp.pad(b, ((0, layout.n_rows_pad - b.shape[0]), (0, 0)))
+        b_new_pad, viol = _mu_epilogue(b_pad, phi_pad, tol)
+        return b_new_pad[:n_rows], viol
+    if strategy == "pallas":
+        from repro.kernels.phi import ops as phi_ops
+
+        layout, vals_e, pi_e = _resolve_layout(
+            rows, n_rows, layout, vals, pi, vals_e, pi_e
+        )
+        mu_pad, viol = phi_ops.phi_mu_blocked(layout, vals_e, pi_e, b, eps)
+        return jnp.where(viol > tol, mu_pad[:n_rows], b), viol
     raise ValueError(f"unknown strategy {strategy!r}")
 
 

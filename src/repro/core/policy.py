@@ -11,6 +11,12 @@ The paper shows grid search over the policy gives 2.25x (CPU) / 1.70x (GPU)
 over defaults, and calls a selection *heuristic* "an obvious next step"
 (Sec. 5).  ``heuristic_policy`` implements one: a VMEM/cache-footprint +
 segment-run-length model, validated against grid search in bench_policy.
+
+``repro.perf.autotune`` turns the offline grid search into an *online*
+persistent autotuner: ``CPAPRConfig(policy="auto")`` measures a pruned
+grid per ``(nnz, n_rows, rank, platform)`` key once, caches the winner in
+a JSON store, and falls back to ``heuristic_policy`` when measurement is
+unavailable.
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ __all__ = [
     "grid_search",
     "heuristic_policy",
     "vmem_footprint_bytes",
+    "SEARCH_ERRORS",
 ]
 
 
@@ -76,18 +83,47 @@ def policy_grid(
     return out
 
 
+def _expected_search_errors() -> tuple:
+    """Errors a policy probe may legitimately raise: bad shapes/configs
+    (``ValueError``) and XLA / Pallas compile or lowering failures.  Anything
+    else (KeyboardInterrupt, bugs) propagates out of the search."""
+    errs: list = [ValueError, NotImplementedError]
+    try:  # runtime/compile errors surface as XlaRuntimeError
+        from jax._src.lib import xla_client
+
+        errs.append(xla_client.XlaRuntimeError)
+    except Exception:  # pragma: no cover - jax internals moved
+        pass
+    try:  # newer jax re-exports a public alias
+        from jax.errors import JaxRuntimeError
+
+        errs.append(JaxRuntimeError)
+    except Exception:
+        pass
+    return tuple(errs)
+
+
+SEARCH_ERRORS = _expected_search_errors()
+
+
 def grid_search(
     time_fn: Callable[[PhiPolicy], float],
     policies: Iterable[PhiPolicy],
 ) -> list:
-    """Time every policy; returns [(policy, seconds)] sorted fastest-first."""
+    """Time every policy; returns [(policy, seconds, error)] fastest-first.
+
+    ``error`` is ``None`` for successful probes; for policies that fail
+    with an expected error (invalid configs are part of the search space —
+    see :data:`SEARCH_ERRORS`) the entry records ``float('inf')`` seconds
+    plus the failure reason so callers can report *why* a point was pruned.
+    """
     results = []
     for p in policies:
         try:
-            secs = time_fn(p)
-        except Exception as e:  # invalid configs are part of the search space
-            secs = float("inf")
-        results.append((p, secs))
+            secs, err = time_fn(p), None
+        except SEARCH_ERRORS as e:
+            secs, err = float("inf"), f"{type(e).__name__}: {e}"
+        results.append((p, secs, err))
     results.sort(key=lambda x: x[1])
     return results
 

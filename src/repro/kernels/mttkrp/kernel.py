@@ -17,6 +17,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["mttkrp_pallas_call"]
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _mttkrp_kernel(
     grid_rb_ref,
@@ -68,6 +71,6 @@ def mttkrp_pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_rows_pad, rank_pad), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )

@@ -1,4 +1,10 @@
-"""Jitted wrapper for the Phi Pallas kernel: padding + layout plumbing."""
+"""Jitted wrappers for the Phi Pallas kernels: padding + layout plumbing.
+
+``phi_blocked`` runs the plain Phi^(n) reduction; ``phi_mu_blocked`` runs
+the fused MU fast path (Phi accumulation + ``B*Phi`` + KKT partial max in
+one VMEM-resident pass — see kernel.py).  Both take layout-expanded inputs
+(``repro.core.phi.expand_to_layout``).
+"""
 from __future__ import annotations
 
 import functools
@@ -9,21 +15,19 @@ import numpy as np
 
 from repro.core.layout import BlockedLayout, round_up
 
-from .kernel import phi_pallas_call
+from .kernel import phi_mu_pallas_call, phi_pallas_call
 
-__all__ = ["phi_blocked"]
+__all__ = ["phi_blocked", "phi_mu_blocked"]
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("layout", "eps", "interpret"))
-def _run(layout: BlockedLayout, vals_e, pi_e, b, eps: float, interpret: bool):
+def _pad_inputs(layout: BlockedLayout, vals_e, pi_e, b):
     r = pi_e.shape[1]
     r_pad = round_up(r, 128)
     n_rows_pad = layout.n_rows_pad
-
     vals2 = vals_e.reshape(-1, 1).astype(jnp.float32)
     lrow2 = jnp.asarray(layout.local_rows, jnp.int32).reshape(-1, 1)
     pi_p = jnp.pad(pi_e.astype(jnp.float32), ((0, 0), (0, r_pad - r)))
@@ -32,18 +36,41 @@ def _run(layout: BlockedLayout, vals_e, pi_e, b, eps: float, interpret: bool):
         ((0, n_rows_pad - b.shape[0]), (0, r_pad - r)),
     )
     grid_rb = jnp.asarray(layout.grid_rb, jnp.int32)
+    return vals2, lrow2, pi_p, b_p, grid_rb, r, r_pad
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "eps", "interpret"))
+def _run(layout: BlockedLayout, vals_e, pi_e, b, eps: float, interpret: bool):
+    vals2, lrow2, pi_p, b_p, grid_rb, r, r_pad = _pad_inputs(layout, vals_e, pi_e, b)
 
     call = phi_pallas_call(
         n_grid=layout.n_grid,
         block_nnz=layout.block_nnz,
         block_rows=layout.block_rows,
-        n_rows_pad=n_rows_pad,
+        n_rows_pad=layout.n_rows_pad,
         rank_pad=r_pad,
         eps=eps,
         interpret=interpret,
     )
     phi_pad = call(grid_rb, vals2, lrow2, pi_p, b_p)
     return phi_pad[:, :r]
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "eps", "interpret"))
+def _run_mu(layout: BlockedLayout, vals_e, pi_e, b, eps: float, interpret: bool):
+    vals2, lrow2, pi_p, b_p, grid_rb, r, r_pad = _pad_inputs(layout, vals_e, pi_e, b)
+
+    call = phi_mu_pallas_call(
+        n_grid=layout.n_grid,
+        block_nnz=layout.block_nnz,
+        block_rows=layout.block_rows,
+        n_rows_pad=layout.n_rows_pad,
+        rank_pad=r_pad,
+        eps=eps,
+        interpret=interpret,
+    )
+    mu_pad, kkt = call(grid_rb, vals2, lrow2, pi_p, b_p)
+    return mu_pad[:, :r], jnp.max(kkt)
 
 
 def phi_blocked(
@@ -62,3 +89,23 @@ def phi_blocked(
     if interpret is None:
         interpret = _default_interpret()
     return _run(layout, vals_e, pi_e, b, float(eps), bool(interpret))
+
+
+def phi_mu_blocked(
+    layout: BlockedLayout,
+    vals_e: jax.Array,
+    pi_e: jax.Array,
+    b: jax.Array,
+    eps: float = 1e-10,
+    interpret: bool | None = None,
+) -> tuple:
+    """Fused MU fast path via the Pallas kernel.
+
+    Returns ``(mu, viol)`` where ``mu`` is the padded (n_rows_pad, R)
+    array ``B * Phi^(n)`` (callers slice to n_rows) and ``viol`` is the
+    scalar KKT violation ``max |min(B, 1 - Phi)|`` — the padded region of
+    B is zero so it contributes exactly 0 to the max.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    return _run_mu(layout, vals_e, pi_e, b, float(eps), bool(interpret))

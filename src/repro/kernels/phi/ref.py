@@ -6,7 +6,7 @@ import jax.numpy as jnp
 
 from repro.core.layout import BlockedLayout
 
-__all__ = ["phi_ref", "phi_blocked_ref"]
+__all__ = ["phi_ref", "phi_blocked_ref", "phi_mu_ref"]
 
 
 def phi_ref(rows, vals, pi, b, n_rows: int, eps: float) -> jax.Array:
@@ -26,3 +26,10 @@ def phi_blocked_ref(
         + jnp.asarray(layout.local_rows)
     )
     return phi_ref(global_rows, vals_e, pi_e, b_pad, layout.n_rows_pad, eps)
+
+
+def phi_mu_ref(rows, vals, pi, b, n_rows: int, eps: float) -> tuple:
+    """Oracle for the fused MU fast path: ``(B*Phi, max|min(B, 1-Phi)|)``."""
+    phi = phi_ref(rows, vals, pi, b, n_rows, eps)
+    viol = jnp.max(jnp.abs(jnp.minimum(b, 1.0 - phi)))
+    return b * phi, viol

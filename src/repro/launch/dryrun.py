@@ -130,6 +130,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True):
 def analyze(lowered, compiled, meta, hw=HARDWARE["tpu_v5e"]) -> dict:
     n_chips = meta["n_chips"]
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):  # older jax returns a one-element list
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     # trip-count-aware per-device costs (XLA's cost_analysis counts scanned
     # layer bodies ONCE — see perf/hlo_costs.py; raw values kept for ref)

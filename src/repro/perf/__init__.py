@@ -4,7 +4,11 @@
   ppa      — pressure-point analysis harness (Sec. 3.3)
   hlo      — collective-byte accounting over partitioned HLO
   timing   — wall-clock harness (host CPU)
+  autotune — online, persistent parallel-policy autotuner (JSON-cached
+             grid search with heuristic fallback; backs
+             ``CPAPRConfig(policy="auto")``)
 """
+from .autotune import Autotuner, AutotuneCache, default_cache_path
 from .hlo import CollectiveStats, collective_stats, shape_bytes
 from .ppa import PERTURBATIONS, PPAResult, run_ppa
 from .roofline import (

@@ -1,0 +1,303 @@
+"""Online, persistent parallel-policy autotuner for the Phi kernels.
+
+The paper shows grid search over the parallel policy gives 2.25x (CPU) /
+1.70x (GPU) over defaults but leaves selection as an offline exercise
+("an obvious next step", Sec. 5).  This module makes it *online*:
+
+  * :class:`Autotuner` keys each tuning problem on
+    ``(platform, nnz, n_rows, rank)``;
+  * on a cache miss it measures a *pruned* policy grid (the heuristic's
+    neighborhood plus the unblocked strategies) with
+    :func:`repro.perf.timing.bench_seconds` and records the winner;
+  * when measurement is disabled or every probe fails it falls back to
+    :func:`repro.core.policy.heuristic_policy`;
+  * winners persist in a JSON store (:class:`AutotuneCache`) so repeat
+    decompositions — including in *future processes* — pay zero search
+    cost.
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``.  The store is a plain JSON object
+(``{"version": 1, "entries": {key: {...}}}``) and is written atomically
+(tmp file + rename) after every new winner.
+
+``CPAPRConfig(policy="auto")`` consults this per mode (see
+``repro.core.cpapr``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.core.layout import build_blocked_layout
+from repro.core.phi import expand_to_layout, phi_mu_step
+from repro.core.policy import (
+    PhiPolicy,
+    grid_search,
+    heuristic_policy,
+    vmem_footprint_bytes,
+)
+
+__all__ = ["AutotuneCache", "Autotuner", "default_cache_path", "policy_key"]
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json")
+
+
+def policy_key(nnz: int, n_rows: int, rank: int, platform: str) -> str:
+    return f"{platform}/nnz={nnz}/rows={n_rows}/rank={rank}"
+
+
+def _policy_to_json(p: PhiPolicy) -> dict:
+    return dataclasses.asdict(p)
+
+
+def _policy_from_json(d: dict) -> PhiPolicy:
+    return PhiPolicy(**d)
+
+
+class AutotuneCache:
+    """Persistent JSON store of tuned policies.
+
+    Entries map :func:`policy_key` strings to
+    ``{"policy": {...}, "seconds": float, "source": "grid"|"heuristic",
+    "tuned_at": unix_ts}``.  Corrupt or missing files load as empty; all
+    writes are atomic so concurrent processes at worst lose a race, never
+    the file.
+    """
+
+    VERSION = 1
+
+    def __init__(self, path: str | None = None):
+        self.path = path or default_cache_path()
+        self.entries: dict = {}
+        self.load()
+
+    def load(self) -> None:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            if isinstance(data, dict) and data.get("version") == self.VERSION:
+                self.entries = dict(data.get("entries", {}))
+        except (OSError, ValueError):
+            self.entries = {}
+
+    def save(self) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        payload = {"version": self.VERSION, "entries": self.entries}
+        fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def lookup(self, key: str, source: str | None = None) -> PhiPolicy | None:
+        """Cached policy for ``key``; with ``source`` set, only entries tuned
+        that way (e.g. ``"grid"``) count — used to re-tune heuristic
+        placeholders once measurement becomes available."""
+        e = self.entries.get(key)
+        if e is None:
+            return None
+        if source is not None and e.get("source") != source:
+            return None
+        try:
+            return _policy_from_json(e["policy"])
+        except (KeyError, TypeError):
+            return None
+
+    def store(
+        self, key: str, policy: PhiPolicy, seconds: float, source: str
+    ) -> None:
+        self.entries[key] = {
+            "policy": _policy_to_json(policy),
+            # inf (heuristic fallback: nothing measured) is not valid JSON
+            "seconds": seconds if np.isfinite(seconds) else None,
+            "source": source,
+            "tuned_at": time.time(),
+        }
+        self.save()
+
+
+def candidate_policies(
+    nnz: int,
+    n_rows: int,
+    rank: int,
+    platform: str,
+    vmem_budget: int = 8 * 2**20,
+    include_pallas: bool | None = None,
+) -> list:
+    """Pruned search grid: unblocked strategies + the heuristic's blocked
+    neighborhood (block sizes at 0.5x/1x/2x), VMEM-feasible points only.
+
+    ~8 candidates instead of the full Cartesian grid (paper Exps. 3-5) —
+    small enough to amortize in one decomposition, rich enough to capture
+    the grid optimum on the evaluation tensors (tracked as "regret" in
+    ``benchmarks/bench_policy.py``).
+    """
+    if include_pallas is None:
+        include_pallas = platform == "tpu"
+    cands = [PhiPolicy(strategy="segment"), PhiPolicy(strategy="scatter")]
+    base = heuristic_policy(
+        nnz, n_rows, rank, vmem_budget=vmem_budget, platform="tpu"
+    )
+    seen = set()
+    for bn_mul in (0.5, 1.0, 2.0):
+        for br_mul in (0.5, 1.0, 2.0):
+            bn = int(np.clip(base.block_nnz * bn_mul, 64, 2048))
+            br = int(np.clip(base.block_rows * br_mul, 8, 1024))
+            if (bn, br) in seen:
+                continue
+            seen.add((bn, br))
+            p = PhiPolicy(strategy="blocked", block_nnz=bn, block_rows=br)
+            if vmem_footprint_bytes(p, rank) <= vmem_budget:
+                cands.append(p)
+                if include_pallas:
+                    cands.append(dataclasses.replace(p, strategy="pallas"))
+    return cands
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "strategy", "layout"))
+def _jit_mu_step(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy, layout):
+    return phi_mu_step(
+        rows,
+        vals,
+        pi,
+        b,
+        n_rows=n_rows,
+        strategy=strategy,
+        layout=layout,
+        vals_e=vals_e,
+        pi_e=pi_e,
+    )
+
+
+class Autotuner:
+    """Measure-once, cache-forever policy selection.
+
+    Counters (for tests and regret reporting):
+      * ``n_hits``     — lookups served from the cache.
+      * ``n_searches`` — cache misses that triggered a tune (grid
+        measurement or heuristic fallback).
+      * ``n_grid_searches`` — misses that actually ran timed probes.
+    """
+
+    def __init__(
+        self,
+        cache_path: str | None = None,
+        measure: bool = True,
+        iters: int = 2,
+        warmup: int = 1,
+        vmem_budget: int = 8 * 2**20,
+        platform: str | None = None,
+        include_pallas: bool | None = None,
+    ):
+        self.cache = AutotuneCache(cache_path)
+        self.measure = measure
+        self.iters = iters
+        self.warmup = warmup
+        self.vmem_budget = vmem_budget
+        self.platform = platform
+        self.include_pallas = include_pallas
+        self.n_hits = 0
+        self.n_searches = 0
+        self.n_grid_searches = 0
+
+    # -- measurement ------------------------------------------------------
+    def _time_policy(self, pol: PhiPolicy, rows, vals, pi, b, n_rows: int):
+        """Median seconds of one fused MU step under ``pol``.
+
+        Layout build + expansion stay outside the timed region — the solver
+        hoists them out of the inner loop too (one per mode update).  The
+        per-nonzero arrays are jit *arguments*, never closure constants:
+        XLA embeds closed-over arrays as literals, which distorts CPU
+        timings by an order of magnitude."""
+        from repro.perf.timing import bench_seconds
+
+        if pol.strategy in ("blocked", "pallas"):
+            layout = build_blocked_layout(
+                np.asarray(rows), n_rows, pol.block_nnz, pol.block_rows
+            )
+            vals_e, pi_e = expand_to_layout(layout, vals, pi)
+        else:
+            layout = vals_e = pi_e = None
+
+        return bench_seconds(
+            _jit_mu_step,
+            rows,
+            vals,
+            pi,
+            b,
+            vals_e,
+            pi_e,
+            n_rows=n_rows,
+            strategy=pol.strategy,
+            layout=layout,
+            warmup=self.warmup,
+            iters=self.iters,
+        )
+
+    # -- public API -------------------------------------------------------
+    def policy_for_mode(
+        self,
+        rows,
+        vals,
+        pi,
+        b,
+        n_rows: int,
+        rank: int,
+    ) -> PhiPolicy:
+        """Tuned policy for one mode's Phi problem (cached by problem key)."""
+        platform = self.platform or jax.default_backend()
+        nnz = int(rows.shape[0])
+        key = policy_key(nnz, n_rows, rank, platform)
+
+        # A heuristic placeholder (stored when measurement was disabled or
+        # every probe failed) does not satisfy a measuring tuner — re-tune
+        # it instead of pinning an unmeasured policy forever.
+        hit = self.cache.lookup(key, source="grid" if self.measure else None)
+        if hit is not None:
+            self.n_hits += 1
+            return hit
+
+        self.n_searches += 1
+        best_p, best_s, source = None, float("inf"), "heuristic"
+        if self.measure:
+            cands = candidate_policies(
+                nnz,
+                n_rows,
+                rank,
+                platform,
+                vmem_budget=self.vmem_budget,
+                include_pallas=self.include_pallas,
+            )
+            self.n_grid_searches += 1
+            ranked = grid_search(
+                lambda p: self._time_policy(p, rows, vals, pi, b, n_rows), cands
+            )
+            if ranked and np.isfinite(ranked[0][1]):
+                best_p, best_s, _ = ranked[0]
+                source = "grid"
+        if best_p is None:
+            best_p = heuristic_policy(
+                nnz, n_rows, rank, vmem_budget=self.vmem_budget, platform=platform
+            )
+        self.cache.store(key, best_p, best_s, source)
+        return best_p

@@ -1,0 +1,253 @@
+"""Fused MU fast path + persistent policy autotuner (tier-1)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CPAPRConfig,
+    cpapr_mu,
+    kkt_violation,
+    phi_from_rows,
+    phi_mu_step,
+    sort_mode,
+)
+from repro.core.layout import build_blocked_layout
+from repro.core.phi import expand_to_layout
+from repro.core.pi import pi_rows
+from repro.core.policy import (
+    PhiPolicy,
+    grid_search,
+    heuristic_policy,
+    vmem_footprint_bytes,
+)
+from repro.perf.autotune import (
+    Autotuner,
+    AutotuneCache,
+    candidate_policies,
+    policy_key,
+)
+
+FUSED_STRATEGIES = ("scatter", "segment", "blocked", "pallas")
+
+
+def _mode_problem(small_tensor, mode=0, bn=64, br=32):
+    t, kt = small_tensor
+    mv = sort_mode(t, mode)
+    pi = pi_rows(mv.sorted_idx, kt.factors, mode)
+    b = kt.factors[mode] * kt.lam[None, :]
+    layout = build_blocked_layout(np.asarray(mv.rows), mv.n_rows, bn, br)
+    return mv, pi, b, layout
+
+
+def _unfused_reference(mv, pi, b, tol):
+    phi = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                        strategy="scatter")
+    viol = kkt_violation(b, phi)
+    return jnp.where(viol > tol, b * phi, b), viol
+
+
+@pytest.mark.parametrize("strategy", FUSED_STRATEGIES)
+@pytest.mark.parametrize("mode", [0, 1])
+def test_phi_mu_step_matches_unfused(small_tensor, strategy, mode):
+    """Fused (B', viol) == unfused phi -> kkt -> where(B*phi) composition."""
+    mv, pi, b, layout = _mode_problem(small_tensor, mode)
+    tol = 1e-4
+    ref_b, ref_v = _unfused_reference(mv, pi, b, tol)
+    layout_arg = layout if strategy in ("blocked", "pallas") else None
+    out_b, out_v = phi_mu_step(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                               tol=tol, strategy=strategy, layout=layout_arg)
+    np.testing.assert_allclose(np.asarray(out_v), np.asarray(ref_v),
+                               rtol=3e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(ref_b),
+                               rtol=3e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("strategy", FUSED_STRATEGIES)
+def test_phi_mu_step_converged_leaves_b_untouched(small_tensor, strategy):
+    """When viol <= tol the MU update must not be applied (check-before-
+    update semantics): B comes back bitwise identical."""
+    mv, pi, b, layout = _mode_problem(small_tensor)
+    layout_arg = layout if strategy in ("blocked", "pallas") else None
+    out_b, out_v = phi_mu_step(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                               tol=1e12, strategy=strategy, layout=layout_arg)
+    assert float(out_v) < 1e12
+    np.testing.assert_array_equal(np.asarray(out_b), np.asarray(b))
+
+
+def test_phi_mu_step_pre_expanded_inputs_match(small_tensor):
+    """Hoisted expand_to_layout arrays give the same answer as re-expansion."""
+    mv, pi, b, layout = _mode_problem(small_tensor)
+    vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
+    for strategy in ("blocked", "pallas"):
+        a = phi_mu_step(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                        strategy=strategy, layout=layout)
+        h = phi_mu_step(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                        strategy=strategy, layout=layout,
+                        vals_e=vals_e, pi_e=pi_e)
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(h[0]),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(float(a[1]), float(h[1]), rtol=1e-6)
+
+
+@pytest.mark.parametrize("strategy", ["segment", "blocked", "pallas"])
+def test_cpapr_fused_loglik_monotone(small_tensor, strategy):
+    """The fused inner loop preserves the MU monotonicity guarantee."""
+    t, _ = small_tensor
+    res = cpapr_mu(t, rank=4,
+                   config=CPAPRConfig(rank=4, max_outer=4, strategy=strategy))
+    ll = res.loglik_history
+    assert len(ll) >= 2
+    for a, b in zip(ll, ll[1:]):
+        assert b >= a - 1e-3 * abs(a), f"loglik decreased: {a} -> {b}"
+
+
+# ---------------------------------------------------------------------------
+# heuristic_policy VMEM-shrink loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nnz,n_rows,rank", [
+    (10**7, 10, 512),      # huge rank: footprint forces shrinking
+    (10**6, 10**6, 128),
+    (500, 100, 4),
+    (1, 1, 1),
+])
+def test_heuristic_policy_shrink_terminates_and_fits(nnz, n_rows, rank):
+    budget = 2**20  # deliberately tight 1 MiB
+    p = heuristic_policy(nnz, n_rows, rank, vmem_budget=budget, platform="tpu")
+    # loop terminated (we got here) at either a fitting policy or the floor
+    assert p.block_nnz >= 64 // 2 and p.block_rows >= 8
+    fits = vmem_footprint_bytes(p, rank) <= budget
+    at_floor = p.block_nnz <= 64 and p.block_rows <= 8
+    assert fits or at_floor
+
+
+# ---------------------------------------------------------------------------
+# grid_search failure recording
+# ---------------------------------------------------------------------------
+
+
+def test_grid_search_records_failure_reason():
+    pols = [PhiPolicy(strategy="segment"), PhiPolicy(strategy="blocked")]
+
+    def time_fn(p):
+        if p.strategy == "blocked":
+            raise ValueError("bad block shape")
+        return 0.5
+
+    ranked = grid_search(time_fn, pols)
+    assert ranked[0][0].strategy == "segment"
+    assert ranked[0][1] == 0.5 and ranked[0][2] is None
+    assert ranked[1][1] == float("inf")
+    assert "bad block shape" in ranked[1][2]
+
+
+def test_grid_search_propagates_unexpected_errors():
+    with pytest.raises(RuntimeError):
+        grid_search(lambda p: (_ for _ in ()).throw(RuntimeError("bug")),
+                    [PhiPolicy()])
+
+
+# ---------------------------------------------------------------------------
+# autotune cache + policy="auto"
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "cache.json")
+    c1 = AutotuneCache(path)
+    key = policy_key(1000, 50, 8, "cpu")
+    pol = PhiPolicy(strategy="blocked", block_nnz=128, block_rows=64)
+    c1.store(key, pol, 0.001, "grid")
+    assert os.path.exists(path)
+    # reload in a fresh instance -> hit with an equal policy
+    c2 = AutotuneCache(path)
+    assert c2.lookup(key) == pol
+    assert c2.lookup(policy_key(999, 50, 8, "cpu")) is None
+    # corrupt file loads as empty, not an exception
+    with open(path, "w") as f:
+        f.write("{not json")
+    c3 = AutotuneCache(path)
+    assert c3.lookup(key) is None
+
+
+def test_candidate_policies_fit_budget():
+    budget = 4 * 2**20
+    cands = candidate_policies(10**6, 10**4, 32, "cpu", vmem_budget=budget)
+    assert any(p.strategy == "segment" for p in cands)
+    for p in cands:
+        if p.strategy == "blocked":
+            assert vmem_footprint_bytes(p, 32) <= budget
+    assert len(cands) <= 16
+
+
+def test_autotuner_measured_search_caches_winner(small_tensor, tmp_path):
+    t, kt = small_tensor
+    mv = sort_mode(t, 0)
+    pi = pi_rows(mv.sorted_idx, kt.factors, 0)
+    b = kt.factors[0] * kt.lam[None, :]
+    path = str(tmp_path / "cache.json")
+    tuner = Autotuner(cache_path=path, iters=1, warmup=1)
+    pol = tuner.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                                n_rows=mv.n_rows, rank=4)
+    assert isinstance(pol, PhiPolicy)
+    assert tuner.n_grid_searches == 1
+    key = policy_key(mv.nnz, mv.n_rows, 4, jax.default_backend())
+    assert tuner.cache.entries[key]["source"] == "grid"
+    # same problem again: served from memory-resident cache, no new search
+    pol2 = tuner.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                                 n_rows=mv.n_rows, rank=4)
+    assert pol2 == pol and tuner.n_grid_searches == 1 and tuner.n_hits == 1
+
+
+def test_autotuner_retunes_heuristic_placeholder(small_tensor, tmp_path):
+    """A heuristic fallback entry must not pin an unmeasured policy: a
+    later measuring tuner re-tunes the key (and upgrades it to 'grid')."""
+    t, kt = small_tensor
+    mv = sort_mode(t, 0)
+    pi = pi_rows(mv.sorted_idx, kt.factors, 0)
+    b = kt.factors[0] * kt.lam[None, :]
+    path = str(tmp_path / "cache.json")
+    key = policy_key(mv.nnz, mv.n_rows, 4, jax.default_backend())
+
+    t1 = Autotuner(cache_path=path, measure=False)
+    t1.policy_for_mode(mv.rows, mv.sorted_vals, pi, b, n_rows=mv.n_rows, rank=4)
+    assert t1.cache.entries[key]["source"] == "heuristic"
+    assert t1.cache.entries[key]["seconds"] is None  # inf is not valid JSON
+    # heuristic-only tuners keep hitting the placeholder
+    t1.policy_for_mode(mv.rows, mv.sorted_vals, pi, b, n_rows=mv.n_rows, rank=4)
+    assert t1.n_hits == 1
+
+    t2 = Autotuner(cache_path=path, iters=1, warmup=1)  # measuring
+    t2.policy_for_mode(mv.rows, mv.sorted_vals, pi, b, n_rows=mv.n_rows, rank=4)
+    assert t2.n_grid_searches == 1 and t2.n_hits == 0
+    assert t2.cache.entries[key]["source"] == "grid"
+
+
+def test_cpapr_policy_auto_populates_then_hits_cache(small_tensor, tmp_path):
+    """First auto run tunes every mode and persists; a second run (fresh
+    Autotuner, same store) performs zero grid searches."""
+    t, _ = small_tensor
+    path = str(tmp_path / "cache.json")
+
+    t1 = Autotuner(cache_path=path, measure=False)  # heuristic fallback: fast
+    cfg = CPAPRConfig(rank=4, max_outer=2, policy="auto", autotuner=t1)
+    res1 = cpapr_mu(t, rank=4, config=cfg)
+    assert t1.n_searches == t.ndim and t1.n_hits == 0
+    assert t1.n_grid_searches == 0  # measure=False never times policies
+    assert os.path.exists(path)
+    assert res1.policies is not None and len(res1.policies) == t.ndim
+    assert all(isinstance(p, PhiPolicy) for p in res1.policies)
+
+    t2 = Autotuner(cache_path=path, measure=False)
+    res2 = cpapr_mu(t, rank=4, config=CPAPRConfig(
+        rank=4, max_outer=2, policy="auto", autotuner=t2))
+    assert t2.n_searches == 0 and t2.n_grid_searches == 0
+    assert t2.n_hits == t.ndim
+    assert [p.label() for p in res2.policies] == \
+        [p.label() for p in res1.policies]
+    # same fit either way
+    np.testing.assert_allclose(res1.kkt_history, res2.kkt_history, rtol=1e-6)

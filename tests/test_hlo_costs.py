@@ -35,7 +35,10 @@ def test_scan_multiplies_trip_count():
     assert abs(mc.flops - expected) / expected < 0.1
     assert mc.unknown_trip_loops == 0
     # XLA's own analysis counts the body once — document the gap
-    assert c.cost_analysis()["flops"] < expected / 3
+    ca = c.cost_analysis()
+    if isinstance(ca, list):  # older jax returns a one-element list
+        ca = ca[0]
+    assert ca["flops"] < expected / 3
 
 
 def test_nested_scan():

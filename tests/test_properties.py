@@ -1,7 +1,13 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skipped wholesale (not errored) when hypothesis isn't installed, so the
+tier-1 ``pytest -x -q`` run survives on minimal machines."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.layout import build_blocked_layout, round_up
