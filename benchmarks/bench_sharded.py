@@ -1,0 +1,95 @@
+"""Sharded vs single-device fused Phi->MU step (PR 2 tentpole receipt).
+
+Times one fused ``phi_mu_step`` under the single-device blocked schedule
+and under the same schedule sharded over the available devices (real
+``shard_map`` + psum when >1 device, the bit-matching one-device
+emulation otherwise), and records the combine's collective bytes next to
+the analytic O(I_n * R) bound so the perf trajectory in BENCH_phi.json
+tracks both the speedup and the communication cost.
+
+Force a multi-device CPU run with::
+
+    PYTHONPATH=src python -m benchmarks.run --devices 4 --only sharded
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.core import sort_mode
+from repro.core.distributed import make_phi_mesh, sharded_combine_bytes
+from repro.core.layout import build_blocked_layout, shard_blocked_layout
+from repro.core.phi import (
+    _sharded_block_rows,
+    expand_to_layout,
+    expand_to_shards,
+    phi_mu_step,
+)
+from repro.core.pi import pi_rows
+from repro.perf.hlo import phi_combine_wire_bound
+from repro.perf.timing import bench_seconds
+
+from .common import QUICK_TENSORS, RANK, Reporter, geomean, get_tensor
+
+TOL = 1e-4
+
+# Per-nonzero arrays are jit arguments, never closure constants — XLA
+# embeds closed-over arrays as literals, distorting CPU timings ~10-50x.
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "strategy", "layout", "mesh")
+)
+def _step(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy, layout, mesh):
+    return phi_mu_step(rows, vals, pi, b, n_rows=n_rows, tol=TOL,
+                       strategy=strategy, layout=layout,
+                       vals_e=vals_e, pi_e=pi_e, mesh=mesh)
+
+
+def run(tensors=QUICK_TENSORS, iters: int = 3, devices: int | None = None):
+    rep = Reporter("sharded")
+    n_dev = devices if devices is not None else jax.device_count()
+    ratios = []
+    for name in tensors:
+        t, kt = get_tensor(name)
+        mv = sort_mode(t, 0)
+        pi = pi_rows(mv.sorted_idx, kt.factors, 0)
+        b = kt.factors[0] * kt.lam[None, :]
+        br = _sharded_block_rows(mv.n_rows, max(1, n_dev))
+        base = build_blocked_layout(np.asarray(mv.rows), mv.n_rows, 256, br)
+        n_shards = min(n_dev, base.n_row_blocks)
+        if n_shards < 1:
+            continue
+
+        vals_e, pi_e = expand_to_layout(base, mv.sorted_vals, pi)
+        t_single = bench_seconds(
+            _step, mv.rows, mv.sorted_vals, pi, b, vals_e, pi_e,
+            n_rows=mv.n_rows, strategy="blocked", layout=base, mesh=None,
+            iters=iters)
+
+        slayout = shard_blocked_layout(base, n_shards)
+        mesh = make_phi_mesh(n_shards) if jax.device_count() >= n_shards > 1 \
+            else None
+        vals_es, pi_es = expand_to_shards(slayout, mv.sorted_vals, pi)
+        t_shard = bench_seconds(
+            _step, mv.rows, mv.sorted_vals, pi, b, vals_es, pi_es,
+            n_rows=mv.n_rows, strategy="sharded", layout=slayout, mesh=mesh,
+            iters=iters)
+
+        ratios.append(t_single / t_shard)
+        rep.row(tensor=name, nnz=mv.nnz, n_rows=mv.n_rows,
+                devices=n_shards, real_mesh=mesh is not None,
+                single_s=round(t_single, 6), sharded_s=round(t_shard, 6),
+                speedup=round(t_single / t_shard, 3),
+                combine_bytes=sharded_combine_bytes(slayout, RANK),
+                combine_bound_bytes=round(phi_combine_wire_bound(
+                    mv.n_rows, RANK, n_shards, block_rows=br)))
+    rep.row(summary="geomean", devices=n_dev,
+            speedup=round(geomean(ratios), 3))
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

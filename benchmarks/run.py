@@ -2,11 +2,18 @@
 
   PYTHONPATH=src python -m benchmarks.run           # quick tier
   PYTHONPATH=src python -m benchmarks.run --only ppa,stream
+  PYTHONPATH=src python -m benchmarks.run --devices 4 --only sharded
+
+``--devices N`` forces N host CPU devices (via
+``--xla_force_host_platform_device_count``) so the sharded Phi benchmark
+exercises real shard_map + psum on one machine; it must be processed
+before jax initializes, which is why the bench modules are imported
+lazily inside :func:`main`.
 
 After the benches finish, the Phi-centric results (runtime breakdown,
-policy winners + autotuner regret, fused-vs-unfused speedups) are
-distilled into machine-readable ``BENCH_phi.json`` at the repo root so
-the perf trajectory is tracked across PRs.
+policy winners + autotuner regret, fused-vs-unfused and sharded
+speedups) are distilled into machine-readable ``BENCH_phi.json`` at the
+repo root so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -16,30 +23,35 @@ import os
 import time
 import traceback
 
-from . import (
-    bench_breakdown,
-    bench_fused,
-    bench_mttkrp,
-    bench_modes,
-    bench_policy,
-    bench_ppa,
-    bench_roofline,
-    bench_stream,
-)
-from .common import OUT_DIR
-
-ALL = {
-    "breakdown": bench_breakdown.run,  # Fig. 2
-    "roofline": bench_roofline.run,    # Figs. 3-4 / Eqs. 3-8
-    "ppa": bench_ppa.run,              # Exps. 1-2 / Figs. 5-7
-    "policy": bench_policy.run,        # Exps. 3-5 / Figs. 8-13
-    "fused": bench_fused.run,          # tentpole: fused MU fast path
-    "modes": bench_modes.run,          # Exp. 6 / Figs. 14-15
-    "stream": bench_stream.run,        # Exp. 7 / Figs. 16-17
-    "mttkrp": bench_mttkrp.run,        # Exp. 8 / Figs. 18-19
-}
-
 BENCH_PHI_PATH = "BENCH_phi.json"
+OUT_DIR = "experiments/bench"  # mirrors benchmarks.common.OUT_DIR (no jax)
+
+
+def _load_all():
+    """Import the bench modules (pulls in jax) after env flags are set."""
+    from . import (
+        bench_breakdown,
+        bench_fused,
+        bench_mttkrp,
+        bench_modes,
+        bench_policy,
+        bench_ppa,
+        bench_roofline,
+        bench_sharded,
+        bench_stream,
+    )
+
+    return {
+        "breakdown": bench_breakdown.run,  # Fig. 2
+        "roofline": bench_roofline.run,    # Figs. 3-4 / Eqs. 3-8
+        "ppa": bench_ppa.run,              # Exps. 1-2 / Figs. 5-7
+        "policy": bench_policy.run,        # Exps. 3-5 / Figs. 8-13
+        "fused": bench_fused.run,          # PR 1: fused MU fast path
+        "sharded": bench_sharded.run,      # PR 2: multi-device sharded Phi
+        "modes": bench_modes.run,          # Exp. 6 / Figs. 14-15
+        "stream": bench_stream.run,        # Exp. 7 / Figs. 16-17
+        "mttkrp": bench_mttkrp.run,        # Exp. 8 / Figs. 18-19
+    }
 
 
 def _load_rows(name: str):
@@ -54,17 +66,21 @@ def _load_rows(name: str):
 
 
 def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
-    """Distill experiments/bench/{breakdown,policy,fused}.json -> BENCH_phi.json.
+    """Distill experiments/bench/*.json -> BENCH_phi.json.
 
     Schema (all medians in seconds):
       breakdown: {tensor: {kernel: seconds, ..., phi_share: float}}
       policy:    {tensor: {default_s, best, best_s, heuristic, heuristic_regret,
                            autotune, autotune_s, autotune_regret}}
       fused:     {tensor: {strategy: {unfused_s, fused_s, speedup}}}
-      summary:   geomeans (policy speedup, autotune regret, fused speedup)
+      sharded:   {tensor: {devices, single_s, sharded_s, speedup,
+                           combine_bytes, combine_bound_bytes}}
+      summary:   geomeans (policy speedup, autotune regret, fused speedup,
+                           sharded speedup)
     """
-    out: dict = {"schema": 1, "generated_unix": time.time(),
-                 "breakdown": {}, "policy": {}, "fused": {}, "summary": {}}
+    out: dict = {"schema": 2, "generated_unix": time.time(),
+                 "breakdown": {}, "policy": {}, "fused": {}, "sharded": {},
+                 "summary": {}}
     found = False
 
     rows = _load_rows("breakdown")
@@ -107,6 +123,18 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
             elif r.get("summary") == "geomean":
                 out["summary"][f"fused_speedup_{r['strategy']}"] = r["speedup"]
 
+    rows = _load_rows("sharded")
+    if rows:
+        found = True
+        keep = ("devices", "real_mesh", "single_s", "sharded_s", "speedup",
+                "combine_bytes", "combine_bound_bytes")
+        for r in rows:
+            if "tensor" in r:
+                out["sharded"][r["tensor"]] = {k: r[k] for k in keep if k in r}
+            elif r.get("summary") == "geomean":
+                out["summary"]["sharded_speedup"] = r["speedup"]
+                out["summary"]["sharded_devices"] = r.get("devices")
+
     if not found:
         return None
     with open(path, "w") as f:
@@ -118,14 +146,28 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host CPU devices (sets XLA_FLAGS before "
+                         "jax init; records sharded-vs-single speedup)")
     args = ap.parse_args(argv)
-    names = list(ALL) if args.only == "all" else args.only.split(",")
+    if args.devices > 1:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" in flags:
+            print(f"[benchmarks] XLA_FLAGS already forces a device count; "
+                  f"ignoring --devices {args.devices}: {flags}", flush=True)
+        else:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}"
+            ).strip()
+    all_benches = _load_all()
+    names = list(all_benches) if args.only == "all" else args.only.split(",")
     t0 = time.time()
     failed = []
     for name in names:
         print(f"\n=== bench:{name} ===", flush=True)
         try:
-            ALL[name]()
+            all_benches[name]()
         except Exception:
             traceback.print_exc()
             failed.append(name)

@@ -12,10 +12,17 @@ Public API:
 """
 from .cpals import cp_als, fit_score, mttkrp
 from .cpapr import CPAPRConfig, CPAPRResult, cpapr_mu, kkt_violation, poisson_loglik
-from .layout import BlockedLayout, build_blocked_layout
+from .layout import (
+    BlockedLayout,
+    ShardedBlockedLayout,
+    build_blocked_layout,
+    shard_blocked_layout,
+)
 from .phi import (
+    ALL_PHI_STRATEGIES,
     PHI_STRATEGIES,
     expand_to_layout,
+    expand_to_shards,
     phi_flops_words,
     phi_from_rows,
     phi_mode,

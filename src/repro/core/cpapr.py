@@ -43,8 +43,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .layout import BlockedLayout, build_blocked_layout
-from .phi import expand_to_layout, phi_from_rows, phi_mu_step
+from .layout import (
+    BlockedLayout,
+    ShardedBlockedLayout,
+    build_blocked_layout,
+    shard_blocked_layout,
+)
+from .phi import (
+    _sharded_block_rows,
+    expand_to_layout,
+    expand_to_shards,
+    phi_from_rows,
+    phi_mu_step,
+)
 from .pi import pi_rows
 from .policy import PhiPolicy, default_policy
 from .sparse_tensor import KTensor, ModeView, SparseTensor, random_ktensor, sort_mode
@@ -68,6 +79,12 @@ class CPAPRConfig:
     # one (persistent user-level cache) is created when absent.
     autotuner: "object | None" = None
     track_loglik: bool = True
+    # strategy="sharded": row blocks split over this jax.sharding.Mesh with
+    # one psum Phi combine per inner iteration; None emulates on one device.
+    mesh: "object | None" = None
+    # Shard count for the emulated sharded path (ignored when mesh is set;
+    # defaults to jax.device_count()).
+    n_shards: "int | None" = None
 
 
 @dataclasses.dataclass
@@ -100,13 +117,16 @@ def _make_mode_update(
     mv: ModeView,
     cfg: CPAPRConfig,
     strategy: str,
-    layout: BlockedLayout | None,
+    layout: "BlockedLayout | ShardedBlockedLayout | None",
+    local_strategy: str = "blocked",
 ):
     """Jitted per-mode solve: returns (A_n', lam', kkt, n_inner)."""
 
     n = mv.mode
     n_rows = mv.n_rows
     uses_layout = strategy in ("blocked", "pallas")
+    sharded = strategy == "sharded"
+    mesh = cfg.mesh if sharded else None
 
     @jax.jit
     def update(factors: tuple, lam: jax.Array):
@@ -114,7 +134,9 @@ def _make_mode_update(
         pi = pi_rows(mv.sorted_idx, factors, n)
         # Hoisted layout expansion: one gather per mode update, shared by
         # the scooch Phi and every fused inner iteration below.
-        if uses_layout and layout is not None:
+        if sharded and layout is not None:
+            vals_e, pi_e = expand_to_shards(layout, mv.sorted_vals, pi)
+        elif uses_layout and layout is not None:
             vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
         else:
             vals_e = pi_e = None
@@ -131,6 +153,8 @@ def _make_mode_update(
             layout=layout,
             vals_e=vals_e,
             pi_e=pi_e,
+            mesh=mesh,
+            local_strategy=local_strategy,
         )
         s = jnp.where((a_n < cfg.kappa_tol) & (phi0 > 1.0), cfg.kappa, 0.0)
         b0 = (a_n + s) * lam[None, :]
@@ -154,6 +178,8 @@ def _make_mode_update(
                 layout=layout,
                 vals_e=vals_e,
                 pi_e=pi_e,
+                mesh=mesh,
+                local_strategy=local_strategy,
             )
             return (i + 1, b_new, viol)
 
@@ -170,17 +196,53 @@ def _make_mode_update(
     return update
 
 
+def _effective_shards(cfg: CPAPRConfig) -> int:
+    if cfg.mesh is not None:
+        from .distributed import mesh_device_count  # deferred: avoids cycle
+
+        return mesh_device_count(cfg.mesh)
+    if cfg.n_shards is not None:
+        return int(cfg.n_shards)
+    return int(jax.device_count())
+
+
+def _shard_mode_layout(mv: ModeView, pol: PhiPolicy, n_shards: int):
+    """(strategy, layout) for one sharded mode — warn + unsharded fallback
+    (preserving the policy's blocked/pallas flavour) when the blocking
+    leaves fewer row blocks than shards."""
+    base = build_blocked_layout(
+        np.asarray(mv.rows), mv.n_rows, pol.block_nnz, pol.block_rows
+    )
+    if n_shards > base.n_row_blocks:
+        import warnings
+
+        local = pol.strategy if pol.strategy in ("blocked", "pallas") \
+            else "blocked"
+        warnings.warn(
+            f"sharded CP-APR mode {mv.mode}: {n_shards} shards requested but "
+            f"the layout has only {base.n_row_blocks} row blocks; falling "
+            f"back to the single-device {local} path for this mode",
+            stacklevel=4,
+        )
+        return local, base
+    return "sharded", shard_blocked_layout(base, n_shards)
+
+
 def _resolve_mode_policies(
     cfg: CPAPRConfig,
     mvs: Sequence[ModeView],
     factors: Sequence[jax.Array],
     lam: jax.Array,
 ) -> tuple:
-    """Per-mode (strategy, layout, policy) from the config's policy field."""
+    """Per-mode (strategy, layout, policy, local_strategy) lists from the
+    config's policy field."""
     n_modes = len(mvs)
     strategies = [cfg.strategy] * n_modes
     layouts: list = [None] * n_modes
     policies: list = [None] * n_modes
+    locals_: list = ["blocked"] * n_modes
+    sharded = cfg.strategy == "sharded"
+    n_shards = _effective_shards(cfg) if sharded else 1
 
     if cfg.policy == "auto":
         from repro.perf.autotune import Autotuner  # deferred: avoids cycle
@@ -190,16 +252,53 @@ def _resolve_mode_policies(
             mv = mvs[n]
             pi_n = pi_rows(mv.sorted_idx, tuple(factors), n)
             b_n = factors[n] * lam[None, :]
-            pol = tuner.policy_for_mode(
-                mv.rows, mv.sorted_vals, pi_n, b_n, n_rows=mv.n_rows, rank=cfg.rank
-            )
-            policies[n] = pol
-            strategies[n] = pol.strategy
-            if pol.strategy in ("blocked", "pallas"):
-                layouts[n] = build_blocked_layout(
-                    np.asarray(mv.rows), mv.n_rows, pol.block_nnz, pol.block_rows
+            if sharded:
+                pol, _ = tuner.policy_for_sharded_mode(
+                    mv.rows, mv.sorted_vals, pi_n, b_n,
+                    n_rows=mv.n_rows, rank=cfg.rank, n_shards=n_shards,
                 )
-        return strategies, layouts, policies
+            else:
+                pol = tuner.policy_for_mode(
+                    mv.rows, mv.sorted_vals, pi_n, b_n,
+                    n_rows=mv.n_rows, rank=cfg.rank,
+                )
+            policies[n] = pol
+            if pol.strategy in ("blocked", "pallas"):
+                locals_[n] = pol.strategy
+                if sharded:
+                    strategies[n], layouts[n] = _shard_mode_layout(
+                        mv, pol, n_shards
+                    )
+                else:
+                    strategies[n] = pol.strategy
+                    layouts[n] = build_blocked_layout(
+                        np.asarray(mv.rows), mv.n_rows,
+                        pol.block_nnz, pol.block_rows,
+                    )
+            else:  # an unblocked winner has nothing to shard
+                strategies[n] = pol.strategy
+        return strategies, layouts, policies, locals_
+
+    if sharded:
+        for n in range(n_modes):
+            mv = mvs[n]
+            if isinstance(cfg.policy, PhiPolicy):
+                pol = cfg.policy
+            else:
+                pol = PhiPolicy(
+                    strategy="blocked",
+                    block_nnz=256,
+                    block_rows=_sharded_block_rows(mv.n_rows, n_shards),
+                )
+            policies[n] = pol
+            if pol.strategy in ("blocked", "pallas"):
+                locals_[n] = pol.strategy
+                strategies[n], layouts[n] = _shard_mode_layout(
+                    mv, pol, n_shards
+                )
+            else:  # an unblocked user policy has nothing to shard
+                strategies[n] = pol.strategy
+        return strategies, layouts, policies, locals_
 
     if cfg.strategy in ("blocked", "pallas"):
         pol = cfg.policy if isinstance(cfg.policy, PhiPolicy) else default_policy(
@@ -210,7 +309,7 @@ def _resolve_mode_policies(
             layouts[n] = build_blocked_layout(
                 np.asarray(mvs[n].rows), mvs[n].n_rows, pol.block_nnz, pol.block_rows
             )
-    return strategies, layouts, policies
+    return strategies, layouts, policies, locals_
 
 
 def cpapr_mu(
@@ -235,10 +334,12 @@ def cpapr_mu(
     mvs = list(mode_views) if mode_views is not None else [
         sort_mode(t, n) for n in range(n_modes)
     ]
-    strategies, layouts, policies = _resolve_mode_policies(cfg, mvs, factors, lam)
+    strategies, layouts, policies, locals_ = _resolve_mode_policies(
+        cfg, mvs, factors, lam
+    )
 
     updates = [
-        _make_mode_update(mvs[n], cfg, strategies[n], layouts[n])
+        _make_mode_update(mvs[n], cfg, strategies[n], layouts[n], locals_[n])
         for n in range(n_modes)
     ]
 

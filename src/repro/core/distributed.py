@@ -19,6 +19,8 @@ the tensor's dimensionality.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import warnings
 from functools import partial
 
 import jax
@@ -26,24 +28,205 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .layout import ShardedBlockedLayout
 from .sparse_tensor import KTensor, SparseTensor, random_ktensor, sort_mode
 
-__all__ = ["DistCPAPRConfig", "dist_cpapr_mu", "shard_mode_views"]
+__all__ = [
+    "DistCPAPRConfig",
+    "dist_cpapr_mu",
+    "shard_mode_views",
+    "make_phi_mesh",
+    "mesh_device_count",
+    "phi_sharded",
+    "phi_mu_sharded",
+    "sharded_combine_bytes",
+]
 
 
-def _shard_map(f, mesh, in_specs, out_specs):
-    """jax.shard_map moved out of jax.experimental (and check_rep was
-    renamed check_vma); support every combination by inspection."""
+def _resolve_shard_map():
+    """jax.shard_map moved out of jax.experimental; pick whichever exists."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map
+
+
+def _check_kwarg(sm) -> str:
+    """The replication-check kwarg name for this jax's shard_map
+    (``check_rep`` was renamed ``check_vma``)."""
     import inspect
 
-    if hasattr(jax, "shard_map"):
-        sm = jax.shard_map
-    else:
-        from jax.experimental.shard_map import shard_map as sm
     params = inspect.signature(sm).parameters
-    check_kw = "check_vma" if "check_vma" in params else "check_rep"
+    return "check_vma" if "check_vma" in params else "check_rep"
+
+
+def _shard_map(f, mesh, in_specs, out_specs, sm=None):
+    """shard_map with the replication check disabled, on any jax version."""
+    if sm is None:
+        sm = _resolve_shard_map()
     return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-              **{check_kw: False})
+              **{_check_kwarg(sm): False})
+
+
+# ---------------------------------------------------------------------------
+# Sharded blocked Phi: contiguous row-block shards + one psum combine
+# ---------------------------------------------------------------------------
+
+
+def mesh_device_count(mesh: Mesh) -> int:
+    """Total devices in a mesh (product over every axis)."""
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names] or [1]))
+
+
+def make_phi_mesh(n_shards: int, devices=None) -> Mesh:
+    """1-D ``("data",)`` mesh over the first ``n_shards`` devices."""
+    devices = list(devices if devices is not None else jax.devices())
+    if n_shards > len(devices):
+        raise ValueError(
+            f"n_shards={n_shards} exceeds available devices ({len(devices)})"
+        )
+    return Mesh(np.asarray(devices[:n_shards]), ("data",))
+
+
+def sharded_combine_bytes(slayout: ShardedBlockedLayout, rank: int,
+                          itemsize: int = 4) -> int:
+    """Bytes of the per-device psum operand for the sharded Phi combine."""
+    return slayout.combine_bytes(rank, itemsize)
+
+
+def _shard_partial(slayout: ShardedBlockedLayout, eps: float,
+                   local_strategy: str,
+                   vals_e, pi_e, local_rows, grid_rb, rb_start, b_buf):
+    """One shard's contribution to the global Phi window.
+
+    Computes the local blocked Phi over this shard's row-block range
+    (``local_strategy``: 'blocked' = jnp emulation, 'pallas' = the real
+    kernel) and places it at its global row offset inside a zero
+    ``buf_rows``-row buffer — the psum combine then sums disjoint windows
+    (plus zeros).
+    """
+    from .phi import _phi_blocked_core  # deferred: phi lazily imports us
+
+    br = slayout.block_rows
+    r = pi_e.shape[-1]
+    row0 = rb_start * br
+    b_win = jax.lax.dynamic_slice(
+        b_buf, (row0, 0), (slayout.n_rb_shard * br, r)
+    )
+    if local_strategy == "pallas":
+        from repro.kernels.phi import ops as phi_ops
+
+        phi_local = phi_ops.phi_blocked_arrays(
+            grid_rb,
+            vals_e,
+            local_rows,
+            pi_e,
+            b_win,
+            block_nnz=slayout.block_nnz,
+            block_rows=br,
+            eps=eps,
+        )
+    else:
+        phi_local = _phi_blocked_core(
+            vals_e,
+            pi_e,
+            local_rows,
+            grid_rb,
+            b_win,
+            block_nnz=slayout.block_nnz,
+            block_rows=br,
+            n_row_blocks=slayout.n_rb_shard,
+            eps=eps,
+        )
+    out = jnp.zeros((slayout.buf_rows, r), phi_local.dtype)
+    return jax.lax.dynamic_update_slice(out, phi_local, (row0, 0))
+
+
+def _pad_b_buf(slayout: ShardedBlockedLayout, b):
+    return jnp.pad(b, ((0, slayout.buf_rows - b.shape[0]), (0, 0)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("slayout", "eps", "mesh", "local_strategy")
+)
+def _phi_sharded_buf(slayout: ShardedBlockedLayout, vals_es, pi_es, b,
+                     eps: float, mesh: Mesh | None,
+                     local_strategy: str = "blocked"):
+    """Combined (buf_rows, R) Phi window, replicated on every device.
+
+    With a mesh: one shard per device inside ``shard_map`` and a single
+    psum over every mesh axis — the only collective of the inner MU
+    iteration.  Without a mesh: the identical schedule unrolled on one
+    device (shard loop + sum), numerically matching the psum combine.
+    """
+    lrows = jnp.asarray(slayout.local_rows)
+    grbs = jnp.asarray(slayout.grid_rb)
+    rb0 = jnp.asarray(slayout.rb_start)
+    b_buf = _pad_b_buf(slayout, b)
+    part = partial(_shard_partial, slayout, eps, local_strategy)
+
+    if mesh is None:
+        partials = [
+            part(vals_es[s], pi_es[s], lrows[s], grbs[s], rb0[s], b_buf)
+            for s in range(slayout.n_shards)
+        ]
+        return functools.reduce(jnp.add, partials)
+
+    axes = tuple(mesh.axis_names)
+
+    def local(vals_e, pi_e, lr, grb, r0, bb):
+        p = part(vals_e[0], pi_e[0], lr[0], grb[0], r0[0], bb)
+        return jax.lax.psum(p, axes)
+
+    fn = _shard_map(
+        local,
+        mesh,
+        in_specs=(P(axes, None), P(axes, None, None), P(axes, None),
+                  P(axes, None), P(axes), P(None, None)),
+        out_specs=P(None, None),
+    )
+    return fn(vals_es, pi_es, lrows, grbs, rb0, b_buf)
+
+
+def phi_sharded(slayout: ShardedBlockedLayout, vals_es, pi_es, b,
+                eps: float = 1e-10, mesh: Mesh | None = None,
+                local_strategy: str = "blocked"):
+    """Phi^(n) over row-block shards.  Inputs from ``expand_to_shards``."""
+    _validate_phi_mesh(slayout, mesh)
+    return _phi_sharded_buf(slayout, vals_es, pi_es, b, float(eps),
+                            mesh, local_strategy)[: slayout.n_rows]
+
+
+def phi_mu_sharded(slayout: ShardedBlockedLayout, vals_es, pi_es, b,
+                   eps: float = 1e-10, tol: float = 1e-4,
+                   mesh: Mesh | None = None,
+                   local_strategy: str = "blocked"):
+    """Fused sharded MU step: psum-combined Phi + replicated epilogue.
+
+    The combine buffer's padding rows hold B = Phi = 0, contributing
+    ``|min(0, 1)| = 0`` to the KKT max and nothing to ``B * Phi`` — the
+    same invariant as the single-device padded windows.
+    """
+    from .phi import _mu_epilogue  # deferred: phi lazily imports us
+
+    _validate_phi_mesh(slayout, mesh)
+    phi_buf = _phi_sharded_buf(slayout, vals_es, pi_es, b, float(eps), mesh,
+                               local_strategy)
+    b_buf = _pad_b_buf(slayout, b)
+    b_new, viol = _mu_epilogue(b_buf, phi_buf, tol)
+    return b_new[: slayout.n_rows], viol
+
+
+def _validate_phi_mesh(slayout: ShardedBlockedLayout, mesh: Mesh | None):
+    if mesh is None:
+        return
+    n_dev = mesh_device_count(mesh)
+    if n_dev != slayout.n_shards:
+        raise ValueError(
+            f"mesh has {n_dev} devices but the layout has "
+            f"{slayout.n_shards} shards"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,11 +337,42 @@ def _mode_update_dist(mesh: Mesh, cfg: DistCPAPRConfig, n: int, n_rows: int,
     return jax.jit(fn)
 
 
+def _single_device_mesh(mesh: Mesh) -> Mesh:
+    """A 1-device mesh with the same axis names (the warned fallback)."""
+    first = np.asarray(list(mesh.devices.flat)[:1])
+    return Mesh(first.reshape((1,) * len(mesh.axis_names)), mesh.axis_names)
+
+
+def _validate_dist_mesh(t: SparseTensor, rank: int, mesh: Mesh) -> Mesh:
+    """Validate shardability; fall back to one device with a warning.
+
+    Catches the configurations that otherwise die deep inside XLA with a
+    cryptic reshape/sharding error: a model axis that does not divide the
+    rank, or more data shards than nonzeros to spread over them.
+    """
+    problems = []
+    model = int(mesh.shape.get("model", 1))
+    if model > 1 and rank % model:
+        problems.append(f"rank={rank} not divisible by model axis ({model})")
+    n_data = int(np.prod([mesh.shape[a] for a in _data_axes(mesh)] or [1]))
+    if n_data > max(1, t.nnz):
+        problems.append(f"{n_data} data shards exceed nnz={t.nnz}")
+    if problems:
+        warnings.warn(
+            "dist_cpapr_mu: " + "; ".join(problems) +
+            "; falling back to a single-device mesh",
+            stacklevel=3,
+        )
+        return _single_device_mesh(mesh)
+    return mesh
+
+
 def dist_cpapr_mu(t: SparseTensor, rank: int, mesh: Mesh,
                   key=None, init: KTensor | None = None,
                   config: DistCPAPRConfig | None = None):
     """Distributed CP-APR MU.  Returns (KTensor, kkt_history)."""
     cfg = config or DistCPAPRConfig(rank=rank)
+    mesh = _validate_dist_mesh(t, rank, mesh)
     n_modes = t.ndim
     if init is None:
         key = key if key is not None else jax.random.PRNGKey(0)

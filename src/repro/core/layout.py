@@ -27,7 +27,13 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["BlockedLayout", "build_blocked_layout", "round_up"]
+__all__ = [
+    "BlockedLayout",
+    "ShardedBlockedLayout",
+    "build_blocked_layout",
+    "shard_blocked_layout",
+    "round_up",
+]
 
 
 def round_up(x: int, m: int) -> int:
@@ -123,6 +129,176 @@ def build_blocked_layout(
         n_rows=n_rows,
         n_rows_pad=n_rows_pad,
         n_grid=n_grid,
+        gather=gather,
+        valid=valid,
+        local_rows=local_rows,
+        grid_rb=grid_rb,
+        pad_fraction=float(pad_fraction),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multi-device sharding of the blocked schedule
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-static friendly
+class ShardedBlockedLayout:
+    """Blocked schedule partitioned into contiguous row-block shards.
+
+    ``grid_rb`` of the base layout is non-decreasing, so a contiguous row
+    block range owns a contiguous slice of the grid-step stream — each
+    shard is itself a valid (smaller) blocked schedule over its local row
+    window.  All per-shard arrays are padded to uniform static shapes so
+    one program runs on every device of a ``jax.sharding`` mesh; a single
+    psum over the mesh combines the per-shard partial Phi windows
+    (O(I_n * R) bytes, the MTTKRP communication lower bound regime).
+
+    Attributes:
+      base:         the unsharded global :class:`BlockedLayout`.
+      n_shards:     number of shards (mesh data-axis size).
+      n_grid_shard: uniform grid steps per shard (max over shards, padded).
+      n_rb_shard:   uniform row blocks per shard (max over shards, padded).
+      buf_rows:     rows of the combine buffer: >= n_rows_pad, sized so the
+                    highest shard window fits without index clamping.
+      rb_start:     (S,) int32 first global row block of each shard.
+      rb_count:     (S,) int32 real (unpadded) row blocks per shard.
+      shard_nnz:    (S,) int64 real nonzeros per shard (balance metric).
+      gather:       (S, n_grid_shard*block_nnz) int64 into the sorted stream.
+      valid:        (S, n_grid_shard*block_nnz) bool; False for padding.
+      local_rows:   (S, n_grid_shard*block_nnz) int32 row within row block.
+      grid_rb:      (S, n_grid_shard) int32 *shard-local* row block per grid
+                    step (non-decreasing, in [0, n_rb_shard)).
+      pad_fraction: overall padding overhead across all shards.
+    """
+
+    base: BlockedLayout
+    n_shards: int
+    n_grid_shard: int
+    n_rb_shard: int
+    buf_rows: int
+    rb_start: np.ndarray
+    rb_count: np.ndarray
+    shard_nnz: np.ndarray
+    gather: np.ndarray
+    valid: np.ndarray
+    local_rows: np.ndarray
+    grid_rb: np.ndarray
+    pad_fraction: float
+
+    @property
+    def block_nnz(self) -> int:
+        return self.base.block_nnz
+
+    @property
+    def block_rows(self) -> int:
+        return self.base.block_rows
+
+    @property
+    def n_rows(self) -> int:
+        return self.base.n_rows
+
+    @property
+    def n_rows_pad(self) -> int:
+        return self.base.n_rows_pad
+
+    def combine_bytes(self, rank: int, itemsize: int = 4) -> int:
+        """Bytes of one per-device combine buffer (the psum operand)."""
+        return self.buf_rows * rank * itemsize
+
+
+def _split_row_blocks(steps_per_rb: np.ndarray, n_shards: int) -> list:
+    """Contiguous row-block boundaries balancing grid steps per shard."""
+    n_rb = int(steps_per_rb.shape[0])
+    cum = np.cumsum(steps_per_rb)
+    total = int(cum[-1])
+    bounds = [0]
+    for s in range(1, n_shards):
+        j = int(np.searchsorted(cum, total * s / n_shards))
+        j = max(j, bounds[-1] + 1)  # every shard owns >= 1 row block
+        j = min(j, n_rb - (n_shards - s))  # leave room for later shards
+        bounds.append(j)
+    bounds.append(n_rb)
+    return bounds
+
+
+def shard_blocked_layout(layout: BlockedLayout, n_shards: int) -> ShardedBlockedLayout:
+    """Partition a blocked layout into ``n_shards`` contiguous row-block shards.
+
+    Raises ``ValueError`` when ``n_shards`` exceeds the number of row
+    blocks (each shard must own at least one); callers that want the
+    warn-and-fall-back behaviour use ``repro.core.distributed`` helpers.
+    """
+    n_shards = int(n_shards)
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    n_rb = layout.n_row_blocks
+    if n_shards > n_rb:
+        raise ValueError(
+            f"n_shards={n_shards} exceeds n_row_blocks={n_rb}; "
+            "use a smaller block_rows or fewer shards"
+        )
+    bn = layout.block_nnz
+    steps_per_rb = np.bincount(layout.grid_rb, minlength=n_rb)
+    bounds = _split_row_blocks(steps_per_rb, n_shards)
+
+    rb_start = np.asarray(bounds[:-1], np.int32)
+    rb_count = np.diff(np.asarray(bounds, np.int64)).astype(np.int32)
+    step_starts = np.concatenate([[0], np.cumsum(steps_per_rb)])
+    shard_steps = [
+        int(step_starts[bounds[s + 1]] - step_starts[bounds[s]])
+        for s in range(n_shards)
+    ]
+    n_rb_shard = int(rb_count.max())
+    # every padded (never-owned) local row block still gets one all-dummy
+    # grid step, so kernel output windows are always initialized
+    n_grid_shard = max(
+        shard_steps[s] + (n_rb_shard - int(rb_count[s])) for s in range(n_shards)
+    )
+
+    slot = n_grid_shard * bn
+    gather = np.zeros((n_shards, slot), np.int64)
+    valid = np.zeros((n_shards, slot), bool)
+    local_rows = np.zeros((n_shards, slot), np.int32)
+    grid_rb = np.zeros((n_shards, n_grid_shard), np.int32)
+    shard_nnz = np.zeros(n_shards, np.int64)
+
+    for s in range(n_shards):
+        g0 = int(step_starts[bounds[s]])
+        g1 = int(step_starts[bounds[s + 1]])
+        nsteps = g1 - g0
+        sl = slice(g0 * bn, g1 * bn)
+        gather[s, : nsteps * bn] = layout.gather[sl]
+        valid[s, : nsteps * bn] = layout.valid[sl]
+        local_rows[s, : nsteps * bn] = layout.local_rows[sl]
+        rb_local = layout.grid_rb[g0:g1] - bounds[s]
+        # dummy visits to padded row blocks, then trailing pad at the last
+        # local block — keeps grid_rb non-decreasing for revisit logic
+        tail = np.arange(int(rb_count[s]), n_rb_shard, dtype=np.int32)
+        pad_steps = n_grid_shard - nsteps - tail.size
+        grid_rb[s] = np.concatenate(
+            [rb_local, tail, np.full(pad_steps, n_rb_shard - 1, np.int32)]
+        )
+        shard_nnz[s] = int(np.count_nonzero(valid[s]))
+
+    br = layout.block_rows
+    buf_rows = max(
+        layout.n_rows_pad,
+        int((rb_start + n_rb_shard).max()) * br,
+    )
+    nnz = int(shard_nnz.sum())
+    total_slots = n_shards * slot
+    pad_fraction = 0.0 if nnz == 0 else 1.0 - nnz / max(total_slots, 1)
+
+    return ShardedBlockedLayout(
+        base=layout,
+        n_shards=n_shards,
+        n_grid_shard=n_grid_shard,
+        n_rb_shard=n_rb_shard,
+        buf_rows=buf_rows,
+        rb_start=rb_start,
+        rb_count=rb_count,
+        shard_nnz=shard_nnz,
         gather=gather,
         valid=valid,
         local_rows=local_rows,

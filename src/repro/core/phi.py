@@ -39,6 +39,7 @@ solver) can hoist the Pi gather out of the inner loop.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Sequence
 
@@ -46,7 +47,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .layout import BlockedLayout, build_blocked_layout, round_up
+from .layout import (
+    BlockedLayout,
+    ShardedBlockedLayout,
+    build_blocked_layout,
+    round_up,
+    shard_blocked_layout,
+)
 from .pi import pi_rows
 from .sparse_tensor import ModeView
 
@@ -56,10 +63,15 @@ __all__ = [
     "phi_mode",
     "phi_mu_step",
     "expand_to_layout",
+    "expand_to_shards",
     "PHI_STRATEGIES",
+    "ALL_PHI_STRATEGIES",
 ]
 
 PHI_STRATEGIES = ("scatter", "segment", "blocked", "pallas")
+# "sharded" = blocked schedule partitioned over a mesh data axis with a
+# psum Phi combine; emulated on one device when no mesh is given.
+ALL_PHI_STRATEGIES = PHI_STRATEGIES + ("sharded",)
 
 
 # ---------------------------------------------------------------------------
@@ -130,26 +142,42 @@ def _uniform_segment_sum(contrib: jax.Array, n_rows: int) -> jax.Array:
     return c.reshape(n_rows, group, r).sum(axis=1)
 
 
-def _phi_blocked_padded(layout: BlockedLayout, vals, pi, b, eps, perturb=None):
-    """Pure-jnp emulation of the Pallas schedule (same blocking, same math).
+def _phi_blocked_core(
+    vals,
+    pi,
+    local_rows,
+    grid_rb,
+    b_win,
+    *,
+    block_nnz: int,
+    block_rows: int,
+    n_row_blocks: int,
+    eps,
+    perturb=None,
+):
+    """Traced heart of the blocked schedule: arrays in, padded window out.
 
-    vals/pi here are already expanded to the padded layout order:
-      vals: (n_grid*block_nnz,)   pi: (n_grid*block_nnz, R)
+    All layout data arrives as (traced) arrays so the same expression runs
+    on a host-static :class:`BlockedLayout` *and* on per-shard slices
+    inside ``shard_map`` (where each device sees its own layout arrays).
 
-    Returns the *padded* (n_rows_pad, R) result, mirroring the kernel's
-    output window; :func:`_phi_blocked` slices to n_rows.
+      vals:       (n_grid*block_nnz,)   layout-expanded values
+      pi:         (n_grid*block_nnz, R) layout-expanded Pi rows
+      local_rows: (n_grid*block_nnz,)   row within the step's row block
+      grid_rb:    (n_grid,)             row block per grid step
+      b_win:      (n_row_blocks*block_rows, R) B window (padded)
+
+    Returns the padded (n_row_blocks*block_rows, R) Phi window.
     """
-    g, bn, br = layout.n_grid, layout.block_nnz, layout.block_rows
+    bn, br = block_nnz, block_rows
+    g = vals.shape[0] // bn
     r = pi.shape[1]
-    local_rows = jnp.asarray(layout.local_rows)
-    grid_rb = jnp.asarray(layout.grid_rb)
     if perturb == "perfect_reuse":
         local_rows = local_rows * 0
         grid_rb = grid_rb * 0
 
     # Gather B windows per grid step: (G, block_rows, R)
-    b_pad = jnp.pad(b, ((0, layout.n_rows_pad - b.shape[0]), (0, 0)))
-    b_blocks = b_pad.reshape(-1, br, r)[grid_rb]
+    b_blocks = b_win.reshape(n_row_blocks, br, r)[grid_rb]
 
     onehot = jax.nn.one_hot(
         local_rows.reshape(g, bn), br, dtype=pi.dtype
@@ -167,11 +195,34 @@ def _phi_blocked_padded(layout: BlockedLayout, vals, pi, b, eps, perturb=None):
     else:
         partial_blocks = jnp.einsum("gvb,gvr->gbr", onehot, contrib)
     # Cross-grid-step combine (the "output block revisit" in the kernel):
-    n_rb = layout.n_row_blocks
     phi_blocks = jax.ops.segment_sum(
-        partial_blocks, grid_rb, num_segments=n_rb, indices_are_sorted=True
+        partial_blocks, grid_rb, num_segments=n_row_blocks, indices_are_sorted=True
     )
-    return phi_blocks.reshape(n_rb * br, r)
+    return phi_blocks.reshape(n_row_blocks * br, r)
+
+
+def _phi_blocked_padded(layout: BlockedLayout, vals, pi, b, eps, perturb=None):
+    """Pure-jnp emulation of the Pallas schedule (same blocking, same math).
+
+    vals/pi here are already expanded to the padded layout order:
+      vals: (n_grid*block_nnz,)   pi: (n_grid*block_nnz, R)
+
+    Returns the *padded* (n_rows_pad, R) result, mirroring the kernel's
+    output window; :func:`_phi_blocked` slices to n_rows.
+    """
+    b_pad = jnp.pad(b, ((0, layout.n_rows_pad - b.shape[0]), (0, 0)))
+    return _phi_blocked_core(
+        vals,
+        pi,
+        jnp.asarray(layout.local_rows),
+        jnp.asarray(layout.grid_rb),
+        b_pad,
+        block_nnz=layout.block_nnz,
+        block_rows=layout.block_rows,
+        n_row_blocks=layout.n_row_blocks,
+        eps=eps,
+        perturb=perturb,
+    )
 
 
 def _phi_blocked(layout: BlockedLayout, vals, pi, b, eps, perturb=None):
@@ -198,6 +249,59 @@ def _resolve_layout(rows, n_rows, layout, vals, pi, vals_e, pi_e):
     return layout, vals_e, pi_e
 
 
+def _default_shard_count(mesh) -> int:
+    if mesh is not None:
+        from .distributed import mesh_device_count  # deferred: avoids cycle
+
+        return mesh_device_count(mesh)
+    return int(jax.device_count())
+
+
+def _sharded_block_rows(n_rows: int, n_shards: int) -> int:
+    """Default block_rows sized so >= ~4 row blocks land on every shard."""
+    target = max(8, n_rows // max(1, 4 * n_shards))
+    return int(2 ** np.clip(np.floor(np.log2(target)), 3, 8))
+
+
+def _resolve_sharded(rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e):
+    """Sharded layout + expansion, with the single-device fallback.
+
+    Returns ``(layout, vals_e, pi_e, mesh)``.  Normally ``layout`` is the
+    :class:`ShardedBlockedLayout`; when the shard count cannot be honoured
+    (fewer row blocks than devices) a warning fires and the *base*
+    :class:`BlockedLayout` comes back instead (with ``None`` expansions) —
+    callers detect that and run the unsharded path on it.  Mesh/layout
+    shard-count agreement is validated downstream by
+    ``repro.core.distributed``.
+    """
+    if layout is not None and not isinstance(layout, ShardedBlockedLayout):
+        raise TypeError(
+            "strategy='sharded' needs a ShardedBlockedLayout "
+            f"(got {type(layout).__name__}); use shard_blocked_layout()"
+        )
+    if layout is None:
+        n_shards = _default_shard_count(mesh)
+        base = build_blocked_layout(
+            np.asarray(rows),
+            n_rows,
+            block_nnz=256,
+            block_rows=_sharded_block_rows(n_rows, n_shards),
+        )
+        if n_shards > base.n_row_blocks:
+            warnings.warn(
+                f"sharded Phi: {n_shards} shards requested but layout has "
+                f"only {base.n_row_blocks} row blocks; falling back to the "
+                "single-device blocked path",
+                stacklevel=3,
+            )
+            return base, None, None, None
+        layout = shard_blocked_layout(base, n_shards)
+        vals_e = pi_e = None  # any pre-expansion matched a different layout
+    if vals_e is None or pi_e is None:
+        vals_e, pi_e = expand_to_shards(layout, vals, pi)
+    return layout, vals_e, pi_e, mesh
+
+
 def phi_from_rows(
     rows: jax.Array,
     vals: jax.Array,
@@ -206,16 +310,22 @@ def phi_from_rows(
     n_rows: int,
     eps: float = 1e-10,
     strategy: str = "segment",
-    layout: BlockedLayout | None = None,
+    layout: "BlockedLayout | ShardedBlockedLayout | None" = None,
     perturb: str | None = None,
     vals_e: jax.Array | None = None,
     pi_e: jax.Array | None = None,
+    mesh=None,
+    local_strategy: str = "blocked",
 ) -> jax.Array:
     """Phi^(n) from pre-gathered Pi rows.  ``rows`` sorted unless 'scatter'.
 
     For ``blocked``/``pallas``, optional ``vals_e``/``pi_e`` are the
     layout-expanded arrays (see :func:`expand_to_layout`); pass them to
-    skip per-call re-expansion.
+    skip per-call re-expansion.  For ``sharded``, ``layout`` is a
+    :class:`ShardedBlockedLayout`, ``vals_e``/``pi_e`` come from
+    :func:`expand_to_shards`, and ``mesh`` (optional) places the shards on
+    real devices with a psum combine — without a mesh the same schedule is
+    emulated on one device.
     """
     eps = float(eps)
     if strategy == "scatter":
@@ -234,6 +344,23 @@ def phi_from_rows(
             rows, n_rows, layout, vals, pi, vals_e, pi_e
         )
         return phi_ops.phi_blocked(layout, vals_e, pi_e, b, float(eps))[:n_rows]
+    if strategy == "sharded":
+        if perturb is not None:
+            raise ValueError("perturb is not supported for strategy='sharded'")
+        from .distributed import phi_sharded  # deferred: avoids import cycle
+
+        slayout, vals_e, pi_e, mesh = _resolve_sharded(
+            rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e
+        )
+        if not isinstance(slayout, ShardedBlockedLayout):
+            # fewer row blocks than shards: warned fallback on the base
+            # layout, keeping the requested local compute flavour
+            return phi_from_rows(
+                rows, vals, pi, b, n_rows, eps=eps,
+                strategy=local_strategy, layout=slayout,
+            )
+        return phi_sharded(slayout, vals_e, pi_e, b, eps, mesh=mesh,
+                           local_strategy=local_strategy)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
@@ -256,9 +383,11 @@ def phi_mu_step(
     eps: float = 1e-10,
     tol: float = 1e-4,
     strategy: str = "segment",
-    layout: BlockedLayout | None = None,
+    layout: "BlockedLayout | ShardedBlockedLayout | None" = None,
     vals_e: jax.Array | None = None,
     pi_e: jax.Array | None = None,
+    mesh=None,
+    local_strategy: str = "blocked",
 ) -> tuple:
     """One fused CP-APR inner MU step: ``(B', viol)`` in a single pass.
 
@@ -268,6 +397,9 @@ def phi_mu_step(
     inside the kernel on the last visit to each row block — the Phi window
     never round-trips through HBM; for the jnp strategies the whole step
     is one traced expression so XLA fuses the epilogue into the reduction.
+    For ``sharded`` the per-device Phi partials meet in a single psum over
+    the mesh and the epilogue runs on the replicated combined window — the
+    fused fast path survives sharding with exactly one collective.
     This is the entry point ``cpapr_mu``'s inner ``lax.while_loop`` calls.
     """
     eps = float(eps)
@@ -297,6 +429,21 @@ def phi_mu_step(
         )
         mu_pad, viol = phi_ops.phi_mu_blocked(layout, vals_e, pi_e, b, eps)
         return jnp.where(viol > tol, mu_pad[:n_rows], b), viol
+    if strategy == "sharded":
+        from .distributed import phi_mu_sharded  # deferred: avoids cycle
+
+        slayout, vals_e, pi_e, mesh = _resolve_sharded(
+            rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e
+        )
+        if not isinstance(slayout, ShardedBlockedLayout):
+            # fewer row blocks than shards: warned fallback on the base
+            # layout, keeping the requested local compute flavour
+            return phi_mu_step(
+                rows, vals, pi, b, n_rows, eps=eps, tol=tol,
+                strategy=local_strategy, layout=slayout,
+            )
+        return phi_mu_sharded(slayout, vals_e, pi_e, b, eps, tol, mesh=mesh,
+                              local_strategy=local_strategy)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
@@ -304,8 +451,28 @@ def expand_to_layout(layout: BlockedLayout, vals, pi):
     """Expand sorted per-nonzero arrays into the padded layout order."""
     gather = jnp.asarray(layout.gather)
     valid = jnp.asarray(layout.valid)
+    if vals.shape[0] == 0:  # gather on a 0-row operand is ill-formed
+        return (jnp.zeros(gather.shape, vals.dtype),
+                jnp.zeros(gather.shape + (pi.shape[1],), pi.dtype))
     vals_e = jnp.where(valid, vals[gather], 0.0)
     pi_e = jnp.where(valid[:, None], pi[gather], 0.0)
+    return vals_e, pi_e
+
+
+def expand_to_shards(slayout: ShardedBlockedLayout, vals, pi):
+    """Expand sorted per-nonzero arrays into per-shard padded layout order.
+
+    Returns ``vals_e`` of shape (S, n_grid_shard*block_nnz) and ``pi_e`` of
+    shape (S, n_grid_shard*block_nnz, R); the leading axis is the shard
+    (mesh data) axis.
+    """
+    gather = jnp.asarray(slayout.gather)
+    valid = jnp.asarray(slayout.valid)
+    if vals.shape[0] == 0:  # gather on a 0-row operand is ill-formed
+        return (jnp.zeros(gather.shape, vals.dtype),
+                jnp.zeros(gather.shape + (pi.shape[1],), pi.dtype))
+    vals_e = jnp.where(valid, vals[gather], 0.0)
+    pi_e = jnp.where(valid[..., None], pi[gather], 0.0)
     return vals_e, pi_e
 
 

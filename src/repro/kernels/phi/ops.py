@@ -17,7 +17,7 @@ from repro.core.layout import BlockedLayout, round_up
 
 from .kernel import phi_mu_pallas_call, phi_pallas_call
 
-__all__ = ["phi_blocked", "phi_mu_blocked"]
+__all__ = ["phi_blocked", "phi_blocked_arrays", "phi_mu_blocked"]
 
 
 def _default_interpret() -> bool:
@@ -39,21 +39,60 @@ def _pad_inputs(layout: BlockedLayout, vals_e, pi_e, b):
     return vals2, lrow2, pi_p, b_p, grid_rb, r, r_pad
 
 
+def phi_blocked_arrays(
+    grid_rb: jax.Array,
+    vals_e: jax.Array,
+    local_rows: jax.Array,
+    pi_e: jax.Array,
+    b_win: jax.Array,
+    *,
+    block_nnz: int,
+    block_rows: int,
+    eps: float,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pallas Phi on raw (possibly traced) layout arrays.
+
+    Unlike :func:`phi_blocked`, no host-static :class:`BlockedLayout` is
+    needed — grid/row metadata arrive as arrays, so this entry point works
+    on per-shard slices inside ``shard_map`` where each device carries its
+    own layout data.  ``b_win`` is the (n_rows_pad, R) B window; returns
+    the padded (n_rows_pad, R) Phi window.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    r = pi_e.shape[1]
+    r_pad = round_up(r, 128)
+    vals2 = vals_e.reshape(-1, 1).astype(jnp.float32)
+    lrow2 = local_rows.astype(jnp.int32).reshape(-1, 1)
+    pi_p = jnp.pad(pi_e.astype(jnp.float32), ((0, 0), (0, r_pad - r)))
+    b_p = jnp.pad(b_win.astype(jnp.float32), ((0, 0), (0, r_pad - r)))
+    call = phi_pallas_call(
+        n_grid=grid_rb.shape[0],
+        block_nnz=block_nnz,
+        block_rows=block_rows,
+        n_rows_pad=b_win.shape[0],
+        rank_pad=r_pad,
+        eps=float(eps),
+        interpret=bool(interpret),
+    )
+    return call(grid_rb.astype(jnp.int32), vals2, lrow2, pi_p, b_p)[:, :r]
+
+
 @functools.partial(jax.jit, static_argnames=("layout", "eps", "interpret"))
 def _run(layout: BlockedLayout, vals_e, pi_e, b, eps: float, interpret: bool):
-    vals2, lrow2, pi_p, b_p, grid_rb, r, r_pad = _pad_inputs(layout, vals_e, pi_e, b)
-
-    call = phi_pallas_call(
-        n_grid=layout.n_grid,
+    b_pad = jnp.pad(b, ((0, layout.n_rows_pad - b.shape[0]), (0, 0)))
+    return phi_blocked_arrays(
+        jnp.asarray(layout.grid_rb, jnp.int32),
+        vals_e,
+        jnp.asarray(layout.local_rows, jnp.int32),
+        pi_e,
+        b_pad,
         block_nnz=layout.block_nnz,
         block_rows=layout.block_rows,
-        n_rows_pad=layout.n_rows_pad,
-        rank_pad=r_pad,
         eps=eps,
         interpret=interpret,
     )
-    phi_pad = call(grid_rb, vals2, lrow2, pi_p, b_p)
-    return phi_pad[:, :r]
 
 
 @functools.partial(jax.jit, static_argnames=("layout", "eps", "interpret"))

@@ -33,6 +33,7 @@ import tempfile
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.layout import build_blocked_layout
@@ -54,8 +55,19 @@ def default_cache_path() -> str:
     return os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json")
 
 
-def policy_key(nnz: int, n_rows: int, rank: int, platform: str) -> str:
-    return f"{platform}/nnz={nnz}/rows={n_rows}/rank={rank}"
+def policy_key(
+    nnz: int, n_rows: int, rank: int, platform: str, n_shards: int = 1
+) -> str:
+    """Cache key for one tuning problem.
+
+    ``n_shards`` > 1 appends a ``/shards=N`` dimension, so sharded-mode
+    entries never collide with (or shadow) the single-device entries that
+    earlier versions wrote without the dimension.
+    """
+    base = f"{platform}/nnz={nnz}/rows={n_rows}/rank={rank}"
+    if n_shards in (None, 1):
+        return base
+    return f"{base}/shards={n_shards}"
 
 
 def _policy_to_json(p: PhiPolicy) -> dict:
@@ -254,21 +266,10 @@ class Autotuner:
             iters=self.iters,
         )
 
-    # -- public API -------------------------------------------------------
-    def policy_for_mode(
-        self,
-        rows,
-        vals,
-        pi,
-        b,
-        n_rows: int,
-        rank: int,
-    ) -> PhiPolicy:
-        """Tuned policy for one mode's Phi problem (cached by problem key)."""
-        platform = self.platform or jax.default_backend()
+    def _tune_key(self, key: str, rows, vals, pi, b, n_rows: int,
+                  rank: int, platform: str) -> PhiPolicy:
+        """Cache-or-tune one problem under an explicit cache key."""
         nnz = int(rows.shape[0])
-        key = policy_key(nnz, n_rows, rank, platform)
-
         # A heuristic placeholder (stored when measurement was disabled or
         # every probe failed) does not satisfy a measuring tuner — re-tune
         # it instead of pinning an unmeasured policy forever.
@@ -301,3 +302,87 @@ class Autotuner:
             )
         self.cache.store(key, best_p, best_s, source)
         return best_p
+
+    # -- public API -------------------------------------------------------
+    def policy_for_mode(
+        self,
+        rows,
+        vals,
+        pi,
+        b,
+        n_rows: int,
+        rank: int,
+    ) -> PhiPolicy:
+        """Tuned policy for one mode's Phi problem (cached by problem key)."""
+        platform = self.platform or jax.default_backend()
+        key = policy_key(int(rows.shape[0]), n_rows, rank, platform)
+        return self._tune_key(key, rows, vals, pi, b, n_rows, rank, platform)
+
+    def policy_for_sharded_mode(
+        self,
+        rows,
+        vals,
+        pi,
+        b,
+        n_rows: int,
+        rank: int,
+        n_shards: int,
+    ) -> tuple:
+        """Tuned policies for one mode split into ``n_shards`` row shards.
+
+        Each shard's sub-problem (its contiguous slice of the sorted
+        stream, rebased to its local row window) is tuned and cached under
+        a shard-dimension key.  Because one program must run on every mesh
+        device, the per-shard winners are reconciled to a single uniform
+        policy — the winner of the largest-nnz shard, which dominates the
+        critical path.  Returns ``(uniform_policy, per_shard_policies)``;
+        shards that own no nonzeros get ``None`` in the per-shard list.
+        """
+        platform = self.platform or jax.default_backend()
+        rows_np = np.asarray(rows)
+        nnz = int(rows_np.shape[0])
+        if n_shards <= 1 or nnz == 0:
+            pol = self.policy_for_mode(rows, vals, pi, b, n_rows=n_rows,
+                                       rank=rank)
+            return pol, [pol] * max(1, n_shards)
+
+        # contiguous nnz-balanced cuts, snapped forward to row boundaries
+        # (a row never spans shards)
+        cuts = [0]
+        for s in range(1, n_shards):
+            p = s * nnz // n_shards
+            while 0 < p < nnz and rows_np[p] == rows_np[p - 1]:
+                p += 1
+            cuts.append(max(p, cuts[-1]))
+        cuts.append(nnz)
+
+        per_shard: list = []
+        best, best_nnz = None, -1
+        for s in range(n_shards):
+            c0, c1 = cuts[s], cuts[s + 1]
+            if c1 <= c0:
+                per_shard.append(None)
+                continue
+            row_lo = int(rows_np[c0])
+            row_hi = int(rows_np[c1 - 1]) + 1
+            key = policy_key(c1 - c0, row_hi - row_lo, rank, platform,
+                             n_shards=n_shards)
+            pol = self._tune_key(
+                key,
+                jnp.asarray(rows_np[c0:c1] - row_lo),
+                vals[c0:c1],
+                pi[c0:c1],
+                b[row_lo:row_hi],
+                row_hi - row_lo,
+                rank,
+                platform,
+            )
+            per_shard.append(pol)
+            if c1 - c0 > best_nnz:
+                best, best_nnz = pol, c1 - c0
+        if best is None:  # every shard empty (cannot happen when nnz > 0)
+            best = heuristic_policy(
+                nnz, n_rows, rank, vmem_budget=self.vmem_budget,
+                platform=platform,
+            )
+        return best, per_shard

@@ -20,7 +20,13 @@ import dataclasses
 import re
 from collections import defaultdict
 
-__all__ = ["CollectiveStats", "collective_stats", "shape_bytes"]
+__all__ = [
+    "CollectiveStats",
+    "allreduce_wire_bytes",
+    "collective_stats",
+    "phi_combine_wire_bound",
+    "shape_bytes",
+]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
@@ -80,6 +86,36 @@ def _wire_factor(kind: str, n: int) -> float:
         "all-to-all": ring,
         "collective-permute": 1.0,
     }[kind]
+
+
+def allreduce_wire_bytes(buffer_bytes: float, n_participants: int) -> float:
+    """Ring all-reduce per-chip wire traffic for one ``buffer_bytes`` psum."""
+    n = n_participants
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * buffer_bytes
+
+
+def phi_combine_wire_bound(
+    n_rows: int,
+    rank: int,
+    n_shards: int,
+    block_rows: int = 256,
+    itemsize: int = 4,
+) -> float:
+    """Analytic O(I_n * R) upper bound on the sharded-Phi combine.
+
+    The combine is one psum of the (buf_rows, R) partial-Phi buffer.
+    ``buf_rows`` is I_n padded to the row-block grid plus at most one
+    (padded) shard window of slack, and a shard window never exceeds the
+    global window — so buf_rows <= 2 * n_rows_pad and the wire cost is
+    bounded by a ring all-reduce of ``2 * n_rows_pad * R`` elements.  This
+    is the bound the Ballard et al. MTTKRP communication analysis puts on
+    the factor-matrix combine: independent of nnz and of shard count (up
+    to the ring factor).
+    """
+    n_rows_pad = -(-max(n_rows, block_rows) // block_rows) * block_rows
+    return allreduce_wire_bytes(2 * n_rows_pad * rank * itemsize, n_shards)
 
 
 @dataclasses.dataclass

@@ -1,11 +1,46 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests see 1 device;
-only tests/test_distributed.py (its own process via pytest-forked? no —
-it uses the devices it finds) and the dry-run set device counts."""
+multi-device coverage comes from (a) subprocess tests that force
+``--xla_force_host_platform_device_count`` before jax init (see
+test_distributed.py / test_sharded_phi.py) and (b) in-process tests
+marked ``multidevice``, auto-skipped below when only one device is
+present and no XLA_FLAGS override was given."""
+import os
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core.sparse_tensor import random_poisson_tensor
+
+
+def dense_phi_reference(rows, vals, pi, b, n_rows, eps=1e-10):
+    """Float64 numpy Phi oracle shared by the equivalence and property
+    suites: Phi[i] += (x / max(<B[i], pi>, eps)) * pi."""
+    rows = np.asarray(rows)
+    vals = np.asarray(vals, np.float64)
+    pi = np.asarray(pi, np.float64)
+    b = np.asarray(b, np.float64)
+    s = np.sum(b[rows] * pi, axis=1)
+    w = vals / np.maximum(s, eps)
+    phi = np.zeros((n_rows, pi.shape[1]))
+    np.add.at(phi, rows, w[:, None] * pi)
+    return phi
+
+
+def pytest_collection_modifyitems(config, items):
+    """Auto-skip ``multidevice`` tests on single-device runs (tier-1 safe)."""
+    if jax.device_count() > 1:
+        return
+    if "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""):
+        return  # the user explicitly forced a device count; let tests run
+    skip = pytest.mark.skip(
+        reason="needs >1 jax device; run with "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=N"
+    )
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,192 @@
+"""repro.perf.autotune cache semantics: env-var store location, corrupt /
+partial JSON recovery, heuristic-placeholder re-tune, and the PR-2
+shard-dimension keys coexisting with PR-1-format entries."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import sort_mode
+from repro.core.pi import pi_rows
+from repro.core.policy import PhiPolicy
+from repro.perf.autotune import (
+    Autotuner,
+    AutotuneCache,
+    default_cache_path,
+    policy_key,
+)
+
+
+def _mode_problem(small_tensor, mode=0):
+    t, kt = small_tensor
+    mv = sort_mode(t, mode)
+    pi = pi_rows(mv.sorted_idx, kt.factors, mode)
+    b = kt.factors[mode] * kt.lam[None, :]
+    return mv, pi, b
+
+
+# ---------------------------------------------------------------------------
+# $REPRO_AUTOTUNE_CACHE round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_env_var_cache_path_roundtrip(small_tensor, tmp_path, monkeypatch):
+    """$REPRO_AUTOTUNE_CACHE redirects the default store, and a tuner built
+    without an explicit path persists + reloads winners through it."""
+    path = str(tmp_path / "env_cache.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    assert default_cache_path() == path
+
+    mv, pi, b = _mode_problem(small_tensor)
+    t1 = Autotuner(measure=False)  # no cache_path: env var decides
+    pol = t1.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                             n_rows=mv.n_rows, rank=4)
+    assert os.path.exists(path)
+    t2 = Autotuner(measure=False)
+    pol2 = t2.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                              n_rows=mv.n_rows, rank=4)
+    assert pol2 == pol and t2.n_hits == 1 and t2.n_searches == 0
+
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE")
+    assert default_cache_path().endswith(os.path.join("repro", "autotune.json"))
+
+
+# ---------------------------------------------------------------------------
+# corrupted / partial JSON store recovery
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("content", [
+    "{not json",                                     # syntactically corrupt
+    "[]",                                            # wrong top-level type
+    '{"version": 99, "entries": {"k": {}}}',         # future version
+    '{"entries": {"k": {}}}',                        # missing version
+])
+def test_cache_load_recovers_from_bad_files(tmp_path, content):
+    path = str(tmp_path / "cache.json")
+    with open(path, "w") as f:
+        f.write(content)
+    c = AutotuneCache(path)
+    assert c.entries == {}
+    # and the store stays usable: a write round-trips cleanly
+    key = policy_key(10, 5, 4, "cpu")
+    c.store(key, PhiPolicy(strategy="segment"), 0.5, "grid")
+    assert AutotuneCache(path).lookup(key) == PhiPolicy(strategy="segment")
+
+
+def test_cache_lookup_tolerates_partial_entries(tmp_path):
+    """Valid JSON whose individual entries are malformed: lookup returns
+    None for those keys instead of raising, and intact keys still hit."""
+    path = str(tmp_path / "cache.json")
+    good = policy_key(100, 10, 8, "cpu")
+    payload = {
+        "version": AutotuneCache.VERSION,
+        "entries": {
+            "no-policy": {"seconds": 0.1, "source": "grid"},
+            "bad-fields": {"policy": {"bogus_field": 1}, "source": "grid"},
+            good: {"policy": {"strategy": "blocked", "block_nnz": 128,
+                              "block_rows": 64, "gather_mode": "prefetch"},
+                   "seconds": 0.01, "source": "grid", "tuned_at": 0},
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    c = AutotuneCache(path)
+    assert c.lookup("no-policy") is None
+    assert c.lookup("bad-fields") is None
+    assert c.lookup("missing-entirely") is None
+    assert c.lookup(good) == PhiPolicy(strategy="blocked", block_nnz=128,
+                                       block_rows=64)
+
+
+# ---------------------------------------------------------------------------
+# heuristic placeholder re-tune semantics
+# ---------------------------------------------------------------------------
+
+
+def test_lookup_source_filter_gates_heuristic_placeholders(tmp_path):
+    """source-filtered lookup is the re-tune mechanism: a 'heuristic'
+    placeholder never satisfies a lookup demanding 'grid'."""
+    path = str(tmp_path / "cache.json")
+    c = AutotuneCache(path)
+    key = policy_key(50, 9, 4, "cpu")
+    c.store(key, PhiPolicy(strategy="segment"), float("inf"), "heuristic")
+    assert c.lookup(key) is not None           # unfiltered: placeholder hits
+    assert c.lookup(key, source="grid") is None  # measuring tuner: re-tune
+    c.store(key, PhiPolicy(strategy="blocked"), 0.002, "grid")
+    assert c.lookup(key, source="grid") == PhiPolicy(strategy="blocked")
+
+
+def test_measuring_tuner_retunes_sharded_placeholder(small_tensor, tmp_path):
+    """The placeholder re-tune also applies per shard-dimension key."""
+    mv, pi, b = _mode_problem(small_tensor)
+    path = str(tmp_path / "cache.json")
+    t1 = Autotuner(cache_path=path, measure=False)
+    t1.policy_for_sharded_mode(mv.rows, mv.sorted_vals, pi, b,
+                               n_rows=mv.n_rows, rank=4, n_shards=2)
+    assert all(e["source"] == "heuristic" for e in t1.cache.entries.values())
+    t2 = Autotuner(cache_path=path, iters=1, warmup=1)  # measuring
+    t2.policy_for_sharded_mode(mv.rows, mv.sorted_vals, pi, b,
+                               n_rows=mv.n_rows, rank=4, n_shards=2)
+    assert t2.n_hits == 0 and t2.n_grid_searches == 2
+    assert all(e["source"] == "grid" for e in t2.cache.entries.values())
+
+
+# ---------------------------------------------------------------------------
+# shard-dimension keys vs PR-1-format entries
+# ---------------------------------------------------------------------------
+
+
+def test_policy_key_shard_dimension_backward_compatible():
+    """n_shards=1 reproduces the PR-1 key format exactly; n_shards>1 is a
+    distinct keyspace."""
+    base = policy_key(1000, 50, 8, "cpu")
+    assert base == "cpu/nnz=1000/rows=50/rank=8"
+    assert policy_key(1000, 50, 8, "cpu", n_shards=1) == base
+    assert policy_key(1000, 50, 8, "cpu", n_shards=None) == base
+    k4 = policy_key(1000, 50, 8, "cpu", n_shards=4)
+    assert k4 == base + "/shards=4"
+    assert k4 != policy_key(1000, 50, 8, "cpu", n_shards=2)
+
+
+def test_shard_keys_do_not_collide_with_single_device_entries(
+        small_tensor, tmp_path):
+    """Tuning the sharded problem never shadows or overwrites the
+    single-device entry for the same (nnz, rows, rank), and vice versa."""
+    mv, pi, b = _mode_problem(small_tensor)
+    path = str(tmp_path / "cache.json")
+    tuner = Autotuner(cache_path=path, measure=False)
+    single = tuner.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                                   n_rows=mv.n_rows, rank=4)
+    n_before = len(tuner.cache.entries)
+    uniform, per_shard = tuner.policy_for_sharded_mode(
+        mv.rows, mv.sorted_vals, pi, b, n_rows=mv.n_rows, rank=4, n_shards=3)
+    assert len(per_shard) == 3 and all(p is not None for p in per_shard)
+    assert isinstance(uniform, PhiPolicy)
+    # single-device key untouched; three new shard-keyed entries appeared
+    single_key = policy_key(mv.nnz, mv.n_rows, 4,
+                            tuner.platform or jax.default_backend())
+    assert single_key in tuner.cache.entries
+    shard_keys = [k for k in tuner.cache.entries if k.endswith("/shards=3")]
+    assert len(shard_keys) == 3
+    assert len(tuner.cache.entries) == n_before + 3
+    # a fresh single-device lookup still hits the original entry
+    tuner2 = Autotuner(cache_path=path, measure=False)
+    assert tuner2.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                                  n_rows=mv.n_rows, rank=4) == single
+    assert tuner2.n_hits == 1
+
+
+def test_sharded_tuning_handles_degenerate_splits(small_tensor, tmp_path):
+    """All nonzeros in one row: later shards are empty (None) and the
+    uniform policy comes from the one populated shard."""
+    mv, pi, b = _mode_problem(small_tensor)
+    rows = np.zeros(mv.nnz, np.int32)  # hub: a single row owns everything
+    tuner = Autotuner(cache_path=str(tmp_path / "c.json"), measure=False)
+    uniform, per_shard = tuner.policy_for_sharded_mode(
+        rows, mv.sorted_vals, pi, b, n_rows=mv.n_rows, rank=4, n_shards=3)
+    assert per_shard[0] is not None
+    assert per_shard[1] is None and per_shard[2] is None
+    assert uniform == per_shard[0]

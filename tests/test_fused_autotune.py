@@ -145,6 +145,30 @@ def test_grid_search_records_failure_reason():
     assert "bad block shape" in ranked[1][2]
 
 
+def test_grid_search_results_are_3_tuples_sorted():
+    """Regression: PR 1 changed grid_search results from (policy, seconds)
+    pairs to (policy, seconds, error) 3-tuples sorted fastest-first, with
+    error=None on success and the failure reason string on pruned points."""
+    pols = [PhiPolicy(strategy="segment"), PhiPolicy(strategy="scatter"),
+            PhiPolicy(strategy="blocked")]
+    times = {"segment": 0.5, "scatter": 0.1}
+
+    def time_fn(p):
+        if p.strategy == "blocked":
+            raise ValueError("nope")
+        return times[p.strategy]
+
+    ranked = grid_search(time_fn, pols)
+    assert len(ranked) == len(pols)
+    assert all(isinstance(r, tuple) and len(r) == 3 for r in ranked)
+    secs = [r[1] for r in ranked]
+    assert secs == sorted(secs)
+    assert [r[0].strategy for r in ranked] == ["scatter", "segment", "blocked"]
+    assert ranked[0][2] is None and ranked[1][2] is None
+    assert ranked[2][1] == float("inf")
+    assert "ValueError" in ranked[2][2] and "nope" in ranked[2][2]
+
+
 def test_grid_search_propagates_unexpected_errors():
     with pytest.raises(RuntimeError):
         grid_search(lambda p: (_ for _ in ()).throw(RuntimeError("bug")),

@@ -10,8 +10,14 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.layout import build_blocked_layout, round_up
-from repro.core.phi import expand_to_layout, phi_from_rows
+from conftest import dense_phi_reference
+
+from repro.core.layout import (
+    build_blocked_layout,
+    round_up,
+    shard_blocked_layout,
+)
+from repro.core.phi import expand_to_layout, phi_from_rows, phi_mu_step
 from repro.core.policy import PhiPolicy, heuristic_policy, vmem_footprint_bytes
 from repro.perf.hlo import collective_stats, shape_bytes
 from repro.train.compression import (
@@ -78,6 +84,83 @@ def test_phi_blocked_equals_segment_any_layout(rows_nrows, bn, br):
                         strategy="blocked", layout=layout)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=3e-5, atol=1e-5)
+
+
+@st.composite
+def sharded_phi_problem(draw):
+    """Random (rows, n_rows, rank, n_shards, policy) with adversarial row
+    distributions: uniform, hub-dominated (one row owns most nonzeros) and
+    sparse-rows (most rows empty)."""
+    n_rows = draw(st.integers(4, 60))
+    kind = draw(st.sampled_from(["uniform", "hub", "empty_rows"]))
+    nnz = draw(st.integers(0, 250))
+    if kind == "uniform":
+        rows = draw(st.lists(st.integers(0, n_rows - 1), min_size=nnz,
+                             max_size=nnz))
+    elif kind == "hub":
+        hub = draw(st.integers(0, n_rows - 1))
+        rows = [
+            hub if draw(st.integers(0, 9)) < 8
+            else draw(st.integers(0, n_rows - 1))
+            for _ in range(nnz)
+        ]
+    else:  # empty_rows: everything lands in the first few rows
+        lo = min(n_rows - 1, 2)
+        rows = draw(st.lists(st.integers(0, lo), min_size=nnz, max_size=nnz))
+    rows = np.sort(np.asarray(rows, np.int32))
+    rank = draw(st.sampled_from([2, 4]))
+    n_shards = draw(st.integers(1, 4))
+    bn = draw(st.sampled_from([16, 32]))
+    br = draw(st.sampled_from([4, 8]))
+    return rows, n_rows, rank, n_shards, bn, br
+
+
+@given(sharded_phi_problem())
+@settings(max_examples=15, deadline=None)
+def test_sharded_phi_and_fused_step_match_dense_reference(problem):
+    """For random tensors — including empty-row and hub-dominated modes —
+    the sharded Phi and the fused sharded MU step match the dense oracle
+    at every shard count."""
+    rows, n_rows, rank, n_shards, bn, br = problem
+    base = build_blocked_layout(rows, n_rows, bn, br)
+    n_shards = min(n_shards, base.n_row_blocks)
+    sl = shard_blocked_layout(base, n_shards)
+    key = jax.random.PRNGKey(int(rows.sum() + n_rows + rank) % 9973)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vals = jax.random.uniform(k1, (len(rows),), minval=0.5, maxval=2.0)
+    pi = jax.random.uniform(k2, (len(rows), rank), minval=0.1, maxval=1.0)
+    b = jax.random.uniform(k3, (n_rows, rank), minval=0.1, maxval=1.0)
+
+    ref = dense_phi_reference(rows, vals, pi, b, n_rows)
+    out = phi_from_rows(jnp.asarray(rows), vals, pi, b, n_rows,
+                        strategy="sharded", layout=sl)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-5, atol=1e-5)
+
+    tol = 1e-4
+    viol = np.max(np.abs(np.minimum(np.asarray(b, np.float64), 1.0 - ref)))
+    b_ref = np.asarray(b, np.float64) * ref if viol > tol else np.asarray(b)
+    b_new, v = phi_mu_step(jnp.asarray(rows), vals, pi, b, n_rows, tol=tol,
+                           strategy="sharded", layout=sl)
+    np.testing.assert_allclose(float(v), viol, rtol=3e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_new), b_ref, rtol=3e-5, atol=1e-5)
+
+
+@given(sharded_phi_problem())
+@settings(max_examples=10, deadline=None)
+def test_sharded_layout_partitions_any_distribution(problem):
+    """shard_blocked_layout is a partition for arbitrary row multisets."""
+    rows, n_rows, rank, n_shards, bn, br = problem
+    base = build_blocked_layout(rows, n_rows, bn, br)
+    n_shards = min(n_shards, base.n_row_blocks)
+    sl = shard_blocked_layout(base, n_shards)
+    np.testing.assert_array_equal(np.sort(sl.gather[sl.valid]),
+                                  np.arange(len(rows)))
+    assert int(sl.rb_start[0]) == 0
+    assert int(sl.rb_start[-1] + sl.rb_count[-1]) == base.n_row_blocks
+    assert np.all(sl.rb_count >= 1)
+    assert np.all(np.diff(sl.grid_rb, axis=1) >= 0)
+    for s in range(n_shards):
+        assert set(sl.grid_rb[s].tolist()) == set(range(sl.n_rb_shard))
 
 
 @given(st.integers(1, 10**7), st.integers(1, 10**5), st.sampled_from([4, 16, 64]))
