@@ -8,7 +8,14 @@ the paper's (league, team, vector) — on each tensor, reporting:
   * the heuristic policy's regret vs the grid optimum (the paper's
     proposed-but-unbuilt selection heuristic, implemented here),
   * the online autotuner's chosen policy + regret vs the grid optimum
-    (repro.perf.autotune; what ``CPAPRConfig(policy="auto")`` runs).
+    (repro.perf.autotune; what ``CPAPRConfig(policy="auto")`` runs),
+    plus its v2 cache key, the binned segment-run stats behind it, and
+    any recorded probe failures,
+  * the v2-vs-v1 keying receipt: a *hub twin* of the mode (same nnz /
+    n_rows / rank, one row owning nearly all nonzeros) collides with the
+    real mode in the v1 keyspace, so a v1 cache would serve it the real
+    mode's winner; ``v2_vs_v1_regret`` is how much that collided policy
+    loses on the twin vs the twin's own v2-tuned winner.
 """
 from __future__ import annotations
 
@@ -16,10 +23,11 @@ import functools
 import os
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sort_mode
-from repro.core.layout import build_blocked_layout
+from repro.core.layout import build_blocked_layout, mode_run_stats
 from repro.core.phi import expand_to_layout, phi_from_rows
 from repro.core.pi import pi_rows
 from repro.core.policy import (
@@ -43,17 +51,25 @@ def _jit_phi(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy, layout):
                          layout=layout, vals_e=vals_e, pi_e=pi_e)
 
 
-def _time_policy(mv, pi, b, pol, iters=3) -> float:
+def _time_policy(rows, vals, pi, b, n_rows, pol, iters=3) -> float:
     if pol.strategy in ("scatter", "segment"):
         return bench_seconds(
-            _jit_phi, mv.rows, mv.sorted_vals, pi, b, None, None,
-            n_rows=mv.n_rows, strategy=pol.strategy, layout=None, iters=iters)
-    layout = build_blocked_layout(np.asarray(mv.rows), mv.n_rows,
+            _jit_phi, rows, vals, pi, b, None, None,
+            n_rows=n_rows, strategy=pol.strategy, layout=None, iters=iters)
+    layout = build_blocked_layout(np.asarray(rows), n_rows,
                                   pol.block_nnz, pol.block_rows)
-    vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
+    vals_e, pi_e = expand_to_layout(layout, vals, pi)
     return bench_seconds(
-        _jit_phi, mv.rows, mv.sorted_vals, pi, b, vals_e, pi_e,
-        n_rows=mv.n_rows, strategy=pol.strategy, layout=layout, iters=iters)
+        _jit_phi, rows, vals, pi, b, vals_e, pi_e,
+        n_rows=n_rows, strategy=pol.strategy, layout=layout, iters=iters)
+
+
+def _hub_twin(n_rows: int, nnz: int) -> np.ndarray:
+    """Hub-dominated sorted rows with the same (nnz, n_rows) envelope —
+    collides with the real mode in the v1 keyspace by construction."""
+    rows = np.zeros(nnz, np.int32)
+    rows[-1] = n_rows - 1
+    return np.sort(rows)
 
 
 def run(tensors=QUICK_TENSORS, iters: int = 3, quick: bool = True):
@@ -68,22 +84,45 @@ def run(tensors=QUICK_TENSORS, iters: int = 3, quick: bool = True):
     if os.path.exists(cache_path):
         os.unlink(cache_path)
     tuner = Autotuner(cache_path=cache_path, iters=iters, warmup=1)
-    gains, regrets, auto_regrets = [], [], []
+    gains, regrets, auto_regrets, v2v1_regrets = [], [], [], []
+    n_probe_failures_total = 0
     for name in tensors:
         t, kt = get_tensor(name)
         mv = sort_mode(t, 0)
         pi = pi_rows(mv.sorted_idx, kt.factors, 0)
         b = kt.factors[0] * kt.lam[None, :]
 
-        ranked = grid_search(lambda p: _time_policy(mv, pi, b, p, iters), grid)
+        ranked = grid_search(
+            lambda p: _time_policy(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                                   p, iters), grid)
         n_failed = sum(1 for _, s, _ in ranked if not np.isfinite(s))
-        t_default = _time_policy(mv, pi, b, default_policy(RANK), iters)
+        t_default = _time_policy(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                                 default_policy(RANK), iters)
         h = heuristic_policy(t.nnz, mv.n_rows, RANK)  # platform-aware (cpu)
-        t_heur = _time_policy(mv, pi, b, h, iters)
+        t_heur = _time_policy(mv.rows, mv.sorted_vals, pi, b, mv.n_rows, h,
+                              iters)
         h_tpu = heuristic_policy(t.nnz, mv.n_rows, RANK, platform="tpu")
+        stats = mode_run_stats(np.asarray(mv.rows), mv.n_rows)
         auto_p = tuner.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                                       n_rows=mv.n_rows, rank=RANK,
+                                       stats=stats)
+        t_auto = _time_policy(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                              auto_p, iters)
+        auto_key, _ = tuner.mode_key(mv.rows, mv.n_rows, RANK, stats=stats)
+        entry = tuner.cache.entries.get(auto_key, {})
+        probe_errors = entry.get("probe_errors", [])
+        n_probe_failures_total += len(probe_errors)
+
+        # --- v2-vs-v1 receipt on the hub twin ----------------------------
+        twin = jnp.asarray(_hub_twin(mv.n_rows, mv.nnz))
+        twin_p = tuner.policy_for_mode(twin, mv.sorted_vals, pi, b,
                                        n_rows=mv.n_rows, rank=RANK)
-        t_auto = _time_policy(mv, pi, b, auto_p, iters)
+        t_twin_v1 = _time_policy(twin, mv.sorted_vals, pi, b, mv.n_rows,
+                                 auto_p, iters)   # v1 collision: real
+        t_twin_v2 = _time_policy(twin, mv.sorted_vals, pi, b, mv.n_rows,
+                                 twin_p, iters)   # mode's winner vs own tune
+        v2_vs_v1 = t_twin_v1 / t_twin_v2
+
         best_p, t_best, _ = ranked[0]
         worst_p, t_worst, _ = next((p, s, e) for p, s, e in reversed(ranked)
                                    if np.isfinite(s))
@@ -94,6 +133,13 @@ def run(tensors=QUICK_TENSORS, iters: int = 3, quick: bool = True):
                 heuristic=h.label(), heuristic_s=round(t_heur, 6),
                 tpu_heuristic=h_tpu.label(),
                 autotune=auto_p.label(), autotune_s=round(t_auto, 6),
+                autotune_key=auto_key,
+                p95_run=round(stats.p95_run, 2),
+                dup_share=round(stats.dup_share, 5),
+                empty_frac=round(stats.empty_frac, 4),
+                autotune_probe_failures=len(probe_errors),
+                twin_autotune=twin_p.label(),
+                v2_vs_v1_regret=round(v2_vs_v1, 3),
                 speedup_best_vs_default=round(t_default / t_best, 3),
                 slowdown_worst_vs_default=round(t_worst / t_default, 3),
                 heuristic_regret=round(t_heur / t_best, 3),
@@ -101,9 +147,12 @@ def run(tensors=QUICK_TENSORS, iters: int = 3, quick: bool = True):
         gains.append(t_default / t_best)
         regrets.append(t_heur / t_best)
         auto_regrets.append(t_auto / t_best)
+        v2v1_regrets.append(v2_vs_v1)
     rep.row(summary="geomean", speedup_best_vs_default=round(geomean(gains), 3),
             heuristic_regret=round(geomean(regrets), 3),
-            autotune_regret=round(geomean(auto_regrets), 3))
+            autotune_regret=round(geomean(auto_regrets), 3),
+            v2_vs_v1_regret=round(geomean(v2v1_regrets), 3),
+            autotune_probe_failures=n_probe_failures_total)
     return rep.finish()
 
 

@@ -71,14 +71,26 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
     Schema (all medians in seconds):
       breakdown: {tensor: {kernel: seconds, ..., phi_share: float}}
       policy:    {tensor: {default_s, best, best_s, heuristic, heuristic_regret,
-                           autotune, autotune_s, autotune_regret}}
+                           autotune, autotune_s, autotune_regret,
+                           autotune_key, p95_run, dup_share, empty_frac,
+                           autotune_probe_failures, twin_autotune,
+                           v2_vs_v1_regret}}
       fused:     {tensor: {strategy: {unfused_s, fused_s, speedup}}}
       sharded:   {tensor: {devices, single_s, sharded_s, speedup,
                            combine_bytes, combine_bound_bytes}}
-      summary:   geomeans (policy speedup, autotune regret, fused speedup,
-                           sharded speedup)
+      summary:   geomeans (policy speedup, autotune regret, v2-vs-v1 regret,
+                           fused speedup, sharded speedup) + total autotune
+                           probe failures
+
+    ``autotune_key`` is the v2 distribution-aware cache key and
+    ``p95_run``/``dup_share``/``empty_frac`` the segment-run stats behind
+    it; ``v2_vs_v1_regret`` is the slowdown a v1 (stats-less) keyspace
+    would have inflicted on the hub twin of each mode (see
+    ``bench_policy``).  ``autotune_probe_failures`` counts probes whose
+    failure reasons the tuner recorded in the cache instead of silently
+    falling back.
     """
-    out: dict = {"schema": 2, "generated_unix": time.time(),
+    out: dict = {"schema": 3, "generated_unix": time.time(),
                  "breakdown": {}, "policy": {}, "fused": {}, "sharded": {},
                  "summary": {}}
     found = False
@@ -100,15 +112,26 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
         found = True
         keep = ("default_s", "best", "best_s", "worst_s", "heuristic",
                 "heuristic_s", "heuristic_regret", "autotune", "autotune_s",
-                "autotune_regret", "speedup_best_vs_default")
+                "autotune_regret", "speedup_best_vs_default",
+                "autotune_key", "p95_run", "dup_share", "empty_frac",
+                "autotune_probe_failures", "twin_autotune", "v2_vs_v1_regret")
         for r in rows:
             if "tensor" in r:
                 out["policy"][r["tensor"]] = {k: r[k] for k in keep if k in r}
             elif r.get("summary") == "geomean":
                 for k in ("speedup_best_vs_default", "heuristic_regret",
-                          "autotune_regret"):
+                          "autotune_regret", "v2_vs_v1_regret",
+                          "autotune_probe_failures"):
                     if k in r:
                         out["summary"][k] = r[k]
+        n_fail = sum(r.get("autotune_probe_failures", 0)
+                     for r in rows if "tensor" in r)
+        if n_fail:
+            # surface what the tuner recorded instead of letting the
+            # heuristic fallback hide broken probes
+            print(f"[benchmarks] WARNING: {n_fail} autotune probe failure(s) "
+                  "recorded in cache entries (see probe_errors in "
+                  f"{OUT_DIR}/autotune_cache.json)", flush=True)
 
     rows = _load_rows("fused")
     if rows:

@@ -14,8 +14,10 @@ from .cpals import cp_als, fit_score, mttkrp
 from .cpapr import CPAPRConfig, CPAPRResult, cpapr_mu, kkt_violation, poisson_loglik
 from .layout import (
     BlockedLayout,
+    ModeStats,
     ShardedBlockedLayout,
     build_blocked_layout,
+    mode_run_stats,
     shard_blocked_layout,
 )
 from .phi import (

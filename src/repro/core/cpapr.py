@@ -47,6 +47,7 @@ from .layout import (
     BlockedLayout,
     ShardedBlockedLayout,
     build_blocked_layout,
+    mode_run_stats,
     shard_blocked_layout,
 )
 from .phi import (
@@ -253,14 +254,21 @@ def _resolve_mode_policies(
             pi_n = pi_rows(mv.sorted_idx, tuple(factors), n)
             b_n = factors[n] * lam[None, :]
             if sharded:
+                # per-shard stats are computed on the shard slices inside
+                # policy_for_sharded_mode; no whole-mode pass needed here
                 pol, _ = tuner.policy_for_sharded_mode(
                     mv.rows, mv.sorted_vals, pi_n, b_n,
                     n_rows=mv.n_rows, rank=cfg.rank, n_shards=n_shards,
                 )
             else:
+                # Segment-run stats computed once per mode (host numpy,
+                # same cost model as the layout sort) — they key the v2
+                # autotune cache so equal-size modes with different
+                # distributions stop sharing a winner.
+                stats_n = mode_run_stats(np.asarray(mv.rows), mv.n_rows)
                 pol = tuner.policy_for_mode(
                     mv.rows, mv.sorted_vals, pi_n, b_n,
-                    n_rows=mv.n_rows, rank=cfg.rank,
+                    n_rows=mv.n_rows, rank=cfg.rank, stats=stats_n,
                 )
             policies[n] = pol
             if pol.strategy in ("blocked", "pallas"):

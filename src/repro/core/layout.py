@@ -29,8 +29,10 @@ import numpy as np
 
 __all__ = [
     "BlockedLayout",
+    "ModeStats",
     "ShardedBlockedLayout",
     "build_blocked_layout",
+    "mode_run_stats",
     "shard_blocked_layout",
     "round_up",
 ]
@@ -38,6 +40,88 @@ __all__ = [
 
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Per-mode segment-run statistics (autotuner v2 cache keys)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeStats:
+    """Segment-run statistics of one mode's sorted nonzero stream.
+
+    The SparTen parameter study (Myers et al., arXiv:2012.01520) shows
+    the best parallel policy depends on the *nonzero distribution* of a
+    mode, not just its size: a hub-dominated mode (one row owns most
+    nonzeros) and a uniform mode with identical ``(nnz, n_rows)`` want
+    different blockings.  These three statistics capture that shape:
+
+      p95_run:    95th percentile nonzeros-per-row over *nonempty* rows
+                  (the paper's "segment run length" — how long the
+                  revisit streak to one Phi row typically gets).
+      dup_share:  max nonzeros in any single row / nnz (hub dominance).
+      empty_frac: fraction of rows with zero nonzeros (padding risk for
+                  the blocked schedule).
+
+    Raw values are kept for reporting; the ``*_bin`` fields are the
+    coarse buckets used in cache keys, so nearby tensors still share an
+    autotune entry:
+
+      p95_bin:   floor(log2(p95_run))          — octave bins 1,2,4,8...
+      dup_bin:   floor(-log2(dup_share))       — 0 = one row owns >1/2,
+                 1 = >1/4, ... capped at 16 (uniform regime).
+      empty_bin: floor(4 * empty_frac) in 0..3 — quartile bins.
+    """
+
+    nnz: int
+    n_rows: int
+    p95_run: float
+    max_run: int
+    dup_share: float
+    empty_frac: float
+    p95_bin: int
+    dup_bin: int
+    empty_bin: int
+
+    DUP_BIN_CAP = 16
+
+    def key_fragment(self) -> str:
+        """The binned-stats dimension of a v2 autotune cache key."""
+        return f"p95=b{self.p95_bin}/dup=b{self.dup_bin}/emt=b{self.empty_bin}"
+
+
+def mode_run_stats(rows_sorted: np.ndarray, n_rows: int) -> ModeStats:
+    """Segment-run statistics from sorted mode-n coordinates.
+
+    Runs once per mode on host numpy (same cost model as the layout
+    builder's one-time sort); callers hoist it next to
+    :func:`build_blocked_layout` and thread the result to the autotuner.
+    Handles nnz=0 (all stats zero, maximally-empty bins).
+    """
+    rows_sorted = np.asarray(rows_sorted)
+    nnz = int(rows_sorted.shape[0])
+    n_rows = int(n_rows)
+    if nnz == 0:
+        return ModeStats(
+            nnz=0, n_rows=n_rows, p95_run=0.0, max_run=0, dup_share=0.0,
+            empty_frac=1.0, p95_bin=0, dup_bin=ModeStats.DUP_BIN_CAP,
+            empty_bin=3,
+        )
+    counts = np.bincount(rows_sorted, minlength=max(n_rows, 1))
+    runs = counts[counts > 0]
+    p95 = float(np.percentile(runs, 95))
+    max_run = int(runs.max())
+    dup_share = max_run / nnz
+    empty_frac = 1.0 - runs.size / max(n_rows, 1)
+    p95_bin = int(np.floor(np.log2(max(p95, 1.0))))
+    dup_bin = int(min(np.floor(-np.log2(dup_share)), ModeStats.DUP_BIN_CAP))
+    empty_bin = int(np.clip(np.floor(4.0 * empty_frac), 0, 3))
+    return ModeStats(
+        nnz=nnz, n_rows=n_rows, p95_run=p95, max_run=max_run,
+        dup_share=float(dup_share), empty_frac=float(empty_frac),
+        p95_bin=p95_bin, dup_bin=dup_bin, empty_bin=empty_bin,
+    )
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-static friendly

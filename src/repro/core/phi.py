@@ -51,10 +51,12 @@ from .layout import (
     BlockedLayout,
     ShardedBlockedLayout,
     build_blocked_layout,
+    mode_run_stats,
     round_up,
     shard_blocked_layout,
 )
 from .pi import pi_rows
+from .policy import heuristic_policy
 from .sparse_tensor import ModeView
 
 __all__ = [
@@ -237,13 +239,24 @@ def _phi_blocked(layout: BlockedLayout, vals, pi, b, eps, perturb=None):
 def _resolve_layout(rows, n_rows, layout, vals, pi, vals_e, pi_e):
     """Default layout + expansion for the blocked/pallas strategies.
 
-    Pre-expanded ``vals_e``/``pi_e`` (from a hoisted :func:`expand_to_layout`)
-    are passed through untouched so the solver's inner loop never re-gathers.
+    When no layout is given, the block sizes come from the
+    distribution-aware heuristic (segment-run stats of ``rows``) instead
+    of a fixed 256x256 — a hub-dominated and a uniform mode get different
+    default blockings, mirroring the autotuner's v2 keying.  Pre-expanded
+    ``vals_e``/``pi_e`` (from a hoisted :func:`expand_to_layout`) are
+    passed through untouched so the solver's inner loop never re-gathers.
     """
     if layout is None:
-        layout = build_blocked_layout(
-            np.asarray(rows), n_rows, block_nnz=256, block_rows=256
+        rows_np = np.asarray(rows)
+        stats = mode_run_stats(rows_np, n_rows)
+        pol = heuristic_policy(
+            int(rows_np.shape[0]), n_rows, int(pi.shape[1]),
+            platform="tpu", stats=stats,
         )
+        layout = build_blocked_layout(
+            rows_np, n_rows, block_nnz=pol.block_nnz, block_rows=pol.block_rows
+        )
+        vals_e = pi_e = None  # any pre-expansion matched a different layout
     if vals_e is None or pi_e is None:
         vals_e, pi_e = expand_to_layout(layout, vals, pi)
     return layout, vals_e, pi_e

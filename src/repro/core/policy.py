@@ -135,6 +135,7 @@ def heuristic_policy(
     vmem_budget: int = 8 * 2**20,
     row_hist: np.ndarray | None = None,
     platform: str | None = None,
+    stats: "object | None" = None,
 ) -> PhiPolicy:
     """Pick (strategy, block_nnz, block_rows) from tensor stats + platform —
     the paper's missing heuristic (Sec. 5 'obvious next step').
@@ -152,6 +153,12 @@ def heuristic_policy(
       * block_rows should cover the p95 segment run so one grid step rarely
         spans row blocks (the "atomic boundary" analog), subject to the VMEM
         cap.
+
+    ``stats`` (a :class:`repro.core.layout.ModeStats`) supplies the measured
+    p95 segment run, replacing the mean-duplication proxy — hub-dominated
+    and uniform modes with the same nnz/rows then size block_rows
+    differently.  ``row_hist`` (raw per-row counts) is the legacy way to
+    pass the same information.
     """
     if platform is None:
         import jax
@@ -160,7 +167,9 @@ def heuristic_policy(
     if platform == "cpu":
         return PhiPolicy(strategy="segment")
     d = max(1.0, nnz / max(1, n_rows))
-    if row_hist is not None and row_hist.size:
+    if stats is not None and getattr(stats, "nnz", 0) > 0:
+        p95 = max(float(stats.p95_run), 1.0)
+    elif row_hist is not None and row_hist.size:
         p95 = float(np.percentile(row_hist, 95))
     else:
         p95 = d

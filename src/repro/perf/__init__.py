@@ -5,10 +5,11 @@
   hlo      — collective-byte accounting over partitioned HLO
   timing   — wall-clock harness (host CPU)
   autotune — online, persistent parallel-policy autotuner (JSON-cached
-             grid search with heuristic fallback; backs
-             ``CPAPRConfig(policy="auto")``)
+             burst-mode grid search with distribution-aware v2 keys,
+             staleness metadata, v1 quarantine/migration, and heuristic
+             fallback; backs ``CPAPRConfig(policy="auto")``)
 """
-from .autotune import Autotuner, AutotuneCache, default_cache_path
+from .autotune import Autotuner, AutotuneCache, default_cache_path, policy_key
 from .hlo import CollectiveStats, collective_stats, shape_bytes
 from .ppa import PERTURBATIONS, PPAResult, run_ppa
 from .roofline import (
@@ -19,4 +20,4 @@ from .roofline import (
     operational_intensity_phi,
     roofline_terms,
 )
-from .timing import bandwidth_gbs, bench_seconds
+from .timing import bandwidth_gbs, bench_burst_seconds, bench_seconds

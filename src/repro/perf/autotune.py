@@ -5,20 +5,51 @@ The paper shows grid search over the parallel policy gives 2.25x (CPU) /
 ("an obvious next step", Sec. 5).  This module makes it *online*:
 
   * :class:`Autotuner` keys each tuning problem on
-    ``(platform, nnz, n_rows, rank)``;
+    ``(platform, nnz, n_rows, rank)`` **plus the mode's binned
+    segment-run statistics** (p95 run length, max-row duplication share,
+    empty-row fraction — see :func:`repro.core.layout.mode_run_stats`).
+    The SparTen parameter study (Myers et al., arXiv:2012.01520) shows
+    the best policy depends on the nonzero *distribution*, so a
+    hub-dominated mode and a uniform mode with identical size stats get
+    distinct cache entries; the stats are bucketed into coarse bins so
+    nearby tensors still share one.
   * on a cache miss it measures a *pruned* policy grid (the heuristic's
-    neighborhood plus the unblocked strategies) with
-    :func:`repro.perf.timing.bench_seconds` and records the winner;
+    neighborhood plus the unblocked strategies).  The default probe is a
+    short jitted ``lax.while_loop`` **burst** of fused MU steps — the
+    same loop shape ``cpapr_mu`` runs — so the measurement captures the
+    revisit/cache effects a one-shot call misses (set ``burst=1`` for
+    the legacy single-call probe);
   * when measurement is disabled or every probe fails it falls back to
-    :func:`repro.core.policy.heuristic_policy`;
+    a migrated v1 winner (if one is quarantined for the same problem) or
+    :func:`repro.core.policy.heuristic_policy`; probe failure reasons are
+    recorded in the cache entry (``probe_errors``) instead of vanishing;
   * winners persist in a JSON store (:class:`AutotuneCache`) so repeat
     decompositions — including in *future processes* — pay zero search
     cost.
 
+Cache schema v2.  The store is a plain JSON object::
+
+    {"version": 2,
+     "entries": {v2_key: {"policy": {...}, "seconds": float|null,
+                          "source": "grid"|"heuristic"|"migrated-v1",
+                          "schema": 2, "jax": "<jax.__version__>",
+                          "device_kind": "<device_kind>", "probe": "...",
+                          "burst": int, "stats": {...}, "tuned_at": ts,
+                          "probe_errors": [...]}},
+     "quarantined": {key: {"entry": <raw>, "reason": "..."}}}
+
+written atomically (tmp file + rename) after every new winner.  Entries
+carry staleness metadata (jax version, device kind, schema version): a
+*measuring* tuner treats mismatching entries as misses and re-tunes; a
+non-measuring tuner still serves them (a stale measured winner beats an
+unmeasured heuristic).  Loading a v1 store (or a v2 store with corrupt
+entries) never crashes: unusable entries are *quarantined* — preserved
+under ``"quarantined"`` with a reason, never served directly.  Each v1
+entry is migrated the first time its problem is tuned again (adopted as
+the fallback policy under its new v2 key, ``source="migrated-v1"``).
+
 Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
-``~/.cache/repro/autotune.json``.  The store is a plain JSON object
-(``{"version": 1, "entries": {key: {...}}}``) and is written atomically
-(tmp file + rename) after every new winner.
+``~/.cache/repro/autotune.json``.
 
 ``CPAPRConfig(policy="auto")`` consults this per mode (see
 ``repro.core.cpapr``).
@@ -36,7 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.layout import build_blocked_layout
+from repro.core.layout import ModeStats, build_blocked_layout, mode_run_stats
 from repro.core.phi import expand_to_layout, phi_mu_step
 from repro.core.policy import (
     PhiPolicy,
@@ -45,7 +76,13 @@ from repro.core.policy import (
     vmem_footprint_bytes,
 )
 
-__all__ = ["AutotuneCache", "Autotuner", "default_cache_path", "policy_key"]
+__all__ = [
+    "AutotuneCache",
+    "Autotuner",
+    "current_device_kind",
+    "default_cache_path",
+    "policy_key",
+]
 
 
 def default_cache_path() -> str:
@@ -55,16 +92,36 @@ def default_cache_path() -> str:
     return os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json")
 
 
+def current_device_kind() -> str:
+    """Device kind of the default backend (staleness metadata)."""
+    try:
+        return str(jax.devices()[0].device_kind)
+    except Exception:  # pragma: no cover - backend init failure
+        return "unknown"
+
+
 def policy_key(
-    nnz: int, n_rows: int, rank: int, platform: str, n_shards: int = 1
+    nnz: int,
+    n_rows: int,
+    rank: int,
+    platform: str,
+    n_shards: int = 1,
+    stats: ModeStats | None = None,
 ) -> str:
     """Cache key for one tuning problem.
 
+    With ``stats`` (a :class:`repro.core.layout.ModeStats`) the key is the
+    v2 format: a ``v2/`` prefix plus the binned segment-run dimensions, so
+    equal-size modes with different nonzero distributions resolve to
+    distinct entries.  Without ``stats`` the legacy v1 format comes back —
+    used for migration bookkeeping and by direct store users.
+
     ``n_shards`` > 1 appends a ``/shards=N`` dimension, so sharded-mode
-    entries never collide with (or shadow) the single-device entries that
-    earlier versions wrote without the dimension.
+    entries never collide with (or shadow) the single-device entries.
     """
     base = f"{platform}/nnz={nnz}/rows={n_rows}/rank={rank}"
+    if stats is not None:
+        base = f"v2/{base}/{stats.key_fragment()}"
     if n_shards in (None, 1):
         return base
     return f"{base}/shards={n_shards}"
@@ -78,37 +135,76 @@ def _policy_from_json(d: dict) -> PhiPolicy:
     return PhiPolicy(**d)
 
 
-class AutotuneCache:
-    """Persistent JSON store of tuned policies.
+def _stats_to_json(stats: ModeStats | None) -> dict | None:
+    if stats is None:
+        return None
+    return {
+        "p95_run": stats.p95_run,
+        "max_run": stats.max_run,
+        "dup_share": round(stats.dup_share, 6),
+        "empty_frac": round(stats.empty_frac, 6),
+    }
 
-    Entries map :func:`policy_key` strings to
-    ``{"policy": {...}, "seconds": float, "source": "grid"|"heuristic",
-    "tuned_at": unix_ts}``.  Corrupt or missing files load as empty; all
-    writes are atomic so concurrent processes at worst lose a race, never
-    the file.
+
+class AutotuneCache:
+    """Persistent JSON store of tuned policies (schema v2).
+
+    ``entries`` maps :func:`policy_key` strings to tuned-policy records
+    (see the module docstring for the full field list).  ``quarantined``
+    holds entries that could not be served — v1-schema records awaiting
+    migration and corrupt v2 records — keyed by their original key with
+    the quarantine reason attached.  Corrupt or missing *files* load as
+    empty; all writes are atomic so concurrent processes at worst lose a
+    race, never the file.
     """
 
-    VERSION = 1
+    VERSION = 2
 
     def __init__(self, path: str | None = None):
         self.path = path or default_cache_path()
         self.entries: dict = {}
+        self.quarantined: dict = {}
         self.load()
 
+    # -- persistence ------------------------------------------------------
     def load(self) -> None:
+        self.entries, self.quarantined = {}, {}
         try:
             with open(self.path) as f:
                 data = json.load(f)
-            if isinstance(data, dict) and data.get("version") == self.VERSION:
-                self.entries = dict(data.get("entries", {}))
         except (OSError, ValueError):
-            self.entries = {}
+            return
+        if not isinstance(data, dict):
+            return
+        version = data.get("version")
+        raw_q = data.get("quarantined")
+        if isinstance(raw_q, dict):
+            self.quarantined = dict(raw_q)
+        raw = data.get("entries")
+        if not isinstance(raw, dict):
+            return
+        if version == 1:
+            # v1 store: nothing is served directly, everything is kept for
+            # the per-problem migration path (see Autotuner._tune_key).
+            for key, entry in raw.items():
+                self.quarantined[key] = {"entry": entry, "reason": "v1-schema"}
+            return
+        if version != self.VERSION:
+            return
+        for key, entry in raw.items():
+            if isinstance(entry, dict) and isinstance(entry.get("policy"), dict):
+                self.entries[key] = entry
+            else:
+                self.quarantined[key] = {"entry": entry,
+                                         "reason": "malformed-entry"}
 
     def save(self) -> None:
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
         payload = {"version": self.VERSION, "entries": self.entries}
+        if self.quarantined:
+            payload["quarantined"] = self.quarantined
         fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
@@ -121,14 +217,36 @@ class AutotuneCache:
                 pass
             raise
 
-    def lookup(self, key: str, source: str | None = None) -> PhiPolicy | None:
-        """Cached policy for ``key``; with ``source`` set, only entries tuned
-        that way (e.g. ``"grid"``) count — used to re-tune heuristic
-        placeholders once measurement becomes available."""
+    # -- staleness --------------------------------------------------------
+    @staticmethod
+    def entry_is_stale(entry: dict) -> bool:
+        """True when the entry was tuned under a different schema, jax
+        version, or device kind than the current process."""
+        return (
+            entry.get("schema") != AutotuneCache.VERSION
+            or entry.get("jax") != jax.__version__
+            or entry.get("device_kind") != current_device_kind()
+        )
+
+    # -- lookup / store ---------------------------------------------------
+    def lookup(
+        self, key: str, source: str | None = None, fresh: bool = False
+    ) -> PhiPolicy | None:
+        """Cached policy for ``key``.
+
+        With ``source`` set, only entries tuned that way (e.g. ``"grid"``)
+        count — used to re-tune heuristic placeholders once measurement
+        becomes available.  With ``fresh=True``, entries whose staleness
+        metadata (schema / jax version / device kind) mismatches the
+        current process are skipped too — a measuring tuner re-tunes them,
+        a non-measuring one still serves them.
+        """
         e = self.entries.get(key)
         if e is None:
             return None
         if source is not None and e.get("source") != source:
+            return None
+        if fresh and self.entry_is_stale(e):
             return None
         try:
             return _policy_from_json(e["policy"])
@@ -136,16 +254,79 @@ class AutotuneCache:
             return None
 
     def store(
-        self, key: str, policy: PhiPolicy, seconds: float, source: str
+        self,
+        key: str,
+        policy: PhiPolicy,
+        seconds: float,
+        source: str,
+        stats: ModeStats | None = None,
+        probe: str | None = None,
+        burst: int | None = None,
+        probe_errors: list | None = None,
     ) -> None:
-        self.entries[key] = {
+        entry = {
             "policy": _policy_to_json(policy),
             # inf (heuristic fallback: nothing measured) is not valid JSON
             "seconds": seconds if np.isfinite(seconds) else None,
             "source": source,
             "tuned_at": time.time(),
+            "schema": self.VERSION,
+            "jax": jax.__version__,
+            "device_kind": current_device_kind(),
         }
+        if stats is not None:
+            entry["stats"] = _stats_to_json(stats)
+        if probe is not None:
+            entry["probe"] = probe
+            entry["burst"] = burst
+        if probe_errors:
+            entry["probe_errors"] = probe_errors
+        self.entries[key] = entry
         self.save()
+
+    # -- v1 migration -----------------------------------------------------
+    def quarantined_policy(self, key: str) -> PhiPolicy | None:
+        """Policy of a quarantined entry (v1 or corrupt), if parseable."""
+        q = self.quarantined.get(key)
+        if not isinstance(q, dict):
+            return None
+        entry = q.get("entry")
+        if not isinstance(entry, dict):
+            return None
+        try:
+            return _policy_from_json(entry["policy"])
+        except (KeyError, TypeError):
+            return None
+
+    def migrate_quarantined(self, old_key: str, new_key: str) -> PhiPolicy | None:
+        """Adopt a quarantined v1 winner under its v2 key.
+
+        The policy is re-stored under ``new_key`` with
+        ``source="migrated-v1"`` and *no current staleness stamp is
+        forged*: the migrated entry keeps its v1 provenance, so a fresh
+        (measuring) lookup still treats it as stale and re-tunes, while a
+        non-measuring tuner serves it instead of an unmeasured heuristic.
+        Returns the migrated policy, or None when ``old_key`` has nothing
+        usable (the quarantined record is left in place either way, as an
+        audit trail).
+        """
+        pol = self.quarantined_policy(old_key)
+        if pol is None:
+            return None
+        old = self.quarantined[old_key]["entry"]
+        entry = {
+            "policy": _policy_to_json(pol),
+            "seconds": old.get("seconds") if isinstance(old, dict) else None,
+            "source": "migrated-v1",
+            "tuned_at": time.time(),
+            "schema": 1,  # honest provenance: fresh lookups skip it
+            "jax": old.get("jax") if isinstance(old, dict) else None,
+            "device_kind": None,
+            "migrated_from": old_key,
+        }
+        self.entries[new_key] = entry
+        self.save()
+        return pol
 
 
 def candidate_policies(
@@ -155,6 +336,7 @@ def candidate_policies(
     platform: str,
     vmem_budget: int = 8 * 2**20,
     include_pallas: bool | None = None,
+    stats: ModeStats | None = None,
 ) -> list:
     """Pruned search grid: unblocked strategies + the heuristic's blocked
     neighborhood (block sizes at 0.5x/1x/2x), VMEM-feasible points only.
@@ -162,13 +344,14 @@ def candidate_policies(
     ~8 candidates instead of the full Cartesian grid (paper Exps. 3-5) —
     small enough to amortize in one decomposition, rich enough to capture
     the grid optimum on the evaluation tensors (tracked as "regret" in
-    ``benchmarks/bench_policy.py``).
+    ``benchmarks/bench_policy.py``).  ``stats`` re-centers the blocked
+    neighborhood on the distribution-aware heuristic.
     """
     if include_pallas is None:
         include_pallas = platform == "tpu"
     cands = [PhiPolicy(strategy="segment"), PhiPolicy(strategy="scatter")]
     base = heuristic_policy(
-        nnz, n_rows, rank, vmem_budget=vmem_budget, platform="tpu"
+        nnz, n_rows, rank, vmem_budget=vmem_budget, platform="tpu", stats=stats
     )
     seen = set()
     for bn_mul in (0.5, 1.0, 2.0):
@@ -201,14 +384,55 @@ def _jit_mu_step(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy, layout):
     )
 
 
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "strategy", "layout", "burst")
+)
+def _jit_mu_burst(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy, layout,
+                  burst):
+    """``burst`` fused MU steps under one ``lax.while_loop`` dispatch.
+
+    Mirrors the loop shape of ``cpapr_mu``'s inner solve — same carried
+    state, same per-step fused ``phi_mu_step`` — with ``tol=-1`` so the
+    update always applies and B keeps evolving across iterations (the
+    revisit pattern a one-shot probe never exercises).
+    """
+
+    def cond(state):
+        i, _, viol = state
+        return (i < burst) & (viol > -1.0)
+
+    def body(state):
+        i, bb, _ = state
+        b_new, viol = phi_mu_step(
+            rows,
+            vals,
+            pi,
+            bb,
+            n_rows=n_rows,
+            tol=-1.0,
+            strategy=strategy,
+            layout=layout,
+            vals_e=vals_e,
+            pi_e=pi_e,
+        )
+        return (i + 1, b_new, viol)
+
+    _, bf, viol = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), b, jnp.asarray(jnp.inf, b.dtype))
+    )
+    return bf, viol
+
+
 class Autotuner:
     """Measure-once, cache-forever policy selection.
 
     Counters (for tests and regret reporting):
       * ``n_hits``     — lookups served from the cache.
       * ``n_searches`` — cache misses that triggered a tune (grid
-        measurement or heuristic fallback).
+        measurement, v1 migration, or heuristic fallback).
       * ``n_grid_searches`` — misses that actually ran timed probes.
+      * ``n_migrated`` — misses resolved by adopting a quarantined v1
+        winner under its v2 key.
     """
 
     def __init__(
@@ -217,6 +441,7 @@ class Autotuner:
         measure: bool = True,
         iters: int = 2,
         warmup: int = 1,
+        burst: int = 8,
         vmem_budget: int = 8 * 2**20,
         platform: str | None = None,
         include_pallas: bool | None = None,
@@ -225,23 +450,31 @@ class Autotuner:
         self.measure = measure
         self.iters = iters
         self.warmup = warmup
+        self.burst = int(burst)
+        if self.burst < 1:
+            raise ValueError(f"burst must be >= 1, got {burst}")
         self.vmem_budget = vmem_budget
         self.platform = platform
         self.include_pallas = include_pallas
         self.n_hits = 0
         self.n_searches = 0
         self.n_grid_searches = 0
+        self.n_migrated = 0
 
     # -- measurement ------------------------------------------------------
     def _time_policy(self, pol: PhiPolicy, rows, vals, pi, b, n_rows: int):
         """Median seconds of one fused MU step under ``pol``.
 
-        Layout build + expansion stay outside the timed region — the solver
+        The default probe runs ``self.burst`` steps in one jitted
+        ``lax.while_loop`` (matching the solver's inner loop, so revisit
+        and cache effects are measured) and reports per-step time;
+        ``burst=1`` falls back to the legacy single-call probe.  Layout
+        build + expansion stay outside the timed region — the solver
         hoists them out of the inner loop too (one per mode update).  The
         per-nonzero arrays are jit *arguments*, never closure constants:
         XLA embeds closed-over arrays as literals, which distorts CPU
         timings by an order of magnitude."""
-        from repro.perf.timing import bench_seconds
+        from repro.perf.timing import bench_burst_seconds, bench_seconds
 
         if pol.strategy in ("blocked", "pallas"):
             layout = build_blocked_layout(
@@ -251,6 +484,22 @@ class Autotuner:
         else:
             layout = vals_e = pi_e = None
 
+        if self.burst > 1:
+            return bench_burst_seconds(
+                _jit_mu_burst,
+                rows,
+                vals,
+                pi,
+                b,
+                vals_e,
+                pi_e,
+                n_rows=n_rows,
+                strategy=pol.strategy,
+                layout=layout,
+                burst=self.burst,
+                warmup=self.warmup,
+                iters=self.iters,
+            )
         return bench_seconds(
             _jit_mu_step,
             rows,
@@ -267,19 +516,38 @@ class Autotuner:
         )
 
     def _tune_key(self, key: str, rows, vals, pi, b, n_rows: int,
-                  rank: int, platform: str) -> PhiPolicy:
-        """Cache-or-tune one problem under an explicit cache key."""
+                  rank: int, platform: str, stats: ModeStats | None = None,
+                  v1_key: str | None = None) -> PhiPolicy:
+        """Cache-or-tune one problem under an explicit cache key.
+
+        ``v1_key`` is the legacy (stats-less) key for the same problem;
+        when the store holds a quarantined v1 entry under it, that winner
+        is migrated instead of falling back to the unmeasured heuristic.
+        """
         nnz = int(rows.shape[0])
         # A heuristic placeholder (stored when measurement was disabled or
-        # every probe failed) does not satisfy a measuring tuner — re-tune
-        # it instead of pinning an unmeasured policy forever.
-        hit = self.cache.lookup(key, source="grid" if self.measure else None)
+        # every probe failed), a stale entry (other jax version / device
+        # kind / schema), or a migrated-v1 policy does not satisfy a
+        # measuring tuner — re-tune instead of pinning it forever.
+        hit = (
+            self.cache.lookup(key, source="grid", fresh=True)
+            if self.measure
+            else self.cache.lookup(key)
+        )
         if hit is not None:
             self.n_hits += 1
             return hit
 
+        migrated = (
+            self.cache.quarantined_policy(v1_key) if v1_key is not None
+            else None
+        )
         self.n_searches += 1
         best_p, best_s, source = None, float("inf"), "heuristic"
+        # probe provenance is only recorded when probes actually run
+        probe = ("burst" if self.burst > 1 else "single") if self.measure \
+            else None
+        probe_errors: list = []
         if self.measure:
             cands = candidate_policies(
                 nnz,
@@ -288,22 +556,57 @@ class Autotuner:
                 platform,
                 vmem_budget=self.vmem_budget,
                 include_pallas=self.include_pallas,
+                stats=stats,
             )
             self.n_grid_searches += 1
             ranked = grid_search(
                 lambda p: self._time_policy(p, rows, vals, pi, b, n_rows), cands
             )
+            probe_errors = [
+                f"{p.label()}: {err}" for p, _, err in ranked if err is not None
+            ]
             if ranked and np.isfinite(ranked[0][1]):
                 best_p, best_s, _ = ranked[0]
                 source = "grid"
+        if best_p is None and migrated is not None:
+            # v1 migration path: adopt the old winner (it keeps its v1
+            # provenance, so a later measuring tuner still re-tunes it).
+            self.n_migrated += 1
+            pol = self.cache.migrate_quarantined(v1_key, key)
+            if pol is not None:
+                if probe_errors:  # keep why the grid failed alongside it
+                    self.cache.entries[key]["probe_errors"] = probe_errors
+                    self.cache.save()
+                return pol
         if best_p is None:
             best_p = heuristic_policy(
-                nnz, n_rows, rank, vmem_budget=self.vmem_budget, platform=platform
+                nnz, n_rows, rank, vmem_budget=self.vmem_budget,
+                platform=platform, stats=stats,
             )
-        self.cache.store(key, best_p, best_s, source)
+        self.cache.store(key, best_p, best_s, source, stats=stats,
+                         probe=probe,
+                         burst=self.burst if probe is not None else None,
+                         probe_errors=probe_errors)
         return best_p
 
     # -- public API -------------------------------------------------------
+    def mode_key(
+        self,
+        rows,
+        n_rows: int,
+        rank: int,
+        n_shards: int = 1,
+        stats: ModeStats | None = None,
+    ) -> tuple:
+        """(v2 cache key, ModeStats) for one mode's problem — what
+        :meth:`policy_for_mode` will key on (benchmarks report this)."""
+        platform = self.platform or jax.default_backend()
+        if stats is None:
+            stats = mode_run_stats(np.asarray(rows), n_rows)
+        key = policy_key(int(np.asarray(rows).shape[0]), n_rows, rank,
+                         platform, n_shards=n_shards, stats=stats)
+        return key, stats
+
     def policy_for_mode(
         self,
         rows,
@@ -312,11 +615,23 @@ class Autotuner:
         b,
         n_rows: int,
         rank: int,
+        stats: ModeStats | None = None,
     ) -> PhiPolicy:
-        """Tuned policy for one mode's Phi problem (cached by problem key)."""
+        """Tuned policy for one mode's Phi problem (cached by problem key).
+
+        ``stats`` (the mode's :class:`ModeStats`, usually computed once by
+        the solver next to the layout build) folds the segment-run
+        distribution into the cache key; when omitted it is computed here
+        from ``rows``.
+        """
         platform = self.platform or jax.default_backend()
-        key = policy_key(int(rows.shape[0]), n_rows, rank, platform)
-        return self._tune_key(key, rows, vals, pi, b, n_rows, rank, platform)
+        if stats is None:
+            stats = mode_run_stats(np.asarray(rows), n_rows)
+        nnz = int(rows.shape[0])
+        key = policy_key(nnz, n_rows, rank, platform, stats=stats)
+        v1_key = policy_key(nnz, n_rows, rank, platform)
+        return self._tune_key(key, rows, vals, pi, b, n_rows, rank, platform,
+                              stats=stats, v1_key=v1_key)
 
     def policy_for_sharded_mode(
         self,
@@ -327,23 +642,25 @@ class Autotuner:
         n_rows: int,
         rank: int,
         n_shards: int,
+        stats: ModeStats | None = None,
     ) -> tuple:
         """Tuned policies for one mode split into ``n_shards`` row shards.
 
         Each shard's sub-problem (its contiguous slice of the sorted
         stream, rebased to its local row window) is tuned and cached under
-        a shard-dimension key.  Because one program must run on every mesh
-        device, the per-shard winners are reconciled to a single uniform
-        policy — the winner of the largest-nnz shard, which dominates the
-        critical path.  Returns ``(uniform_policy, per_shard_policies)``;
-        shards that own no nonzeros get ``None`` in the per-shard list.
+        a shard-dimension key with the *shard's own* segment-run stats.
+        Because one program must run on every mesh device, the per-shard
+        winners are reconciled to a single uniform policy — the winner of
+        the largest-nnz shard, which dominates the critical path.  Returns
+        ``(uniform_policy, per_shard_policies)``; shards that own no
+        nonzeros get ``None`` in the per-shard list.
         """
         platform = self.platform or jax.default_backend()
         rows_np = np.asarray(rows)
         nnz = int(rows_np.shape[0])
         if n_shards <= 1 or nnz == 0:
             pol = self.policy_for_mode(rows, vals, pi, b, n_rows=n_rows,
-                                       rank=rank)
+                                       rank=rank, stats=stats)
             return pol, [pol] * max(1, n_shards)
 
         # contiguous nnz-balanced cuts, snapped forward to row boundaries
@@ -365,17 +682,23 @@ class Autotuner:
                 continue
             row_lo = int(rows_np[c0])
             row_hi = int(rows_np[c1 - 1]) + 1
+            local_rows = rows_np[c0:c1] - row_lo
+            shard_stats = mode_run_stats(local_rows, row_hi - row_lo)
             key = policy_key(c1 - c0, row_hi - row_lo, rank, platform,
-                             n_shards=n_shards)
+                             n_shards=n_shards, stats=shard_stats)
+            v1_key = policy_key(c1 - c0, row_hi - row_lo, rank, platform,
+                                n_shards=n_shards)
             pol = self._tune_key(
                 key,
-                jnp.asarray(rows_np[c0:c1] - row_lo),
+                jnp.asarray(local_rows),
                 vals[c0:c1],
                 pi[c0:c1],
                 b[row_lo:row_hi],
                 row_hi - row_lo,
                 rank,
                 platform,
+                stats=shard_stats,
+                v1_key=v1_key,
             )
             per_shard.append(pol)
             if c1 - c0 > best_nnz:

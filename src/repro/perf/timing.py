@@ -3,6 +3,12 @@
 The paper averages 5 runs per experiment (Sec. 4); we report the median
 of ``iters`` timed calls after ``warmup`` untimed ones, with
 ``block_until_ready`` fencing.
+
+:func:`bench_burst_seconds` is the variant for functions that loop
+internally (e.g. a jitted ``lax.while_loop`` of fused MU steps): one
+dispatch covers ``burst`` algorithm iterations, so per-iteration numbers
+include the revisit/cache effects a one-shot call misses while amortizing
+the dispatch overhead a one-shot call over-counts.
 """
 from __future__ import annotations
 
@@ -11,7 +17,7 @@ from typing import Callable
 
 import jax
 
-__all__ = ["bench_seconds", "bandwidth_gbs"]
+__all__ = ["bench_seconds", "bench_burst_seconds", "bandwidth_gbs"]
 
 
 def bench_seconds(
@@ -29,6 +35,23 @@ def bench_seconds(
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]
+
+
+def bench_burst_seconds(
+    fn: Callable, *args, burst: int, warmup: int = 1, iters: int = 2, **kwargs
+) -> float:
+    """Median per-iteration seconds of an internally-looping function.
+
+    ``fn`` must accept ``burst`` as a keyword (the loop's static bound)
+    and execute that many algorithm iterations per call.  Returns the
+    timed median divided by ``burst`` — directly comparable to
+    :func:`bench_seconds` of one iteration.
+    """
+    if burst < 1:
+        raise ValueError(f"burst must be >= 1, got {burst}")
+    sec = bench_seconds(fn, *args, burst=burst, warmup=warmup, iters=iters,
+                        **kwargs)
+    return sec / burst
 
 
 def bandwidth_gbs(bytes_moved: float, seconds: float) -> float:

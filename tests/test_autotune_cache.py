@@ -1,6 +1,7 @@
 """repro.perf.autotune cache semantics: env-var store location, corrupt /
-partial JSON recovery, heuristic-placeholder re-tune, and the PR-2
-shard-dimension keys coexisting with PR-1-format entries."""
+partial JSON recovery, heuristic-placeholder re-tune, the PR-2
+shard-dimension keys, and the v2 schema (distribution-keyed entries,
+v1->v2 migration, quarantine, staleness metadata)."""
 import json
 import os
 
@@ -9,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core import sort_mode
+from repro.core.layout import mode_run_stats
 from repro.core.pi import pi_rows
 from repro.core.policy import PhiPolicy
 from repro.perf.autotune import (
@@ -167,7 +169,9 @@ def test_shard_keys_do_not_collide_with_single_device_entries(
     assert isinstance(uniform, PhiPolicy)
     # single-device key untouched; three new shard-keyed entries appeared
     single_key = policy_key(mv.nnz, mv.n_rows, 4,
-                            tuner.platform or jax.default_backend())
+                            tuner.platform or jax.default_backend(),
+                            stats=mode_run_stats(np.asarray(mv.rows),
+                                                 mv.n_rows))
     assert single_key in tuner.cache.entries
     shard_keys = [k for k in tuner.cache.entries if k.endswith("/shards=3")]
     assert len(shard_keys) == 3
@@ -190,3 +194,252 @@ def test_sharded_tuning_handles_degenerate_splits(small_tensor, tmp_path):
     assert per_shard[0] is not None
     assert per_shard[1] is None and per_shard[2] is None
     assert uniform == per_shard[0]
+
+
+# ---------------------------------------------------------------------------
+# v2 keys: distribution discrimination + coarse-bin sharing
+# ---------------------------------------------------------------------------
+
+
+def _uniform_rows(n_rows, per_row):
+    return np.repeat(np.arange(n_rows, dtype=np.int32), per_row)
+
+
+def _hub_rows(n_rows, nnz):
+    """Same nnz budget with one row owning everything but a 1-nnz tail."""
+    rows = np.zeros(nnz, np.int32)
+    rows[-1] = n_rows - 1  # keep the same row span as the uniform twin
+    return np.sort(rows)
+
+
+def test_v2_keys_discriminate_equal_stats_distributions():
+    """A hub-dominated and a uniform mode with identical
+    (nnz, n_rows, rank, platform) resolve to distinct v2 keys — the gap
+    the v1 keyspace left open."""
+    n_rows, per_row, rank = 64, 8, 8
+    uni = _uniform_rows(n_rows, per_row)
+    hub = _hub_rows(n_rows, n_rows * per_row)
+    assert uni.shape == hub.shape  # equal nnz: a v1 key cannot tell them apart
+    k_v1_uni = policy_key(len(uni), n_rows, rank, "cpu")
+    k_v1_hub = policy_key(len(hub), n_rows, rank, "cpu")
+    assert k_v1_uni == k_v1_hub
+    s_uni = mode_run_stats(uni, n_rows)
+    s_hub = mode_run_stats(hub, n_rows)
+    k_uni = policy_key(len(uni), n_rows, rank, "cpu", stats=s_uni)
+    k_hub = policy_key(len(hub), n_rows, rank, "cpu", stats=s_hub)
+    assert k_uni != k_hub
+    assert k_uni.startswith("v2/") and k_hub.startswith("v2/")
+    # the hub's dominance shows up in the duplication bin
+    assert s_hub.dup_bin == 0 and s_uni.dup_bin > 0
+
+
+def test_v2_keys_share_within_coarse_bins():
+    """Small perturbations of the distribution (run lengths within one
+    octave, same duplication/empty regime) keep the same v2 key, so
+    nearby tensors still share one autotune entry."""
+    n_rows, rank = 50, 8
+    a = _uniform_rows(n_rows, 10)                     # every run exactly 10
+    b = a.copy()
+    b[10:12] = 0                                      # row 0: 12, row 1: 8
+    b = np.sort(b)
+    assert len(a) == len(b)
+    sa, sb = mode_run_stats(a, n_rows), mode_run_stats(b, n_rows)
+    assert (sa.p95_run, sa.dup_share) != (sb.p95_run, sb.dup_share)
+    assert (sa.p95_bin, sa.dup_bin, sa.empty_bin) == \
+        (sb.p95_bin, sb.dup_bin, sb.empty_bin)
+    assert policy_key(len(a), n_rows, rank, "cpu", stats=sa) == \
+        policy_key(len(b), n_rows, rank, "cpu", stats=sb)
+
+
+def test_tuner_gives_equal_stats_modes_distinct_entries(small_tensor,
+                                                        tmp_path):
+    """End-to-end: tuning a hub mode after a uniform mode with the same
+    (nnz, n_rows, rank) creates a second cache entry instead of serving
+    the uniform winner (the v1 collision this PR closes)."""
+    mv, pi, b = _mode_problem(small_tensor)
+    n_rows, per_row = 50, 8
+    uni = _uniform_rows(n_rows, per_row)
+    hub = _hub_rows(n_rows, n_rows * per_row)
+    vals = mv.sorted_vals[: len(uni)]
+    pi_x = pi[: len(uni)]
+    b_x = jax.numpy.ones((n_rows, 4), pi.dtype)
+    tuner = Autotuner(cache_path=str(tmp_path / "c.json"), measure=False)
+    p_uni = tuner.policy_for_mode(uni, vals, pi_x, b_x, n_rows=n_rows, rank=4)
+    p_hub = tuner.policy_for_mode(hub, vals, pi_x, b_x, n_rows=n_rows, rank=4)
+    assert isinstance(p_uni, PhiPolicy) and isinstance(p_hub, PhiPolicy)
+    assert tuner.n_searches == 2 and tuner.n_hits == 0
+    assert len(tuner.cache.entries) == 2
+    # and repeat lookups hit their own entries
+    tuner.policy_for_mode(uni, vals, pi_x, b_x, n_rows=n_rows, rank=4)
+    tuner.policy_for_mode(hub, vals, pi_x, b_x, n_rows=n_rows, rank=4)
+    assert tuner.n_hits == 2 and tuner.n_searches == 2
+
+
+# ---------------------------------------------------------------------------
+# v1 -> v2 migration, quarantine, staleness
+# ---------------------------------------------------------------------------
+
+
+def _write_v1_store(path, key, policy_dict, seconds=0.01, source="grid"):
+    with open(path, "w") as f:
+        json.dump({"version": 1, "entries": {
+            key: {"policy": policy_dict, "seconds": seconds,
+                  "source": source, "tuned_at": 0},
+        }}, f)
+
+
+def test_v1_store_loads_quarantined_not_crashing(tmp_path):
+    path = str(tmp_path / "cache.json")
+    key = policy_key(100, 10, 8, "cpu")
+    _write_v1_store(path, key, {"strategy": "blocked", "block_nnz": 128,
+                                "block_rows": 64, "gather_mode": "prefetch"})
+    c = AutotuneCache(path)
+    assert c.entries == {}  # v1 entries are never served directly
+    assert c.quarantined[key]["reason"] == "v1-schema"
+    assert c.quarantined_policy(key) == PhiPolicy(
+        strategy="blocked", block_nnz=128, block_rows=64)
+    # quarantine survives a save/load round trip (audit trail, not data loss)
+    c.store(policy_key(1, 1, 1, "cpu"), PhiPolicy(), 0.1, "grid")
+    c2 = AutotuneCache(path)
+    assert c2.quarantined[key]["reason"] == "v1-schema"
+
+
+def test_non_measuring_tuner_migrates_v1_winner(small_tensor, tmp_path):
+    """A v1 winner for the same problem is adopted under its v2 key
+    (source='migrated-v1') instead of falling back to the heuristic."""
+    mv, pi, b = _mode_problem(small_tensor)
+    path = str(tmp_path / "cache.json")
+    platform = jax.default_backend()
+    v1_key = policy_key(mv.nnz, mv.n_rows, 4, platform)
+    marker = {"strategy": "blocked", "block_nnz": 512, "block_rows": 16,
+              "gather_mode": "prefetch"}  # distinctive: not the heuristic pick
+    _write_v1_store(path, v1_key, marker)
+
+    tuner = Autotuner(cache_path=path, measure=False)
+    pol = tuner.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                                n_rows=mv.n_rows, rank=4)
+    assert pol == PhiPolicy(**marker)
+    assert tuner.n_migrated == 1
+    v2_key = policy_key(mv.nnz, mv.n_rows, 4, platform,
+                        stats=mode_run_stats(np.asarray(mv.rows), mv.n_rows))
+    entry = tuner.cache.entries[v2_key]
+    assert entry["source"] == "migrated-v1"
+    assert entry["migrated_from"] == v1_key
+    assert entry["schema"] == 1  # honest provenance: still stale for fresh
+    # round trip: a fresh non-measuring tuner now *hits* the migrated entry
+    t2 = Autotuner(cache_path=path, measure=False)
+    assert t2.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                              n_rows=mv.n_rows, rank=4) == pol
+    assert t2.n_hits == 1 and t2.n_migrated == 0
+
+
+def test_measuring_tuner_retunes_migrated_v1_entry(small_tensor, tmp_path):
+    """Migrated v1 winners keep v1 provenance, so a measuring tuner
+    re-tunes them rather than trusting a measurement from another era."""
+    mv, pi, b = _mode_problem(small_tensor)
+    path = str(tmp_path / "cache.json")
+    v1_key = policy_key(mv.nnz, mv.n_rows, 4, jax.default_backend())
+    _write_v1_store(path, v1_key, {"strategy": "segment", "block_nnz": 256,
+                                   "block_rows": 256,
+                                   "gather_mode": "prefetch"})
+    t1 = Autotuner(cache_path=path, measure=False)
+    t1.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                       n_rows=mv.n_rows, rank=4)
+    assert t1.n_migrated == 1
+    t2 = Autotuner(cache_path=path, iters=1, warmup=1, burst=2)  # measuring
+    t2.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                       n_rows=mv.n_rows, rank=4)
+    assert t2.n_hits == 0 and t2.n_grid_searches == 1
+    v2_key = policy_key(mv.nnz, mv.n_rows, 4, jax.default_backend(),
+                        stats=mode_run_stats(np.asarray(mv.rows), mv.n_rows))
+    assert t2.cache.entries[v2_key]["source"] == "grid"
+    assert t2.cache.entries[v2_key]["schema"] == AutotuneCache.VERSION
+
+
+def test_corrupt_v2_entries_are_quarantined(tmp_path):
+    """Malformed entries inside a current-version store are quarantined
+    (preserved with a reason) and never crash load or lookup."""
+    path = str(tmp_path / "cache.json")
+    good = policy_key(100, 10, 8, "cpu")
+    with open(path, "w") as f:
+        json.dump({"version": AutotuneCache.VERSION, "entries": {
+            "not-a-dict": 42,
+            "no-policy": {"seconds": 0.1, "source": "grid"},
+            good: {"policy": {"strategy": "segment", "block_nnz": 256,
+                              "block_rows": 256, "gather_mode": "prefetch"},
+                   "seconds": 0.01, "source": "grid", "tuned_at": 0},
+        }}, f)
+    c = AutotuneCache(path)
+    assert c.lookup(good) == PhiPolicy(strategy="segment")
+    assert c.lookup("not-a-dict") is None and c.lookup("no-policy") is None
+    assert c.quarantined["not-a-dict"]["reason"] == "malformed-entry"
+    assert c.quarantined["no-policy"]["reason"] == "malformed-entry"
+    # the quarantine persists across a store() save
+    c.store("fresh", PhiPolicy(), 0.1, "grid")
+    c2 = AutotuneCache(path)
+    assert "not-a-dict" in c2.quarantined and c2.lookup(good) is not None
+
+
+def test_stale_jax_version_roundtrip(small_tensor, tmp_path):
+    """Entries tuned under another jax version serve non-measuring tuners
+    but are re-tuned (not crashed on) by measuring ones."""
+    mv, pi, b = _mode_problem(small_tensor)
+    path = str(tmp_path / "cache.json")
+    t0 = Autotuner(cache_path=path, iters=1, warmup=1, burst=2)
+    pol = t0.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                             n_rows=mv.n_rows, rank=4)
+    v2_key = policy_key(mv.nnz, mv.n_rows, 4, jax.default_backend(),
+                        stats=mode_run_stats(np.asarray(mv.rows), mv.n_rows))
+    # simulate a jax upgrade between processes
+    t0.cache.entries[v2_key]["jax"] = "0.0.0-ancient"
+    t0.cache.save()
+    assert AutotuneCache.entry_is_stale(AutotuneCache(path).entries[v2_key])
+
+    stale_ok = Autotuner(cache_path=path, measure=False)  # serves stale
+    assert stale_ok.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                                    n_rows=mv.n_rows, rank=4) == pol
+    assert stale_ok.n_hits == 1 and stale_ok.n_searches == 0
+
+    retuner = Autotuner(cache_path=path, iters=1, warmup=1, burst=2)
+    retuner.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                            n_rows=mv.n_rows, rank=4)
+    assert retuner.n_hits == 0 and retuner.n_grid_searches == 1
+    assert retuner.cache.entries[v2_key]["jax"] == jax.__version__
+
+
+def test_stale_device_kind_is_retuned(tmp_path):
+    """device_kind refines the platform key: an entry tuned on another
+    device generation is stale for fresh lookups."""
+    path = str(tmp_path / "cache.json")
+    c = AutotuneCache(path)
+    key = policy_key(10, 5, 4, "cpu")
+    c.store(key, PhiPolicy(strategy="segment"), 0.5, "grid")
+    assert c.lookup(key, fresh=True) is not None
+    c.entries[key]["device_kind"] = "TPU v9000"
+    assert c.lookup(key, fresh=True) is None          # stale for measuring
+    assert c.lookup(key) == PhiPolicy(strategy="segment")  # served otherwise
+
+
+# ---------------------------------------------------------------------------
+# probe failure recording
+# ---------------------------------------------------------------------------
+
+
+def test_probe_failures_recorded_in_cache_entry(small_tensor, tmp_path,
+                                                monkeypatch):
+    """When every probe fails, the heuristic fallback entry records *why*
+    (mirroring grid_search's 3-tuple reasons) instead of swallowing it."""
+    mv, pi, b = _mode_problem(small_tensor)
+    monkeypatch.setattr(
+        Autotuner, "_time_policy",
+        lambda self, pol, *a, **k: (_ for _ in ()).throw(
+            ValueError(f"probe boom: {pol.label()}")))
+    tuner = Autotuner(cache_path=str(tmp_path / "c.json"), iters=1, warmup=1)
+    pol = tuner.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
+                                n_rows=mv.n_rows, rank=4)
+    assert isinstance(pol, PhiPolicy)
+    (entry,) = tuner.cache.entries.values()
+    assert entry["source"] == "heuristic" and entry["seconds"] is None
+    assert len(entry["probe_errors"]) >= 2  # one reason per failed candidate
+    assert all("probe boom" in e for e in entry["probe_errors"])
+    assert "ValueError" in entry["probe_errors"][0]

@@ -1,0 +1,190 @@
+"""Degenerate-shape hardening: ``repro.core.pi`` and the sharded layout
+expansion on single-row modes, all-duplicate rows, and nnz=0 (legal after
+filtering; crashed ``expand_to_layout`` before the PR 2 fix), checked
+against the float64 dense oracle in ``conftest``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import dense_phi_reference
+
+from repro.core.layout import build_blocked_layout, shard_blocked_layout
+from repro.core.phi import (
+    ALL_PHI_STRATEGIES,
+    expand_to_layout,
+    expand_to_shards,
+    phi_from_rows,
+    phi_mu_step,
+)
+from repro.core.pi import pi_rows
+from repro.core.sparse_tensor import random_ktensor
+
+
+def _pi_oracle(indices, factors, n):
+    """Float64 numpy reference for pi_rows."""
+    idx = np.asarray(indices)
+    out = np.ones((idx.shape[0], np.asarray(factors[0]).shape[1]), np.float64)
+    for m, f in enumerate(factors):
+        if m == n:
+            continue
+        out *= np.asarray(f, np.float64)[idx[:, m]]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pi_rows edge cases
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_pi_rows_empty_mode(mode):
+    """nnz=0: a (0, R) result with the factor dtype, no gather blow-up."""
+    kt = random_ktensor(jax.random.PRNGKey(0), (6, 5, 4), rank=3)
+    idx = jnp.zeros((0, 3), jnp.int32)
+    pi = pi_rows(idx, kt.factors, mode)
+    assert pi.shape == (0, 3)
+    assert pi.dtype == kt.factors[0].dtype
+    np.testing.assert_array_equal(np.asarray(pi),
+                                  _pi_oracle(idx, kt.factors, mode))
+
+
+def test_pi_rows_single_nonzero_matches_oracle():
+    kt = random_ktensor(jax.random.PRNGKey(1), (7, 3, 5, 2), rank=4)
+    idx = jnp.asarray([[6, 2, 4, 1]], jnp.int32)
+    for mode in range(4):
+        pi = pi_rows(idx, kt.factors, mode)
+        np.testing.assert_allclose(np.asarray(pi),
+                                   _pi_oracle(idx, kt.factors, mode),
+                                   rtol=1e-6)
+
+
+def test_pi_rows_all_duplicate_coordinates():
+    """Repeated identical coordinates must produce identical rows (the
+    gather is pure; no accidental accumulation across duplicates)."""
+    kt = random_ktensor(jax.random.PRNGKey(2), (5, 4, 3), rank=3)
+    idx = jnp.tile(jnp.asarray([[2, 1, 0]], jnp.int32), (11, 1))
+    for mode in range(3):
+        pi = np.asarray(pi_rows(idx, kt.factors, mode))
+        np.testing.assert_allclose(pi, np.broadcast_to(pi[0], pi.shape),
+                                   rtol=0, atol=0)
+        np.testing.assert_allclose(pi, _pi_oracle(idx, kt.factors, mode),
+                                   rtol=1e-6)
+
+
+def test_pi_rows_single_row_mode_matches_oracle():
+    """A mode of extent 1 contributes a constant gather; the other modes
+    still vary per nonzero."""
+    kt = random_ktensor(jax.random.PRNGKey(3), (1, 6, 4), rank=2)
+    rng = np.random.default_rng(0)
+    idx = np.stack([
+        np.zeros(9, np.int32),
+        rng.integers(0, 6, 9).astype(np.int32),
+        rng.integers(0, 4, 9).astype(np.int32),
+    ], axis=1)
+    for mode in range(3):
+        pi = pi_rows(jnp.asarray(idx), kt.factors, mode)
+        np.testing.assert_allclose(np.asarray(pi),
+                                   _pi_oracle(idx, kt.factors, mode),
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# expand_to_shards + sharded Phi edge cases (vs the dense f64 oracle)
+# ---------------------------------------------------------------------------
+
+
+def _phi_problem(rows, n_rows, rank=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    nnz = len(rows)
+    vals = jax.random.uniform(k1, (nnz,), minval=0.5, maxval=2.0)
+    pi = jax.random.uniform(k2, (nnz, rank), minval=0.1, maxval=1.0)
+    b = jax.random.uniform(k3, (n_rows, rank), minval=0.1, maxval=1.0)
+    return vals, pi, b
+
+
+def test_expand_to_shards_nnz0_produces_padded_zeros():
+    """nnz=0 (PR 2 regression): the expansion is all-zero with the full
+    per-shard padded shapes, and the sharded Phi is exactly zero."""
+    n_rows, rank = 16, 4
+    rows = np.zeros(0, np.int32)
+    base = build_blocked_layout(rows, n_rows, block_nnz=16, block_rows=8)
+    sl = shard_blocked_layout(base, 2)
+    vals, pi, b = _phi_problem(rows, n_rows, rank)
+    vals_e, pi_e = expand_to_shards(sl, vals, pi)
+    assert vals_e.shape == (2, sl.n_grid_shard * sl.block_nnz)
+    assert pi_e.shape == (2, sl.n_grid_shard * sl.block_nnz, rank)
+    assert float(jnp.abs(vals_e).sum()) == 0.0
+    assert float(jnp.abs(pi_e).sum()) == 0.0
+    out = phi_from_rows(jnp.asarray(rows), vals, pi, b, n_rows,
+                        strategy="sharded", layout=sl)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((n_rows, rank)))
+
+
+def test_single_row_mode_all_strategies_match_oracle():
+    """n_rows=1 (a mode of extent 1): every strategy — including the
+    sharded schedule collapsed to one shard — matches the dense oracle."""
+    n_rows, nnz, rank = 1, 37, 4
+    rows = np.zeros(nnz, np.int32)
+    vals, pi, b = _phi_problem(rows, n_rows, rank, seed=1)
+    ref = dense_phi_reference(rows, vals, pi, b, n_rows)
+    base = build_blocked_layout(rows, n_rows, block_nnz=16, block_rows=8)
+    sl = shard_blocked_layout(base, 1)
+    for strategy in ALL_PHI_STRATEGIES:
+        layout = {"blocked": base, "pallas": base, "sharded": sl}.get(strategy)
+        out = phi_from_rows(jnp.asarray(rows), vals, pi, b, n_rows,
+                            strategy=strategy, layout=layout)
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-5, atol=1e-5,
+                                   err_msg=strategy)
+
+
+def test_all_duplicate_rows_sharded_matches_oracle():
+    """Every nonzero in one interior row: one shard owns the entire
+    stream, the rest run all-dummy grid steps, and both the sharded Phi
+    and the fused MU step match the dense oracle."""
+    n_rows, nnz, rank = 32, 64, 4
+    rows = np.full(nnz, 13, np.int32)
+    vals, pi, b = _phi_problem(rows, n_rows, rank, seed=2)
+    base = build_blocked_layout(rows, n_rows, block_nnz=16, block_rows=8)
+    sl = shard_blocked_layout(base, 2)
+    # exactly one shard carries nonzeros
+    assert sorted(bool(x) for x in sl.shard_nnz) == [False, True]
+    vals_e, _ = expand_to_shards(sl, vals, pi)
+    assert int(jnp.count_nonzero(vals_e)) == nnz
+
+    ref = dense_phi_reference(rows, vals, pi, b, n_rows)
+    out = phi_from_rows(jnp.asarray(rows), vals, pi, b, n_rows,
+                        strategy="sharded", layout=sl)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-5, atol=1e-5)
+
+    tol = 1e-4
+    viol_ref = np.max(np.abs(np.minimum(np.asarray(b, np.float64), 1.0 - ref)))
+    b_ref = np.asarray(b, np.float64) * ref if viol_ref > tol else np.asarray(b)
+    b_new, viol = phi_mu_step(jnp.asarray(rows), vals, pi, b, n_rows, tol=tol,
+                              strategy="sharded", layout=sl)
+    np.testing.assert_allclose(float(viol), viol_ref, rtol=3e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_new), b_ref, rtol=3e-5, atol=1e-5)
+
+
+def test_expand_to_shards_matches_unsharded_expansion():
+    """Per-shard expanded streams are a permutation-with-padding of the
+    unsharded expansion: same multiset of (val, pi-row) pairs."""
+    n_rows, nnz, rank = 24, 100, 3
+    rng = np.random.default_rng(3)
+    rows = np.sort(rng.integers(0, n_rows, nnz).astype(np.int32))
+    vals, pi, b = _phi_problem(rows, n_rows, rank, seed=3)
+    base = build_blocked_layout(rows, n_rows, block_nnz=16, block_rows=8)
+    sl = shard_blocked_layout(base, 3)
+    vals_flat, _ = expand_to_layout(base, vals, pi)
+    vals_sh, pi_sh = expand_to_shards(sl, vals, pi)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(vals_sh).ravel()),
+        np.sort(np.concatenate([np.asarray(vals_flat),
+                                np.zeros(vals_sh.size - vals_flat.size,
+                                         np.float32)])),
+        rtol=1e-6)
+    # valid slots carry exactly the original values
+    np.testing.assert_allclose(
+        np.sort(np.asarray(vals_sh)[np.asarray(sl.valid)]),
+        np.sort(np.asarray(vals)), rtol=1e-6)

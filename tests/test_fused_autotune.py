@@ -14,7 +14,7 @@ from repro.core import (
     phi_mu_step,
     sort_mode,
 )
-from repro.core.layout import build_blocked_layout
+from repro.core.layout import build_blocked_layout, mode_run_stats
 from repro.core.phi import expand_to_layout
 from repro.core.pi import pi_rows
 from repro.core.policy import (
@@ -102,6 +102,49 @@ def test_cpapr_fused_loglik_monotone(small_tensor, strategy):
     assert len(ll) >= 2
     for a, b in zip(ll, ll[1:]):
         assert b >= a - 1e-3 * abs(a), f"loglik decreased: {a} -> {b}"
+
+
+# ---------------------------------------------------------------------------
+# burst-mode probe
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["segment", "blocked"])
+def test_burst_probe_loop_matches_iterated_mu_steps(small_tensor, strategy):
+    """The autotuner's while_loop burst computes exactly `burst` unrolled
+    fused MU steps (tol=-1: update always applied), so its timing measures
+    the solver's real inner-loop dataflow."""
+    from repro.perf.autotune import _jit_mu_burst
+
+    mv, pi, b, layout = _mode_problem(small_tensor)
+    layout_arg = layout if strategy == "blocked" else None
+    burst = 3
+    bb = b
+    for _ in range(burst):
+        bb, viol_ref = phi_mu_step(mv.rows, mv.sorted_vals, pi, bb, mv.n_rows,
+                                   tol=-1.0, strategy=strategy,
+                                   layout=layout_arg)
+    out_b, out_v = _jit_mu_burst(mv.rows, mv.sorted_vals, pi, b, None, None,
+                                 n_rows=mv.n_rows, strategy=strategy,
+                                 layout=layout_arg, burst=burst)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(bb),
+                               rtol=3e-5, atol=1e-6)
+    np.testing.assert_allclose(float(out_v), float(viol_ref), rtol=3e-5)
+
+
+def test_bench_burst_seconds_divides_by_burst():
+    from repro.perf.timing import bench_burst_seconds
+
+    calls = []
+
+    def fake(x, burst):
+        calls.append(burst)
+        return x
+
+    sec = bench_burst_seconds(fake, 1.0, burst=4, warmup=1, iters=1)
+    assert sec >= 0.0 and all(c == 4 for c in calls)
+    with pytest.raises(ValueError):
+        bench_burst_seconds(fake, 1.0, burst=0)
 
 
 # ---------------------------------------------------------------------------
@@ -219,8 +262,15 @@ def test_autotuner_measured_search_caches_winner(small_tensor, tmp_path):
                                 n_rows=mv.n_rows, rank=4)
     assert isinstance(pol, PhiPolicy)
     assert tuner.n_grid_searches == 1
-    key = policy_key(mv.nnz, mv.n_rows, 4, jax.default_backend())
+    stats = mode_run_stats(np.asarray(mv.rows), mv.n_rows)
+    key = policy_key(mv.nnz, mv.n_rows, 4, jax.default_backend(), stats=stats)
     assert tuner.cache.entries[key]["source"] == "grid"
+    # burst probe is the default, and the entry records its provenance
+    assert tuner.cache.entries[key]["probe"] == "burst"
+    assert tuner.burst > 1
+    assert tuner.cache.entries[key]["burst"] == tuner.burst
+    assert tuner.cache.entries[key]["jax"] == jax.__version__
+    assert tuner.cache.entries[key]["schema"] == AutotuneCache.VERSION
     # same problem again: served from memory-resident cache, no new search
     pol2 = tuner.policy_for_mode(mv.rows, mv.sorted_vals, pi, b,
                                  n_rows=mv.n_rows, rank=4)
@@ -235,7 +285,8 @@ def test_autotuner_retunes_heuristic_placeholder(small_tensor, tmp_path):
     pi = pi_rows(mv.sorted_idx, kt.factors, 0)
     b = kt.factors[0] * kt.lam[None, :]
     path = str(tmp_path / "cache.json")
-    key = policy_key(mv.nnz, mv.n_rows, 4, jax.default_backend())
+    stats = mode_run_stats(np.asarray(mv.rows), mv.n_rows)
+    key = policy_key(mv.nnz, mv.n_rows, 4, jax.default_backend(), stats=stats)
 
     t1 = Autotuner(cache_path=path, measure=False)
     t1.policy_for_mode(mv.rows, mv.sorted_vals, pi, b, n_rows=mv.n_rows, rank=4)

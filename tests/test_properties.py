@@ -13,7 +13,9 @@ from hypothesis import given, settings, strategies as st
 from conftest import dense_phi_reference
 
 from repro.core.layout import (
+    ModeStats,
     build_blocked_layout,
+    mode_run_stats,
     round_up,
     shard_blocked_layout,
 )
@@ -161,6 +163,52 @@ def test_sharded_layout_partitions_any_distribution(problem):
     assert np.all(np.diff(sl.grid_rb, axis=1) >= 0)
     for s in range(n_shards):
         assert set(sl.grid_rb[s].tolist()) == set(range(sl.n_rb_shard))
+
+
+@given(sorted_rows())
+@settings(**SETTINGS)
+def test_mode_run_stats_invariants(rows_nrows):
+    """mode_run_stats ranges and bin bounds hold for any row multiset,
+    including nnz=0 (a valid mode after filtering)."""
+    rows, n_rows = rows_nrows
+    s = mode_run_stats(rows, n_rows)
+    assert s.nnz == len(rows) and s.n_rows == n_rows
+    assert 0.0 <= s.empty_frac <= 1.0
+    assert 0 <= s.empty_bin <= 3
+    assert 0 <= s.dup_bin <= ModeStats.DUP_BIN_CAP
+    if len(rows):
+        assert 1 <= s.max_run <= len(rows)
+        assert 0.0 < s.dup_share <= 1.0
+        assert s.p95_run <= s.max_run
+        assert s.p95_bin >= 0
+        # key fragment is a pure function of the bins
+        assert s.key_fragment() == \
+            f"p95=b{s.p95_bin}/dup=b{s.dup_bin}/emt=b{s.empty_bin}"
+    else:
+        assert s.max_run == 0 and s.dup_share == 0.0 and s.empty_frac == 1.0
+
+
+@given(st.integers(4, 200), st.integers(1, 16))
+@settings(**SETTINGS)
+def test_v2_keys_always_split_hub_from_uniform(n_rows, per_row):
+    """For every (n_rows >= 4, per-row count): the perfectly uniform mode
+    and the hub mode with the same nnz land in different duplication
+    bins, hence distinct v2 cache keys (the discrimination property the
+    v2 schema exists for)."""
+    from repro.perf.autotune import policy_key
+
+    nnz = n_rows * per_row
+    uni = np.repeat(np.arange(n_rows, dtype=np.int32), per_row)
+    hub = np.zeros(nnz, np.int32)
+    hub[-1] = n_rows - 1
+    hub = np.sort(hub)
+    s_uni = mode_run_stats(uni, n_rows)
+    s_hub = mode_run_stats(hub, n_rows)
+    assert s_hub.dup_bin == 0  # the hub row owns > half of nnz
+    assert s_uni.dup_bin >= 2  # uniform: max_run/nnz = 1/n_rows <= 1/4
+    k_uni = policy_key(nnz, n_rows, 4, "cpu", stats=s_uni)
+    k_hub = policy_key(nnz, n_rows, 4, "cpu", stats=s_hub)
+    assert k_uni != k_hub
 
 
 @given(st.integers(1, 10**7), st.integers(1, 10**5), st.sampled_from([4, 16, 64]))
