@@ -1,0 +1,197 @@
+"""Rebalancing + sharded-Pi receipts (PR 4 tentpole).
+
+Per quick-tier tensor (mode 0):
+
+  * measures each static shard's sub-problem individually (a fused MU
+    step on the shard's slice of the sorted stream) to get real
+    ``shard_seconds``, rebalances the row-block boundaries with them
+    (``repro.core.layout.rebalance_shards``), and times the full fused
+    sharded step before/after — ``rebalance_gain``;
+  * records the analytic nnz-imbalance (max/mean shard nnz) before and
+    after, which is what the re-split optimizes (on forced host devices
+    sharing one physical CPU the measured gain understates real-mesh
+    scaling);
+  * times sharded MTTKRP (the CP-ALS bottleneck, routed through the same
+    stack) against the single-device scatter baseline —
+    ``sharded_mttkrp_speedup``;
+  * accounts the sharded-Pi gather: per-device gathered-factor +
+    index-map bytes (``pi_gather_bytes``, the
+    ``repro.perf.hlo.pi_gather_wire_bound`` operand) vs the replicated
+    O(I*R) factor baseline — ``pi_wire_ratio`` < 1 means the shard-local
+    gather moves less than replication.
+
+Force a multi-device CPU run with::
+
+    PYTHONPATH=src python -m benchmarks.run --devices 4 --only rebalance
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.core import sort_mode
+from repro.core.distributed import make_phi_mesh
+from repro.core.layout import (
+    build_blocked_layout,
+    build_shard_pi_gather,
+    rebalance_shards,
+    shard_blocked_layout,
+    shard_stream_cuts,
+)
+from repro.core.phi import (
+    _sharded_block_rows,
+    expand_to_layout,
+    expand_to_shards,
+    krao_reduce_rows,
+    phi_mu_step,
+)
+from repro.core.pi import pi_rows
+from repro.perf.hlo import pi_gather_wire_bound, pi_replicated_gather_bytes
+from repro.perf.timing import bench_seconds
+
+from .common import QUICK_TENSORS, RANK, Reporter, geomean, get_tensor
+
+TOL = 1e-4
+
+# Per-nonzero arrays are jit arguments, never closure constants — XLA
+# embeds closed-over arrays as literals, distorting CPU timings ~10-50x.
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "strategy", "layout", "mesh")
+)
+def _step(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy, layout, mesh):
+    return phi_mu_step(rows, vals, pi, b, n_rows=n_rows, tol=TOL,
+                       strategy=strategy, layout=layout,
+                       vals_e=vals_e, pi_e=pi_e, mesh=mesh)
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "mesh"))
+def _mttkrp_sharded(vals_e, kr_e, layout, mesh):
+    from repro.core.distributed import krao_sharded
+
+    return krao_sharded(layout, vals_e, kr_e, mesh=mesh)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows",))
+def _mttkrp_scatter(rows, vals, kr, n_rows):
+    return krao_reduce_rows(rows, vals, kr, n_rows, strategy="scatter")
+
+
+def _measure_shard_seconds(sl, rows, vals, pi, b, iters):
+    """Per-shard fused-step seconds: each shard's slice of the sorted
+    stream as its own blocked sub-problem (the autotuner's shard view)."""
+    cuts = shard_stream_cuts(sl, rows)
+    br = sl.block_rows
+    secs = np.zeros(sl.n_shards)
+    for s in range(sl.n_shards):
+        c0, c1 = cuts[s], cuts[s + 1]
+        if c1 <= c0:
+            continue
+        row_lo = int(sl.rb_start[s]) * br
+        local_rows = rows[c0:c1] - row_lo
+        n_local = int(sl.rb_count[s]) * br
+        lay = build_blocked_layout(local_rows, n_local, sl.block_nnz, br)
+        vals_s = vals[c0:c1]
+        pi_s = pi[c0:c1]
+        b_s = b[row_lo : row_lo + n_local]
+        ve, pe = expand_to_layout(lay, vals_s, pi_s)
+        secs[s] = bench_seconds(
+            _step, local_rows, vals_s, pi_s, b_s, ve, pe,
+            n_rows=n_local, strategy="blocked", layout=lay, mesh=None,
+            iters=iters)
+    return secs
+
+
+def _imbalance(sl) -> float:
+    return float(sl.shard_nnz.max()) / max(float(sl.shard_nnz.mean()), 1.0)
+
+
+def run(tensors=QUICK_TENSORS, iters: int = 3, devices: int | None = None):
+    rep = Reporter("rebalance")
+    n_dev = devices if devices is not None else jax.device_count()
+    gains, mt_speedups, wire_ratios = [], [], []
+    for name in tensors:
+        t, kt = get_tensor(name)
+        mv = sort_mode(t, 0)
+        rows = np.asarray(mv.rows)
+        pi = pi_rows(mv.sorted_idx, kt.factors, 0)
+        b = kt.factors[0] * kt.lam[None, :]
+        br = _sharded_block_rows(mv.n_rows, max(1, n_dev))
+        base = build_blocked_layout(rows, mv.n_rows, 256, br)
+        n_shards = min(n_dev, base.n_row_blocks)
+        if n_shards < 2:
+            continue
+        mesh = make_phi_mesh(n_shards) if jax.device_count() >= n_shards > 1 \
+            else None
+
+        static = shard_blocked_layout(base, n_shards)
+        shard_seconds = _measure_shard_seconds(static, rows, mv.sorted_vals,
+                                               pi, b, iters)
+        # measured-time weighting drives the timed gain; the imbalance
+        # receipt uses the deterministic nnz-only re-split (on forced host
+        # devices sharing one CPU, per-shard timings carry enough jitter
+        # to chase noise)
+        rebal = rebalance_shards(static, shard_seconds=shard_seconds)
+        rebal_nnz = rebalance_shards(static)
+
+        times = {}
+        for label, sl in (("static", static), ("rebalanced", rebal)):
+            vals_es, pi_es = expand_to_shards(sl, mv.sorted_vals, pi)
+            times[label] = bench_seconds(
+                _step, mv.rows, mv.sorted_vals, pi, b, vals_es, pi_es,
+                n_rows=mv.n_rows, strategy="sharded", layout=sl, mesh=mesh,
+                iters=iters)
+        gain = times["static"] / times["rebalanced"]
+        gains.append(gain)
+
+        # sharded MTTKRP (CP-ALS bottleneck) vs single-device scatter
+        t_scatter = bench_seconds(
+            _mttkrp_scatter, mv.rows, mv.sorted_vals, pi,
+            n_rows=mv.n_rows, iters=iters)
+        vals_es, kr_es = expand_to_shards(static, mv.sorted_vals, pi)
+        t_shard_mt = bench_seconds(
+            _mttkrp_sharded, vals_es, kr_es,
+            layout=static, mesh=mesh, iters=iters)
+        mt_speedup = t_scatter / t_shard_mt
+        mt_speedups.append(mt_speedup)
+
+        # sharded-Pi wire accounting: what the shard-local gather moves
+        # per device vs what the replicated path holds per device (the
+        # full factor matrix of every gathered mode *plus* its expanded
+        # (slot, R) Pi slice)
+        pig = build_shard_pi_gather(static, np.asarray(mv.sorted_idx), 0)
+        slot = static.n_grid_shard * static.block_nnz
+        gather_bytes = pi_gather_wire_bound(
+            slot, pig.touched_rows_pad, RANK, t.ndim)
+        repl_bytes = (pi_replicated_gather_bytes(t.shape, 0, RANK)
+                      + slot * RANK * 4)
+        wire_ratio = gather_bytes / max(repl_bytes, 1.0)
+        wire_ratios.append(wire_ratio)
+
+        rep.row(tensor=name, nnz=mv.nnz, n_rows=mv.n_rows,
+                devices=n_shards, real_mesh=mesh is not None,
+                static_s=round(times["static"], 6),
+                rebalanced_s=round(times["rebalanced"], 6),
+                rebalance_gain=round(gain, 3),
+                imbalance_static=round(_imbalance(static), 3),
+                imbalance_rebalanced=round(_imbalance(rebal_nnz), 3),
+                boundaries_moved=not np.array_equal(static.rb_start,
+                                                    rebal.rb_start),
+                mttkrp_scatter_s=round(t_scatter, 6),
+                mttkrp_sharded_s=round(t_shard_mt, 6),
+                sharded_mttkrp_speedup=round(mt_speedup, 3),
+                pi_gather_bytes=round(gather_bytes),
+                pi_replicated_bytes=round(repl_bytes),
+                pi_wire_ratio=round(wire_ratio, 4))
+    rep.row(summary="geomean", devices=n_dev,
+            rebalance_gain=round(geomean(gains), 3),
+            sharded_mttkrp_speedup=round(geomean(mt_speedups), 3),
+            pi_wire_ratio=round(geomean(wire_ratios), 4))
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

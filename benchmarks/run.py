@@ -36,6 +36,7 @@ def _load_all():
         bench_modes,
         bench_policy,
         bench_ppa,
+        bench_rebalance,
         bench_roofline,
         bench_sharded,
         bench_stream,
@@ -48,6 +49,7 @@ def _load_all():
         "policy": bench_policy.run,        # Exps. 3-5 / Figs. 8-13
         "fused": bench_fused.run,          # PR 1: fused MU fast path
         "sharded": bench_sharded.run,      # PR 2: multi-device sharded Phi
+        "rebalance": bench_rebalance.run,  # PR 4: rebalancing + sharded Pi
         "modes": bench_modes.run,          # Exp. 6 / Figs. 14-15
         "stream": bench_stream.run,        # Exp. 7 / Figs. 16-17
         "mttkrp": bench_mttkrp.run,        # Exp. 8 / Figs. 18-19
@@ -78,9 +80,14 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
       fused:     {tensor: {strategy: {unfused_s, fused_s, speedup}}}
       sharded:   {tensor: {devices, single_s, sharded_s, speedup,
                            combine_bytes, combine_bound_bytes}}
+      rebalance: {tensor: {devices, rebalance_gain, imbalance_static,
+                           imbalance_rebalanced, boundaries_moved,
+                           sharded_mttkrp_speedup, pi_gather_bytes,
+                           pi_replicated_bytes, pi_wire_ratio}}
       summary:   geomeans (policy speedup, autotune regret, v2-vs-v1 regret,
-                           fused speedup, sharded speedup) + total autotune
-                           probe failures
+                           fused speedup, sharded speedup, rebalance gain,
+                           sharded-MTTKRP speedup, Pi wire ratio) + total
+                           autotune probe failures
 
     ``autotune_key`` is the v2 distribution-aware cache key and
     ``p95_run``/``dup_share``/``empty_frac`` the segment-run stats behind
@@ -88,11 +95,16 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
     would have inflicted on the hub twin of each mode (see
     ``bench_policy``).  ``autotune_probe_failures`` counts probes whose
     failure reasons the tuner recorded in the cache instead of silently
-    falling back.
+    falling back.  Schema 4 adds the ``rebalance`` section (see
+    ``bench_rebalance``): measured-time-weighted shard rebalancing gain,
+    the sharded-MTTKRP speedup of the CP-ALS kernel family routed through
+    the strategy stack, and the sharded-Pi per-device gather bytes
+    against the replicated O(I*R) baseline (``pi_wire_ratio`` < 1 means
+    the shard-local gather moves less than replication).
     """
-    out: dict = {"schema": 3, "generated_unix": time.time(),
+    out: dict = {"schema": 4, "generated_unix": time.time(),
                  "breakdown": {}, "policy": {}, "fused": {}, "sharded": {},
-                 "summary": {}}
+                 "rebalance": {}, "summary": {}}
     found = False
 
     rows = _load_rows("breakdown")
@@ -157,6 +169,25 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
             elif r.get("summary") == "geomean":
                 out["summary"]["sharded_speedup"] = r["speedup"]
                 out["summary"]["sharded_devices"] = r.get("devices")
+
+    rows = _load_rows("rebalance")
+    if rows:
+        found = True
+        keep = ("devices", "real_mesh", "static_s", "rebalanced_s",
+                "rebalance_gain", "imbalance_static", "imbalance_rebalanced",
+                "boundaries_moved", "mttkrp_scatter_s", "mttkrp_sharded_s",
+                "sharded_mttkrp_speedup", "pi_gather_bytes",
+                "pi_replicated_bytes", "pi_wire_ratio")
+        for r in rows:
+            if "tensor" in r:
+                out["rebalance"][r["tensor"]] = {
+                    k: r[k] for k in keep if k in r
+                }
+            elif r.get("summary") == "geomean":
+                for k in ("rebalance_gain", "sharded_mttkrp_speedup",
+                          "pi_wire_ratio"):
+                    if k in r:
+                        out["summary"][k] = r[k]
 
     if not found:
         return None

@@ -10,21 +10,28 @@ Public API:
                                        CPAPRConfig(policy="auto") engages the
                                        persistent autotuner (repro.perf.autotune)
 """
-from .cpals import cp_als, fit_score, mttkrp
+from .cpals import cp_als, fit_score, mttkrp, mttkrp_mode
 from .cpapr import CPAPRConfig, CPAPRResult, cpapr_mu, kkt_violation, poisson_loglik
 from .layout import (
     BlockedLayout,
     ModeStats,
     ShardedBlockedLayout,
+    ShardedPiGather,
     build_blocked_layout,
+    build_shard_pi_gather,
     mode_run_stats,
+    rebalance_shards,
     shard_blocked_layout,
+    shard_row_ranges,
+    shard_stream_cuts,
 )
 from .phi import (
     ALL_PHI_STRATEGIES,
     PHI_STRATEGIES,
     expand_to_layout,
     expand_to_shards,
+    expand_vals_to_shards,
+    krao_reduce_rows,
     phi_flops_words,
     phi_from_rows,
     phi_mode,

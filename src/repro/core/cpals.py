@@ -3,23 +3,33 @@
 MTTKRP for mode n:  M[i, :] = sum_{j: idx[j,n]=i} x_j * KRrow_j
 where KRrow_j = prod_{m != n} A^(m)[idx[j, m], :]  — the same gathered
 Khatri-Rao rows as Pi^(n), so the Phi reduction machinery is reused
-verbatim (strategy/policy included).
+verbatim through :func:`repro.core.phi.krao_reduce_rows`: every strategy
+the Phi kernels support (``scatter``/``segment``/``blocked``/``pallas``/
+``sharded``) and ``policy="auto"`` (the persistent autotuner) apply to
+MTTKRP and CP-ALS unchanged.
+
+The per-mode ALS solve (Khatri-Rao gather, MTTKRP, Gram product, ridge
+solve) is hoisted into one jitted update built *once* per mode before the
+iteration loop — repeated iterations reuse a single trace per mode (the
+trace-count regression test pins this), and the layout expansion of the
+Khatri-Rao rows runs once per mode update, exactly like ``cpapr_mu``.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
+from .phi import krao_reduce_rows
 from .pi import pi_rows
-from .sparse_tensor import KTensor, SparseTensor, random_ktensor
+from .sparse_tensor import KTensor, ModeView, SparseTensor, random_ktensor, sort_mode
 
-__all__ = ["mttkrp", "cp_als", "fit_score"]
+__all__ = ["mttkrp", "mttkrp_mode", "cp_als", "fit_score"]
+
+_RIDGE = 1e-10  # Gram regularizer of the ALS normal equations
 
 
-@partial(jax.jit, static_argnames=("n", "n_rows", "strategy"))
 def mttkrp(
     indices: jax.Array,
     values: jax.Array,
@@ -27,16 +37,94 @@ def mttkrp(
     n: int,
     n_rows: int,
     strategy: str = "scatter",
+    layout=None,
+    mesh=None,
+    local_strategy: str = "blocked",
+    sorted_rows: bool = False,
 ) -> jax.Array:
-    """Sparse MTTKRP (Eqs. 9-11 of the paper)."""
+    """Sparse MTTKRP (Eqs. 9-11 of the paper), any Phi strategy.
+
+    ``indices`` may be unsorted for ``scatter`` and ``segment`` (the
+    default ``sorted_rows=False`` keeps ``segment`` correct on raw COO
+    order); ``blocked``/``pallas``/``sharded`` need the
+    mode-``n``-sorted stream (use a :class:`ModeView`'s ``sorted_idx`` /
+    :func:`mttkrp_mode`, which also sets ``sorted_rows=True``).
+    ``layout`` / ``mesh`` mirror :func:`repro.core.phi.phi_from_rows`.
+    """
     kr = pi_rows(indices, factors, n)
-    contrib = values[:, None] * kr
-    rows = indices[:, n]
-    if strategy == "scatter":
-        return jnp.zeros((n_rows, kr.shape[1]), kr.dtype).at[rows].add(contrib)
-    if strategy == "segment":
-        return jax.ops.segment_sum(contrib, rows, num_segments=n_rows)
-    raise ValueError(strategy)
+    return krao_reduce_rows(
+        indices[:, n], values, kr, n_rows,
+        strategy=strategy, layout=layout, mesh=mesh,
+        local_strategy=local_strategy, sorted_rows=sorted_rows,
+    )
+
+
+def mttkrp_mode(
+    mv: ModeView,
+    factors: tuple,
+    strategy: str = "segment",
+    layout=None,
+    mesh=None,
+    local_strategy: str = "blocked",
+) -> jax.Array:
+    """MTTKRP on a sorted mode view (the layout-friendly entry point)."""
+    return mttkrp(
+        mv.sorted_idx, mv.sorted_vals, tuple(factors), mv.mode, mv.n_rows,
+        strategy=strategy, layout=layout, mesh=mesh,
+        local_strategy=local_strategy, sorted_rows=True,
+    )
+
+
+def _make_als_mode_update(
+    mv: ModeView,
+    rank: int,
+    strategy: str,
+    layout,
+    local_strategy: str,
+    mesh,
+    pig,
+):
+    """One jitted per-mode ALS update: ``factors -> A_n'``.
+
+    Built once before the iteration loop, so every CP-ALS sweep reuses a
+    single trace per mode (no re-trace from the mutated factor list — the
+    pytree structure and avals are stable).  Mirrors
+    ``cpapr._make_mode_update``: the Khatri-Rao gather and layout
+    expansion are hoisted to one spot per mode update, and with ``pig``
+    the rows are computed shard-locally (no (nnz, R) array).
+    """
+    from .cpapr import hoisted_mode_inputs  # deferred: cpapr imports phi
+
+    n = mv.mode
+    n_rows = mv.n_rows
+
+    @jax.jit
+    def update(factors: tuple):
+        kr, vals_e, kr_e = hoisted_mode_inputs(mv, factors, strategy,
+                                               layout, pig)
+        m_n = krao_reduce_rows(
+            mv.rows,
+            mv.sorted_vals,
+            kr,
+            n_rows,
+            strategy=strategy,
+            layout=layout,
+            vals_e=vals_e,
+            kr_e=kr_e,
+            mesh=mesh,
+            local_strategy=local_strategy,
+            pi_gather=pig,
+            factors=factors if pig is not None else None,
+        )
+        gram = jnp.ones((rank, rank), m_n.dtype)
+        for m, f in enumerate(factors):
+            if m != n:
+                gram = gram * (f.T @ f)
+        return jnp.linalg.solve(
+            gram + _RIDGE * jnp.eye(rank, dtype=gram.dtype), m_n.T
+        ).T
+
+    return update
 
 
 def cp_als(
@@ -46,30 +134,57 @@ def cp_als(
     key: jax.Array | None = None,
     init: KTensor | None = None,
     strategy: str = "scatter",
+    policy=None,
+    autotuner=None,
+    mesh=None,
+    n_shards: int | None = None,
+    shard_pi: bool = True,
+    mode_views: Sequence[ModeView] | None = None,
 ) -> tuple:
     """Plain CP-ALS on a sparse tensor (least-squares, not Poisson).
 
     Returns (KTensor, fit_history).  Used as the paper's comparison
     algorithm family (CP-ALS's bottleneck is MTTKRP, Exp. 8).
+
+    ``strategy``/``policy``/``mesh``/``n_shards`` route the MTTKRP
+    reduction through the same stack as CP-APR's Phi (via
+    ``cpapr.resolve_mode_policies``): ``policy="auto"`` engages the
+    persistent autotuner, ``strategy="sharded"`` runs row-block shards
+    with one psum combine per mode update, and ``shard_pi`` (default)
+    computes the Khatri-Rao rows shard-locally from the factor rows each
+    shard touches.
     """
+    from .cpapr import mode_pi_gather, resolve_mode_policies  # deferred
+
     if init is None:
         key = key if key is not None else jax.random.PRNGKey(0)
         init = random_ktensor(key, t.shape, rank)
     factors = [f * l for f, l in zip(init.factors, [init.lam] + [1.0] * (t.ndim - 1))]
+
+    mvs = list(mode_views) if mode_views is not None else [
+        sort_mode(t, n) for n in range(t.ndim)
+    ]
+    ones = jnp.ones((rank,), factors[0].dtype)
+    strategies, layouts, _policies, locals_ = resolve_mode_policies(
+        mvs, factors, ones,
+        rank=rank, strategy=strategy, policy=policy,
+        autotuner=autotuner, mesh=mesh, n_shards=n_shards,
+    )
+    pigs = [mode_pi_gather(mvs[n], layouts[n], shard_pi)
+            for n in range(t.ndim)]
+    updates = [
+        _make_als_mode_update(
+            mvs[n], rank, strategies[n], layouts[n], locals_[n],
+            mesh if strategies[n] == "sharded" else None, pigs[n],
+        )
+        for n in range(t.ndim)
+    ]
+
     norm_x = jnp.sqrt(jnp.sum(t.values**2))
     fits = []
     for _ in range(n_iters):
         for n in range(t.ndim):
-            gram = jnp.ones((rank, rank), factors[0].dtype)
-            for m in range(t.ndim):
-                if m != n:
-                    gram = gram * (factors[m].T @ factors[m])
-            m_n = mttkrp(
-                t.indices, t.values, tuple(factors), n, t.shape[n], strategy
-            )
-            factors[n] = jnp.linalg.solve(
-                gram + 1e-10 * jnp.eye(rank, dtype=gram.dtype), m_n.T
-            ).T
+            factors[n] = updates[n](tuple(factors))
         fits.append(float(fit_score(t, factors, norm_x)))
     lam = jnp.ones((rank,), factors[0].dtype)
     kt = KTensor(lam=lam, factors=tuple(factors)).normalize()

@@ -46,14 +46,19 @@ import numpy as np
 from .layout import (
     BlockedLayout,
     ShardedBlockedLayout,
+    ShardedPiGather,
     build_blocked_layout,
+    build_shard_pi_gather,
     mode_run_stats,
+    rebalance_shards,
     shard_blocked_layout,
+    shard_stream_cuts,
 )
 from .phi import (
     _sharded_block_rows,
     expand_to_layout,
     expand_to_shards,
+    expand_vals_to_shards,
     phi_from_rows,
     phi_mu_step,
 )
@@ -86,6 +91,20 @@ class CPAPRConfig:
     # Shard count for the emulated sharded path (ignored when mesh is set;
     # defaults to jax.device_count()).
     n_shards: "int | None" = None
+    # strategy="sharded": compute Pi rows shard-locally from the factor
+    # rows each shard touches (ShardedPiGather) instead of materializing
+    # the replicated (nnz, R) Pi array — per-device factor bytes drop from
+    # O(I * R) to O(touched_rows * R).  The Pi product is recomputed per
+    # inner iteration inside the shard (O(nnz/S * R) per device), which
+    # beats the one-time replicated O(nnz * R) compute once S >= max_inner
+    # and removes the expanded-Pi HBM footprint entirely.
+    shard_pi: bool = True
+    # Rebalance sharded row-block boundaries by measured nnz skew every
+    # this many outer sweeps (0 = static PR-2 sharding).  The base blocked
+    # schedule (and the tuned block sizes) stay pinned; only the
+    # block->shard assignment moves, so every shard remains a valid
+    # blocked schedule.  Changed modes re-jit their update.
+    rebalance_every: int = 0
 
 
 @dataclasses.dataclass
@@ -98,6 +117,43 @@ class CPAPRResult:
     converged: bool
     seconds: float
     policies: list | None = None  # per-mode PhiPolicy when policy="auto"
+    # per rebalance event: {"outer", "mode", "rb_start_old", "rb_start_new",
+    # "imbalance_old", "imbalance_new"} (nnz max/mean over shards)
+    rebalances: list | None = None
+
+
+def mode_pi_gather(
+    mv: ModeView, layout, shard_pi: bool = True
+) -> "ShardedPiGather | None":
+    """The shard-local Pi gather maps for one mode, or None when the mode
+    is not sharded (or ``shard_pi`` is off).  Shared by CP-APR and CP-ALS
+    so both solver families build identical maps."""
+    if shard_pi and isinstance(layout, ShardedBlockedLayout):
+        return build_shard_pi_gather(layout, np.asarray(mv.sorted_idx),
+                                     mv.mode)
+    return None
+
+
+def hoisted_mode_inputs(mv: ModeView, factors, strategy: str, layout, pig):
+    """Per-mode-update hoisted inputs ``(pi, vals_e, pi_e)``.
+
+    One Pi/Khatri-Rao gather + layout expansion per mode update — shared
+    by ``cpapr._make_mode_update`` and ``cpals._make_als_mode_update`` so
+    the hoisting (and the shard-local-Pi bypass, where no (nnz, R) array
+    is ever built) cannot diverge between the two solver families.
+    """
+    if pig is not None:
+        # Shard-local Pi: only the values expansion is hoisted (the
+        # factor-row gathers happen per call inside the sharded reduce).
+        return None, expand_vals_to_shards(layout, mv.sorted_vals), None
+    pi = pi_rows(mv.sorted_idx, factors, mv.mode)
+    if strategy == "sharded" and layout is not None:
+        vals_e, pi_e = expand_to_shards(layout, mv.sorted_vals, pi)
+    elif strategy in ("blocked", "pallas") and layout is not None:
+        vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
+    else:
+        vals_e = pi_e = None
+    return pi, vals_e, pi_e
 
 
 def kkt_violation(b: jax.Array, phi: jax.Array) -> jax.Array:
@@ -120,27 +176,27 @@ def _make_mode_update(
     strategy: str,
     layout: "BlockedLayout | ShardedBlockedLayout | None",
     local_strategy: str = "blocked",
+    pig: "ShardedPiGather | None" = None,
 ):
-    """Jitted per-mode solve: returns (A_n', lam', kkt, n_inner)."""
+    """Jitted per-mode solve: returns (A_n', lam', kkt, n_inner).
+
+    With ``pig`` (sharded strategy + ``cfg.shard_pi``) the Pi rows are
+    never materialized: each shard gathers only the factor rows its
+    nonzeros touch and rebuilds its Pi product inside the shard, per
+    inner iteration.
+    """
 
     n = mv.mode
     n_rows = mv.n_rows
-    uses_layout = strategy in ("blocked", "pallas")
-    sharded = strategy == "sharded"
-    mesh = cfg.mesh if sharded else None
+    mesh = cfg.mesh if strategy == "sharded" else None
 
     @jax.jit
     def update(factors: tuple, lam: jax.Array):
         a_n = factors[n]
-        pi = pi_rows(mv.sorted_idx, factors, n)
-        # Hoisted layout expansion: one gather per mode update, shared by
-        # the scooch Phi and every fused inner iteration below.
-        if sharded and layout is not None:
-            vals_e, pi_e = expand_to_shards(layout, mv.sorted_vals, pi)
-        elif uses_layout and layout is not None:
-            vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
-        else:
-            vals_e = pi_e = None
+        # Hoisted gather + layout expansion: once per mode update, shared
+        # by the scooch Phi and every fused inner iteration below.
+        pi, vals_e, pi_e = hoisted_mode_inputs(mv, factors, strategy,
+                                               layout, pig)
 
         # --- scooch: lift inadmissible zeros (Alg. 1 line 3) --------------
         phi0 = phi_from_rows(
@@ -156,6 +212,8 @@ def _make_mode_update(
             pi_e=pi_e,
             mesh=mesh,
             local_strategy=local_strategy,
+            pi_gather=pig,
+            factors=factors if pig is not None else None,
         )
         s = jnp.where((a_n < cfg.kappa_tol) & (phi0 > 1.0), cfg.kappa, 0.0)
         b0 = (a_n + s) * lam[None, :]
@@ -181,6 +239,8 @@ def _make_mode_update(
                 pi_e=pi_e,
                 mesh=mesh,
                 local_strategy=local_strategy,
+                pi_gather=pig,
+                factors=factors if pig is not None else None,
             )
             return (i + 1, b_new, viol)
 
@@ -197,13 +257,13 @@ def _make_mode_update(
     return update
 
 
-def _effective_shards(cfg: CPAPRConfig) -> int:
-    if cfg.mesh is not None:
+def _effective_shard_count(mesh, n_shards) -> int:
+    if mesh is not None:
         from .distributed import mesh_device_count  # deferred: avoids cycle
 
-        return mesh_device_count(cfg.mesh)
-    if cfg.n_shards is not None:
-        return int(cfg.n_shards)
+        return mesh_device_count(mesh)
+    if n_shards is not None:
+        return int(n_shards)
     return int(jax.device_count())
 
 
@@ -229,26 +289,40 @@ def _shard_mode_layout(mv: ModeView, pol: PhiPolicy, n_shards: int):
     return "sharded", shard_blocked_layout(base, n_shards)
 
 
-def _resolve_mode_policies(
-    cfg: CPAPRConfig,
+def resolve_mode_policies(
     mvs: Sequence[ModeView],
     factors: Sequence[jax.Array],
     lam: jax.Array,
+    *,
+    rank: int,
+    strategy: str,
+    policy: "PhiPolicy | str | None" = None,
+    autotuner: "object | None" = None,
+    mesh: "object | None" = None,
+    n_shards: "int | None" = None,
 ) -> tuple:
-    """Per-mode (strategy, layout, policy, local_strategy) lists from the
-    config's policy field."""
+    """Per-mode (strategy, layout, policy, local_strategy) lists.
+
+    The shared strategy resolver for every solver over the Phi/MTTKRP
+    reduction family: CP-APR (:func:`cpapr_mu`) and CP-ALS
+    (``repro.core.cpals.cp_als``) both route through it, so
+    ``policy="auto"`` / explicit :class:`PhiPolicy` / sharded layouts
+    behave identically across the paper's two algorithm families.
+    """
     n_modes = len(mvs)
-    strategies = [cfg.strategy] * n_modes
+    strategies = [strategy] * n_modes
     layouts: list = [None] * n_modes
     policies: list = [None] * n_modes
     locals_: list = ["blocked"] * n_modes
-    sharded = cfg.strategy == "sharded"
-    n_shards = _effective_shards(cfg) if sharded else 1
+    sharded = strategy == "sharded"
+    eff_shards = (
+        _effective_shard_count(mesh, n_shards) if sharded else 1
+    )
 
-    if cfg.policy == "auto":
+    if policy == "auto":
         from repro.perf.autotune import Autotuner  # deferred: avoids cycle
 
-        tuner = cfg.autotuner if cfg.autotuner is not None else Autotuner()
+        tuner = autotuner if autotuner is not None else Autotuner()
         for n in range(n_modes):
             mv = mvs[n]
             pi_n = pi_rows(mv.sorted_idx, tuple(factors), n)
@@ -258,7 +332,7 @@ def _resolve_mode_policies(
                 # policy_for_sharded_mode; no whole-mode pass needed here
                 pol, _ = tuner.policy_for_sharded_mode(
                     mv.rows, mv.sorted_vals, pi_n, b_n,
-                    n_rows=mv.n_rows, rank=cfg.rank, n_shards=n_shards,
+                    n_rows=mv.n_rows, rank=rank, n_shards=eff_shards,
                 )
             else:
                 # Segment-run stats computed once per mode (host numpy,
@@ -268,14 +342,14 @@ def _resolve_mode_policies(
                 stats_n = mode_run_stats(np.asarray(mv.rows), mv.n_rows)
                 pol = tuner.policy_for_mode(
                     mv.rows, mv.sorted_vals, pi_n, b_n,
-                    n_rows=mv.n_rows, rank=cfg.rank, stats=stats_n,
+                    n_rows=mv.n_rows, rank=rank, stats=stats_n,
                 )
             policies[n] = pol
             if pol.strategy in ("blocked", "pallas"):
                 locals_[n] = pol.strategy
                 if sharded:
                     strategies[n], layouts[n] = _shard_mode_layout(
-                        mv, pol, n_shards
+                        mv, pol, eff_shards
                     )
                 else:
                     strategies[n] = pol.strategy
@@ -290,34 +364,50 @@ def _resolve_mode_policies(
     if sharded:
         for n in range(n_modes):
             mv = mvs[n]
-            if isinstance(cfg.policy, PhiPolicy):
-                pol = cfg.policy
+            if isinstance(policy, PhiPolicy):
+                pol = policy
             else:
                 pol = PhiPolicy(
                     strategy="blocked",
                     block_nnz=256,
-                    block_rows=_sharded_block_rows(mv.n_rows, n_shards),
+                    block_rows=_sharded_block_rows(mv.n_rows, eff_shards),
                 )
             policies[n] = pol
             if pol.strategy in ("blocked", "pallas"):
                 locals_[n] = pol.strategy
                 strategies[n], layouts[n] = _shard_mode_layout(
-                    mv, pol, n_shards
+                    mv, pol, eff_shards
                 )
             else:  # an unblocked user policy has nothing to shard
                 strategies[n] = pol.strategy
         return strategies, layouts, policies, locals_
 
-    if cfg.strategy in ("blocked", "pallas"):
-        pol = cfg.policy if isinstance(cfg.policy, PhiPolicy) else default_policy(
-            cfg.rank
-        )
+    if strategy in ("blocked", "pallas"):
+        pol = policy if isinstance(policy, PhiPolicy) else default_policy(rank)
         for n in range(n_modes):
             policies[n] = pol
             layouts[n] = build_blocked_layout(
                 np.asarray(mvs[n].rows), mvs[n].n_rows, pol.block_nnz, pol.block_rows
             )
     return strategies, layouts, policies, locals_
+
+
+def _resolve_mode_policies(
+    cfg: CPAPRConfig,
+    mvs: Sequence[ModeView],
+    factors: Sequence[jax.Array],
+    lam: jax.Array,
+) -> tuple:
+    """Config-object wrapper over :func:`resolve_mode_policies`."""
+    return resolve_mode_policies(
+        mvs, factors, lam,
+        rank=cfg.rank,
+        strategy=cfg.strategy,
+        policy=cfg.policy,
+        autotuner=cfg.autotuner,
+        mesh=cfg.mesh,
+        n_shards=cfg.n_shards,
+    )
 
 
 def cpapr_mu(
@@ -346,12 +436,69 @@ def cpapr_mu(
         cfg, mvs, factors, lam
     )
 
+    pigs = [mode_pi_gather(mvs[n], layouts[n], cfg.shard_pi)
+            for n in range(n_modes)]
     updates = [
-        _make_mode_update(mvs[n], cfg, strategies[n], layouts[n], locals_[n])
+        _make_mode_update(mvs[n], cfg, strategies[n], layouts[n], locals_[n],
+                          pig=pigs[n])
         for n in range(n_modes)
     ]
 
+    def _nnz_imbalance(sl: ShardedBlockedLayout) -> float:
+        mean = float(sl.shard_nnz.mean())
+        return float(sl.shard_nnz.max()) / max(mean, 1.0)
+
+    def _rebalance_modes(outer: int, events: list) -> None:
+        """nnz-weighted boundary re-split of every sharded mode.
+
+        Only the block->shard assignment moves — the base schedule (and
+        the tuned block sizes) stay pinned, so every shard remains a
+        valid blocked schedule.  Modes whose boundaries changed rebuild
+        their Pi gather maps and re-jit their update.
+
+        With a *non-measuring* autotuner configured, the new shard
+        sub-problems are also re-keyed under assignment-aware cache keys
+        so future cold starts of this assignment hit.  A measuring tuner
+        is deliberately skipped: grid-searching timed probes inside the
+        solve would stall it and distort ``CPAPRResult.seconds``.
+        """
+        tuner = cfg.autotuner if cfg.policy == "auto" else None
+        rekey = tuner is not None and not getattr(tuner, "measure", True)
+        for n in range(n_modes):
+            sl = layouts[n]
+            if not isinstance(sl, ShardedBlockedLayout):
+                continue
+            new_sl = rebalance_shards(sl)
+            if np.array_equal(new_sl.rb_start, sl.rb_start):
+                continue
+            if rekey:
+                # thread the new assignment through the autotune keyspace;
+                # a non-measuring tuner never probes, so pi=None — no
+                # (nnz, R) array is materialized
+                mv = mvs[n]
+                cuts = shard_stream_cuts(new_sl, np.asarray(mv.rows))
+                tuner.policy_for_sharded_mode(
+                    mv.rows, mv.sorted_vals, None,
+                    factors[n] * lam[None, :],
+                    n_rows=mv.n_rows, rank=cfg.rank,
+                    n_shards=new_sl.n_shards, cuts=cuts,
+                )
+            events.append({
+                "outer": outer,
+                "mode": n,
+                "rb_start_old": [int(x) for x in sl.rb_start],
+                "rb_start_new": [int(x) for x in new_sl.rb_start],
+                "imbalance_old": round(_nnz_imbalance(sl), 4),
+                "imbalance_new": round(_nnz_imbalance(new_sl), 4),
+            })
+            layouts[n] = new_sl
+            pigs[n] = mode_pi_gather(mvs[n], new_sl, cfg.shard_pi)
+            updates[n] = _make_mode_update(
+                mvs[n], cfg, strategies[n], new_sl, locals_[n], pig=pigs[n]
+            )
+
     kkt_hist, ll_hist, inner_hist = [], [], []
+    rebalances: list = []
     converged = False
     t0 = time.perf_counter()
     n_outer = 0
@@ -373,6 +520,12 @@ def cpapr_mu(
         if worst <= cfg.tol:
             converged = True
             break
+        if (
+            cfg.rebalance_every > 0
+            and n_outer % cfg.rebalance_every == 0
+            and n_outer < cfg.max_outer
+        ):
+            _rebalance_modes(n_outer, rebalances)
     seconds = time.perf_counter() - t0
     return CPAPRResult(
         ktensor=KTensor(lam=lam, factors=tuple(factors)),
@@ -383,4 +536,5 @@ def cpapr_mu(
         converged=converged,
         seconds=seconds,
         policies=policies if cfg.policy == "auto" else None,
+        rebalances=rebalances or None,
     )

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .layout import ShardedBlockedLayout
+from .layout import ShardedBlockedLayout, ShardedPiGather
+from .pi import pi_rows_local
 from .sparse_tensor import KTensor, SparseTensor, random_ktensor, sort_mode
 
 __all__ = [
@@ -37,6 +38,7 @@ __all__ = [
     "shard_mode_views",
     "make_phi_mesh",
     "mesh_device_count",
+    "krao_sharded",
     "phi_sharded",
     "phi_mu_sharded",
     "sharded_combine_bytes",
@@ -98,35 +100,49 @@ def sharded_combine_bytes(slayout: ShardedBlockedLayout, rank: int,
 def _shard_partial(slayout: ShardedBlockedLayout, eps: float,
                    local_strategy: str,
                    vals_e, pi_e, local_rows, grid_rb, rb_start, b_buf):
-    """One shard's contribution to the global Phi window.
+    """One shard's contribution to the global output window.
 
-    Computes the local blocked Phi over this shard's row-block range
-    (``local_strategy``: 'blocked' = jnp emulation, 'pallas' = the real
-    kernel) and places it at its global row offset inside a zero
+    Computes the local blocked reduction over this shard's row-block
+    range (``local_strategy``: 'blocked' = jnp emulation, 'pallas' = the
+    real kernel) and places it at its global row offset inside a zero
     ``buf_rows``-row buffer — the psum combine then sums disjoint windows
-    (plus zeros).
+    (plus zeros).  With ``b_buf=None`` the reduction is the *plain*
+    Khatri-Rao sum (MTTKRP); otherwise the Phi model weighting applies.
     """
     from .phi import _phi_blocked_core  # deferred: phi lazily imports us
 
     br = slayout.block_rows
     r = pi_e.shape[-1]
     row0 = rb_start * br
-    b_win = jax.lax.dynamic_slice(
+    b_win = None if b_buf is None else jax.lax.dynamic_slice(
         b_buf, (row0, 0), (slayout.n_rb_shard * br, r)
     )
     if local_strategy == "pallas":
-        from repro.kernels.phi import ops as phi_ops
+        if b_win is None:
+            from repro.kernels.mttkrp import ops as mttkrp_ops
 
-        phi_local = phi_ops.phi_blocked_arrays(
-            grid_rb,
-            vals_e,
-            local_rows,
-            pi_e,
-            b_win,
-            block_nnz=slayout.block_nnz,
-            block_rows=br,
-            eps=eps,
-        )
+            phi_local = mttkrp_ops.mttkrp_blocked_arrays(
+                grid_rb,
+                vals_e,
+                local_rows,
+                pi_e,
+                block_nnz=slayout.block_nnz,
+                block_rows=br,
+                n_rows_pad=slayout.n_rb_shard * br,
+            )
+        else:
+            from repro.kernels.phi import ops as phi_ops
+
+            phi_local = phi_ops.phi_blocked_arrays(
+                grid_rb,
+                vals_e,
+                local_rows,
+                pi_e,
+                b_win,
+                block_nnz=slayout.block_nnz,
+                block_rows=br,
+                eps=eps,
+            )
     else:
         phi_local = _phi_blocked_core(
             vals_e,
@@ -189,30 +205,181 @@ def _phi_sharded_buf(slayout: ShardedBlockedLayout, vals_es, pi_es, b,
     return fn(vals_es, pi_es, lrows, grbs, rb0, b_buf)
 
 
+def _run_sharded(mesh: Mesh | None, shard_fn, sharded_args, bcast_args):
+    """Run ``shard_fn`` once per shard and sum the partial buffers.
+
+    ``sharded_args`` carry a leading shard axis (one slice per device);
+    ``bcast_args`` are replicated.  With a mesh this is a ``shard_map``
+    whose single collective is the psum of the (buf_rows, R) partials;
+    without one the identical schedule is unrolled on one device
+    (numerically matching the psum combine).
+    """
+    if mesh is None:
+        n_shards = sharded_args[0].shape[0]
+        parts = [
+            shard_fn(*[a[s] for a in sharded_args], *bcast_args)
+            for s in range(n_shards)
+        ]
+        return functools.reduce(jnp.add, parts)
+
+    axes = tuple(mesh.axis_names)
+    n_sharded = len(sharded_args)
+
+    def local(*args):
+        sh = [a[0] for a in args[:n_sharded]]
+        p = shard_fn(*sh, *args[n_sharded:])
+        return jax.lax.psum(p, axes)
+
+    in_specs = tuple(
+        P(axes, *([None] * (a.ndim - 1))) for a in sharded_args
+    ) + tuple(P(*([None] * a.ndim)) for a in bcast_args)
+    fn = _shard_map(local, mesh, in_specs=in_specs, out_specs=P(None, None))
+    return fn(*sharded_args, *bcast_args)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("slayout", "pig", "eps", "mesh", "local_strategy",
+                     "plain"),
+)
+def _sharded_local_pi_buf(slayout: ShardedBlockedLayout,
+                          pig: ShardedPiGather, vals_es, fgs, b,
+                          eps: float, mesh: Mesh | None,
+                          local_strategy: str, plain: bool):
+    """Combined (buf_rows, R) window with *shard-local* Pi computation.
+
+    ``fgs`` are the per-shard gathered factor rows (one (S, U_m, R) array
+    per gathered mode, from ``pig.touched``); each device rebuilds its
+    own Pi/Khatri-Rao rows with ``pi_rows_local`` — the O(nnz, R)
+    expanded Pi array of the replicated path is never materialized, and
+    the per-device factor bytes are O(touched_rows * R) instead of the
+    replicated O(I * R).  ``plain=True`` drops the model weighting
+    (MTTKRP); ``b`` must then be None.
+    """
+    lrows = jnp.asarray(slayout.local_rows)
+    grbs = jnp.asarray(slayout.grid_rb)
+    rb0 = jnp.asarray(slayout.rb_start)
+    valid = jnp.asarray(slayout.valid)
+    lidx = tuple(jnp.asarray(x) for x in pig.local_idx)
+    n_modes = len(lidx)
+    b_buf = None if plain else _pad_b_buf(slayout, b)
+
+    def shard_fn(vals_e, vmask, lr, grb, r0, *rest):
+        li = rest[:n_modes]
+        fg = rest[n_modes : 2 * n_modes]
+        bb = rest[2 * n_modes] if not plain else None
+        pi_e = pi_rows_local(fg, li, vmask)
+        return _shard_partial(slayout, eps, local_strategy,
+                              vals_e, pi_e, lr, grb, r0, bb)
+
+    sharded_args = (vals_es, valid, lrows, grbs, rb0, *lidx, *fgs)
+    bcast_args = () if plain else (b_buf,)
+    return _run_sharded(mesh, shard_fn, sharded_args, bcast_args)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("slayout", "mesh", "local_strategy")
+)
+def _krao_sharded_buf(slayout: ShardedBlockedLayout, vals_es, kr_es,
+                      mesh: Mesh | None, local_strategy: str = "blocked"):
+    """Combined (buf_rows, R) window of the plain sharded reduction
+    (MTTKRP): pre-expanded Khatri-Rao rows, no model weighting."""
+    lrows = jnp.asarray(slayout.local_rows)
+    grbs = jnp.asarray(slayout.grid_rb)
+    rb0 = jnp.asarray(slayout.rb_start)
+
+    def shard_fn(vals_e, kr_e, lr, grb, r0):
+        return _shard_partial(slayout, 0.0, local_strategy,
+                              vals_e, kr_e, lr, grb, r0, None)
+
+    return _run_sharded(mesh, shard_fn, (vals_es, kr_es, lrows, grbs, rb0),
+                        ())
+
+
+def _gather_factor_shards(pig: ShardedPiGather, factors):
+    """(S, U_m, R) gathered factor rows per gathered mode (the only factor
+    bytes a shard receives under the local-Pi path)."""
+    return tuple(
+        jnp.asarray(factors[m])[jnp.asarray(pig.touched[j])]
+        for j, m in enumerate(pig.modes)
+    )
+
+
+def _validate_pig(slayout: ShardedBlockedLayout, pig: ShardedPiGather):
+    """A gather built from one shard assignment must never run against
+    another — its index maps would silently point at the wrong rows."""
+    if pig.rb_start != tuple(int(x) for x in slayout.rb_start):
+        raise ValueError(
+            "pi_gather was built from a different shard assignment "
+            f"(rb_start {pig.rb_start} vs "
+            f"{tuple(int(x) for x in slayout.rb_start)}); rebuild it with "
+            "build_shard_pi_gather after rebalancing"
+        )
+
+
 def phi_sharded(slayout: ShardedBlockedLayout, vals_es, pi_es, b,
                 eps: float = 1e-10, mesh: Mesh | None = None,
-                local_strategy: str = "blocked"):
-    """Phi^(n) over row-block shards.  Inputs from ``expand_to_shards``."""
+                local_strategy: str = "blocked",
+                pi_gather: ShardedPiGather | None = None, factors=None):
+    """Phi^(n) over row-block shards.  Inputs from ``expand_to_shards``,
+    or — with ``pi_gather``/``factors`` — shard-locally computed Pi rows
+    (``pi_es`` then unused; ``vals_es`` from ``expand_vals_to_shards``)."""
     _validate_phi_mesh(slayout, mesh)
+    if pi_gather is not None:
+        _validate_pig(slayout, pi_gather)
+        fgs = _gather_factor_shards(pi_gather, factors)
+        return _sharded_local_pi_buf(
+            slayout, pi_gather, vals_es, fgs, b, float(eps), mesh,
+            local_strategy, False)[: slayout.n_rows]
     return _phi_sharded_buf(slayout, vals_es, pi_es, b, float(eps),
                             mesh, local_strategy)[: slayout.n_rows]
+
+
+def krao_sharded(slayout: ShardedBlockedLayout, vals_es, kr_es,
+                 mesh: Mesh | None = None, local_strategy: str = "blocked",
+                 pi_gather: ShardedPiGather | None = None, factors=None):
+    """Sharded plain Khatri-Rao reduction (MTTKRP) with one psum combine.
+
+    Same shard machinery as :func:`phi_sharded` without the model
+    weighting; with ``pi_gather``/``factors`` the Khatri-Rao rows are
+    computed shard-locally and ``kr_es`` is unused.
+    """
+    _validate_phi_mesh(slayout, mesh)
+    if pi_gather is not None:
+        _validate_pig(slayout, pi_gather)
+        fgs = _gather_factor_shards(pi_gather, factors)
+        return _sharded_local_pi_buf(
+            slayout, pi_gather, vals_es, fgs, None, 0.0, mesh,
+            local_strategy, True)[: slayout.n_rows]
+    return _krao_sharded_buf(slayout, vals_es, kr_es, mesh,
+                             local_strategy)[: slayout.n_rows]
 
 
 def phi_mu_sharded(slayout: ShardedBlockedLayout, vals_es, pi_es, b,
                    eps: float = 1e-10, tol: float = 1e-4,
                    mesh: Mesh | None = None,
-                   local_strategy: str = "blocked"):
+                   local_strategy: str = "blocked",
+                   pi_gather: ShardedPiGather | None = None, factors=None):
     """Fused sharded MU step: psum-combined Phi + replicated epilogue.
 
     The combine buffer's padding rows hold B = Phi = 0, contributing
     ``|min(0, 1)| = 0`` to the KKT max and nothing to ``B * Phi`` — the
-    same invariant as the single-device padded windows.
+    same invariant as the single-device padded windows.  With
+    ``pi_gather``/``factors`` the Pi rows are computed shard-locally
+    (``pi_es`` unused).
     """
     from .phi import _mu_epilogue  # deferred: phi lazily imports us
 
     _validate_phi_mesh(slayout, mesh)
-    phi_buf = _phi_sharded_buf(slayout, vals_es, pi_es, b, float(eps), mesh,
-                               local_strategy)
+    if pi_gather is not None:
+        _validate_pig(slayout, pi_gather)
+        fgs = _gather_factor_shards(pi_gather, factors)
+        phi_buf = _sharded_local_pi_buf(
+            slayout, pi_gather, vals_es, fgs, b, float(eps), mesh,
+            local_strategy, False)
+    else:
+        phi_buf = _phi_sharded_buf(slayout, vals_es, pi_es, b, float(eps),
+                                   mesh, local_strategy)
     b_buf = _pad_b_buf(slayout, b)
     b_new, viol = _mu_epilogue(b_buf, phi_buf, tol)
     return b_new[: slayout.n_rows], viol

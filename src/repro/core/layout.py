@@ -24,6 +24,7 @@ paper's one-time sort (Sec. 3.1).
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
@@ -31,9 +32,14 @@ __all__ = [
     "BlockedLayout",
     "ModeStats",
     "ShardedBlockedLayout",
+    "ShardedPiGather",
     "build_blocked_layout",
+    "build_shard_pi_gather",
     "mode_run_stats",
+    "rebalance_shards",
     "shard_blocked_layout",
+    "shard_row_ranges",
+    "shard_stream_cuts",
     "round_up",
 ]
 
@@ -291,11 +297,16 @@ class ShardedBlockedLayout:
         return self.buf_rows * rank * itemsize
 
 
-def _split_row_blocks(steps_per_rb: np.ndarray, n_shards: int) -> list:
-    """Contiguous row-block boundaries balancing grid steps per shard."""
-    n_rb = int(steps_per_rb.shape[0])
-    cum = np.cumsum(steps_per_rb)
-    total = int(cum[-1])
+def _split_row_blocks(weight_per_rb: np.ndarray, n_shards: int) -> list:
+    """Contiguous row-block boundaries balancing ``weight_per_rb`` per shard.
+
+    Weights are any non-negative per-row-block cost (grid steps for the
+    static split, nonzeros or measured-seconds-per-nonzero for the
+    rebalanced one).
+    """
+    n_rb = int(weight_per_rb.shape[0])
+    cum = np.cumsum(weight_per_rb.astype(np.float64))
+    total = float(cum[-1])
     bounds = [0]
     for s in range(1, n_shards):
         j = int(np.searchsorted(cum, total * s / n_shards))
@@ -306,9 +317,14 @@ def _split_row_blocks(steps_per_rb: np.ndarray, n_shards: int) -> list:
     return bounds
 
 
-def shard_blocked_layout(layout: BlockedLayout, n_shards: int) -> ShardedBlockedLayout:
+def shard_blocked_layout(
+    layout: BlockedLayout, n_shards: int, bounds: "Sequence[int] | None" = None
+) -> ShardedBlockedLayout:
     """Partition a blocked layout into ``n_shards`` contiguous row-block shards.
 
+    ``bounds`` (optional) is an explicit row-block boundary list of length
+    ``n_shards + 1`` (``bounds[s]:bounds[s+1]`` is shard ``s``'s row-block
+    range); by default the split balances *grid steps* per shard.
     Raises ``ValueError`` when ``n_shards`` exceeds the number of row
     blocks (each shard must own at least one); callers that want the
     warn-and-fall-back behaviour use ``repro.core.distributed`` helpers.
@@ -324,7 +340,20 @@ def shard_blocked_layout(layout: BlockedLayout, n_shards: int) -> ShardedBlocked
         )
     bn = layout.block_nnz
     steps_per_rb = np.bincount(layout.grid_rb, minlength=n_rb)
-    bounds = _split_row_blocks(steps_per_rb, n_shards)
+    if bounds is None:
+        bounds = _split_row_blocks(steps_per_rb, n_shards)
+    else:
+        bounds = [int(x) for x in bounds]
+        if (
+            len(bounds) != n_shards + 1
+            or bounds[0] != 0
+            or bounds[-1] != n_rb
+            or any(b <= a for a, b in zip(bounds, bounds[1:]))
+        ):
+            raise ValueError(
+                f"bounds must be strictly increasing from 0 to {n_rb} with "
+                f"{n_shards + 1} entries, got {bounds}"
+            )
 
     rb_start = np.asarray(bounds[:-1], np.int32)
     rb_count = np.diff(np.asarray(bounds, np.int64)).astype(np.int32)
@@ -388,4 +417,228 @@ def shard_blocked_layout(layout: BlockedLayout, n_shards: int) -> ShardedBlocked
         local_rows=local_rows,
         grid_rb=grid_rb,
         pad_fraction=float(pad_fraction),
+    )
+
+
+# ---------------------------------------------------------------------------
+# nnz-weighted shard rebalancing (across outer solver iterations)
+# ---------------------------------------------------------------------------
+
+
+def _nnz_per_row_block(layout: BlockedLayout) -> np.ndarray:
+    """(n_row_blocks,) real nonzeros owned by each row block."""
+    valid_per_step = layout.valid.reshape(layout.n_grid, layout.block_nnz).sum(
+        axis=1
+    )
+    return np.bincount(
+        layout.grid_rb,
+        weights=valid_per_step.astype(np.float64),
+        minlength=layout.n_row_blocks,
+    )
+
+
+def rebalance_shards(
+    slayout: ShardedBlockedLayout,
+    shard_seconds: "Sequence[float] | None" = None,
+) -> ShardedBlockedLayout:
+    """Re-split a sharded layout's row-block boundaries by measured cost.
+
+    The static split balances *grid steps*, which over-weights padding:
+    a hub-dominated shard can own far more real nonzeros (and wall time)
+    than its step count suggests.  This recomputes the block->shard
+    assignment between outer solver sweeps:
+
+      * ``shard_seconds=None`` — nnz-weighted: each row block is weighted
+        by its real nonzero count, so shards converge to equal nnz.
+      * ``shard_seconds`` given — per-shard measured step seconds fit a
+        seconds-per-nonzero cost to each *current* owner, and each row
+        block is weighted by ``nnz * cost_per_nnz(owner)``; a shard that
+        ran slow sheds row blocks proportionally.
+
+    The base layout (and therefore every ``grid_rb`` slice) is untouched,
+    so each new shard is still a contiguous run of the base schedule with
+    a non-decreasing ``grid_rb`` — a valid blocked schedule.  Returns a
+    new :class:`ShardedBlockedLayout` with the same shard count (the
+    result may equal the input when the split is already balanced).
+    """
+    base = slayout.base
+    n_shards = slayout.n_shards
+    weights = _nnz_per_row_block(base)
+    if shard_seconds is not None:
+        shard_seconds = np.asarray(shard_seconds, np.float64)
+        if shard_seconds.shape != (n_shards,):
+            raise ValueError(
+                f"shard_seconds must have shape ({n_shards},), "
+                f"got {shard_seconds.shape}"
+            )
+        if np.any(shard_seconds < 0):
+            raise ValueError("shard_seconds must be non-negative")
+        per_nnz = shard_seconds / np.maximum(
+            slayout.shard_nnz.astype(np.float64), 1.0
+        )
+        owner = np.repeat(np.arange(n_shards), slayout.rb_count)
+        weights = weights * per_nnz[owner]
+    if weights.sum() <= 0.0:
+        # degenerate (nnz=0 or all-zero times): keep the step-balanced split
+        weights = np.bincount(
+            base.grid_rb, minlength=base.n_row_blocks
+        ).astype(np.float64)
+    bounds = _split_row_blocks(weights, n_shards)
+    return shard_blocked_layout(base, n_shards, bounds=bounds)
+
+
+def shard_row_ranges(slayout: ShardedBlockedLayout) -> list:
+    """Per-shard global ``(row_lo, row_hi)`` half-open row ranges.
+
+    Clipped to the true row count, so the ranges cover ``[0, n_rows)``
+    exactly (padding-only blocks at the top collapse to empty ranges).
+    """
+    br = slayout.block_rows
+    n_rows = slayout.n_rows
+    out = []
+    for s in range(slayout.n_shards):
+        lo = min(int(slayout.rb_start[s]) * br, n_rows)
+        hi = min(int(slayout.rb_start[s] + slayout.rb_count[s]) * br, n_rows)
+        out.append((lo, hi))
+    return out
+
+
+def shard_stream_cuts(
+    slayout: ShardedBlockedLayout, rows_sorted: np.ndarray
+) -> list:
+    """Sorted-stream cut positions matching the layout's shard assignment.
+
+    ``cuts[s]:cuts[s+1]`` is the slice of the sorted nonzero stream owned
+    by shard ``s`` — the shard sub-problems the autotuner keys on (see
+    ``Autotuner.policy_for_sharded_mode(cuts=...)``).  Because shards are
+    row-block ranges, a row never spans two shards.
+    """
+    rows_sorted = np.asarray(rows_sorted)
+    br = slayout.block_rows
+    cuts = [0]
+    for s in range(1, slayout.n_shards):
+        cuts.append(int(np.searchsorted(rows_sorted,
+                                        int(slayout.rb_start[s]) * br)))
+    cuts.append(int(rows_sorted.shape[0]))
+    return cuts
+
+
+# ---------------------------------------------------------------------------
+# Shard-local Pi gather: per-shard unique-row index maps
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-static friendly
+class ShardedPiGather:
+    """Per-shard unique-row index maps for the shard-local Pi^(n) gather.
+
+    The replicated Pi path computes all ``nnz`` Khatri-Rao rows from full
+    factor matrices on every device — O(I_m * R) of factor bytes and
+    O(nnz * R) of compute per device regardless of the shard count.  This
+    structure lets each shard build its own Pi rows from only the factor
+    rows its nonzeros actually touch:
+
+        fg_m    = A^(m)[touched[m][s]]            # (U_m, R) shard-local
+        pi[j,:] = prod_m fg_m[local_idx[m][s, j]] # per expanded slot
+
+    so the per-device Pi inputs are O(nnz/S) index entries plus
+    O(touched_rows * R) gathered factor rows — the Ballard et al.
+    communication-lower-bound regime — instead of O(I * R) replicated.
+
+    All arrays are padded to uniform static shapes (``U_m`` is the max
+    unique-row count over shards for gathered mode ``m``; padding rows
+    point at row 0 and padding slots at local index 0 — they are masked
+    by the layout's ``valid``).
+
+    Attributes:
+      mode:          the excluded (reduce) mode n.
+      n_modes:       total tensor modes N.
+      n_shards:      shard count S (matches the owning layout).
+      modes:         the gathered modes, ascending, ``mode`` excluded.
+      touched:       per gathered mode: (S, U_m) int32 global factor rows.
+      touched_count: (S, N-1) int32 real unique-row counts per shard.
+      local_idx:     per gathered mode: (S, slot) int32 position of each
+                     expanded nonzero slot inside its shard's touched list.
+      rb_start:      fingerprint of the owning layout's shard assignment
+                     (its ``rb_start`` as a tuple) — a gather built from
+                     one assignment must never run against another (the
+                     index maps would silently point at the wrong rows),
+                     so consumers validate this before use.
+    """
+
+    mode: int
+    n_modes: int
+    n_shards: int
+    modes: tuple
+    touched: tuple
+    touched_count: np.ndarray
+    local_idx: tuple
+    rb_start: tuple
+
+    @property
+    def touched_rows_pad(self) -> int:
+        """Total padded gathered factor rows per device (sum of U_m)."""
+        return int(sum(t.shape[1] for t in self.touched))
+
+    def gather_bytes(self, rank: int, itemsize: int = 4) -> int:
+        """Per-device bytes of the gathered factor rows (the Pi operand
+        that replaces the replicated factor matrices)."""
+        return self.touched_rows_pad * rank * itemsize
+
+    def replicated_bytes(self, shape: Sequence[int], rank: int,
+                         itemsize: int = 4) -> int:
+        """Bytes the replicated baseline moves per device: the full
+        factor matrix of every gathered mode."""
+        return sum(int(shape[m]) for m in self.modes) * rank * itemsize
+
+
+def build_shard_pi_gather(
+    slayout: ShardedBlockedLayout, sorted_idx: np.ndarray, mode: int
+) -> ShardedPiGather:
+    """Build the per-shard unique-row maps for mode ``mode``'s Pi gather.
+
+    ``sorted_idx`` is the (nnz, N) coordinate array in the mode's sorted
+    order (``ModeView.sorted_idx``) — the same stream the owning layout's
+    ``gather`` indexes into.  Runs once per mode on host numpy, next to
+    the layout build.
+    """
+    sorted_idx = np.asarray(sorted_idx)
+    n_modes = int(sorted_idx.shape[1])
+    mode = int(mode)
+    if not 0 <= mode < n_modes:
+        raise ValueError(f"mode {mode} out of range for {n_modes}-mode index")
+    s_count = slayout.n_shards
+    slot = slayout.gather.shape[1]
+    modes = tuple(m for m in range(n_modes) if m != mode)
+
+    uniq_lists: dict = {m: [] for m in modes}
+    local_idx = {m: np.zeros((s_count, slot), np.int32) for m in modes}
+    touched_count = np.zeros((s_count, len(modes)), np.int32)
+    for s in range(s_count):
+        v = slayout.valid[s]
+        g = slayout.gather[s][v]  # sorted-stream positions of real nonzeros
+        for j, m in enumerate(modes):
+            uniq, inv = np.unique(sorted_idx[g, m], return_inverse=True)
+            uniq_lists[m].append(uniq.astype(np.int32))
+            local_idx[m][s, v] = inv.astype(np.int32)
+            touched_count[s, j] = uniq.size
+
+    touched = []
+    for j, m in enumerate(modes):
+        u_pad = max(1, int(touched_count[:, j].max()))
+        t = np.zeros((s_count, u_pad), np.int32)
+        for s in range(s_count):
+            u = uniq_lists[m][s]
+            t[s, : u.size] = u
+        touched.append(t)
+
+    return ShardedPiGather(
+        mode=mode,
+        n_modes=n_modes,
+        n_shards=s_count,
+        modes=modes,
+        touched=tuple(touched),
+        touched_count=touched_count,
+        local_idx=tuple(local_idx[m] for m in modes),
+        rb_start=tuple(int(x) for x in slayout.rb_start),
     )

@@ -64,8 +64,10 @@ __all__ = [
     "phi_from_rows",
     "phi_mode",
     "phi_mu_step",
+    "krao_reduce_rows",
     "expand_to_layout",
     "expand_to_shards",
+    "expand_vals_to_shards",
     "PHI_STRATEGIES",
     "ALL_PHI_STRATEGIES",
 ]
@@ -131,6 +133,23 @@ def _phi_segment(rows, vals, pi, b, n_rows: int, eps, perturb: str | None = None
     )
 
 
+@partial(jax.jit, static_argnames=("n_rows", "strategy", "sorted_rows"))
+def _krao_unblocked(rows, vals, kr, n_rows: int, strategy: str,
+                    sorted_rows: bool):
+    """Plain Khatri-Rao reduction ``out[i] += x_j * kr_j`` (unblocked).
+
+    ``sorted_rows`` is a promise, not a strategy: segment_sum only gets
+    ``indices_are_sorted=True`` when the caller really has the sorted
+    stream (a ModeView), so unsorted COO callers stay correct.
+    """
+    contrib = vals[:, None] * kr
+    if strategy == "scatter":
+        return jnp.zeros((n_rows, kr.shape[1]), kr.dtype).at[rows].add(contrib)
+    return jax.ops.segment_sum(
+        contrib, rows, num_segments=n_rows, indices_are_sorted=sorted_rows
+    )
+
+
 def _uniform_segment_sum(contrib: jax.Array, n_rows: int) -> jax.Array:
     """PPA 'no_conflict': keep the FLOPs/stream, drop the keyed reduce.
 
@@ -164,12 +183,15 @@ def _phi_blocked_core(
     inside ``shard_map`` (where each device sees its own layout arrays).
 
       vals:       (n_grid*block_nnz,)   layout-expanded values
-      pi:         (n_grid*block_nnz, R) layout-expanded Pi rows
+      pi:         (n_grid*block_nnz, R) layout-expanded Pi/Khatri-Rao rows
       local_rows: (n_grid*block_nnz,)   row within the step's row block
       grid_rb:    (n_grid,)             row block per grid step
-      b_win:      (n_row_blocks*block_rows, R) B window (padded)
+      b_win:      (n_row_blocks*block_rows, R) B window (padded), or None
+                  for the *plain* weighting ``out[i] += x_j * pi_j`` — the
+                  MTTKRP reduction, which shares this schedule verbatim
+                  (no model divide, no B gather).
 
-    Returns the padded (n_row_blocks*block_rows, R) Phi window.
+    Returns the padded (n_row_blocks*block_rows, R) output window.
     """
     bn, br = block_nnz, block_rows
     g = vals.shape[0] // bn
@@ -178,19 +200,21 @@ def _phi_blocked_core(
         local_rows = local_rows * 0
         grid_rb = grid_rb * 0
 
-    # Gather B windows per grid step: (G, block_rows, R)
-    b_blocks = b_win.reshape(n_row_blocks, br, r)[grid_rb]
-
     onehot = jax.nn.one_hot(
         local_rows.reshape(g, bn), br, dtype=pi.dtype
     )  # (G, bn, br)
     pi_b = pi.reshape(g, bn, r)
     vals_b = vals.reshape(g, bn)
 
-    # s = rows of (onehot @ B_window) dotted with pi  — both matmuls hit MXU.
-    b_rows = jnp.einsum("gvb,gbr->gvr", onehot, b_blocks)
-    s = jnp.sum(b_rows * pi_b, axis=-1)
-    w = jnp.where(vals_b > 0, vals_b / jnp.maximum(s, eps), 0.0)
+    if b_win is None:
+        w = vals_b  # plain weights: padding slots carry vals == 0
+    else:
+        # Gather B windows per grid step: (G, block_rows, R)
+        b_blocks = b_win.reshape(n_row_blocks, br, r)[grid_rb]
+        # s = rows of (onehot @ B_window) dotted with pi — both on MXU.
+        b_rows = jnp.einsum("gvb,gbr->gvr", onehot, b_blocks)
+        s = jnp.sum(b_rows * pi_b, axis=-1)
+        w = jnp.where(vals_b > 0, vals_b / jnp.maximum(s, eps), 0.0)
     contrib = w[..., None] * pi_b  # (G, bn, R)
     if perturb == "no_conflict":
         partial_blocks = contrib[:, :br, :]  # uniform write, no keyed reduce
@@ -315,6 +339,30 @@ def _resolve_sharded(rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e):
     return layout, vals_e, pi_e, mesh
 
 
+def _require_pig_layout(layout, pi_gather, factors) -> ShardedBlockedLayout:
+    """Validate the shard-local-Pi argument triple (layout, pig, factors)."""
+    if not isinstance(layout, ShardedBlockedLayout):
+        raise TypeError(
+            "pi_gather needs an explicit ShardedBlockedLayout (the one the "
+            f"gather maps were built from); got {type(layout).__name__}"
+        )
+    if factors is None:
+        raise ValueError("pi_gather needs the full factors tuple")
+    if pi_gather.n_shards != layout.n_shards:
+        raise ValueError(
+            f"pi_gather has {pi_gather.n_shards} shards but the layout has "
+            f"{layout.n_shards}"
+        )
+    if pi_gather.rb_start != tuple(int(x) for x in layout.rb_start):
+        raise ValueError(
+            "pi_gather was built from a different shard assignment "
+            f"(rb_start {pi_gather.rb_start} vs "
+            f"{tuple(int(x) for x in layout.rb_start)}); rebuild it with "
+            "build_shard_pi_gather after rebalancing"
+        )
+    return layout
+
+
 def phi_from_rows(
     rows: jax.Array,
     vals: jax.Array,
@@ -329,6 +377,8 @@ def phi_from_rows(
     pi_e: jax.Array | None = None,
     mesh=None,
     local_strategy: str = "blocked",
+    pi_gather=None,
+    factors=None,
 ) -> jax.Array:
     """Phi^(n) from pre-gathered Pi rows.  ``rows`` sorted unless 'scatter'.
 
@@ -338,7 +388,11 @@ def phi_from_rows(
     :class:`ShardedBlockedLayout`, ``vals_e``/``pi_e`` come from
     :func:`expand_to_shards`, and ``mesh`` (optional) places the shards on
     real devices with a psum combine — without a mesh the same schedule is
-    emulated on one device.
+    emulated on one device.  With ``pi_gather`` (a
+    :class:`repro.core.layout.ShardedPiGather`) plus the full ``factors``
+    tuple, ``pi``/``pi_e`` may be ``None``: each shard computes its own Pi
+    rows from the factor rows it touches (the shard-local Pi gather), so
+    no O(nnz, R) Pi array is ever materialized.
     """
     eps = float(eps)
     if strategy == "scatter":
@@ -362,6 +416,13 @@ def phi_from_rows(
             raise ValueError("perturb is not supported for strategy='sharded'")
         from .distributed import phi_sharded  # deferred: avoids import cycle
 
+        if pi_gather is not None:
+            slayout = _require_pig_layout(layout, pi_gather, factors)
+            if vals_e is None:
+                vals_e = expand_vals_to_shards(slayout, vals)
+            return phi_sharded(slayout, vals_e, None, b, eps, mesh=mesh,
+                               local_strategy=local_strategy,
+                               pi_gather=pi_gather, factors=factors)
         slayout, vals_e, pi_e, mesh = _resolve_sharded(
             rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e
         )
@@ -401,6 +462,8 @@ def phi_mu_step(
     pi_e: jax.Array | None = None,
     mesh=None,
     local_strategy: str = "blocked",
+    pi_gather=None,
+    factors=None,
 ) -> tuple:
     """One fused CP-APR inner MU step: ``(B', viol)`` in a single pass.
 
@@ -445,6 +508,13 @@ def phi_mu_step(
     if strategy == "sharded":
         from .distributed import phi_mu_sharded  # deferred: avoids cycle
 
+        if pi_gather is not None:
+            slayout = _require_pig_layout(layout, pi_gather, factors)
+            if vals_e is None:
+                vals_e = expand_vals_to_shards(slayout, vals)
+            return phi_mu_sharded(slayout, vals_e, None, b, eps, tol,
+                                  mesh=mesh, local_strategy=local_strategy,
+                                  pi_gather=pi_gather, factors=factors)
         slayout, vals_e, pi_e, mesh = _resolve_sharded(
             rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e
         )
@@ -457,6 +527,94 @@ def phi_mu_step(
             )
         return phi_mu_sharded(slayout, vals_e, pi_e, b, eps, tol, mesh=mesh,
                               local_strategy=local_strategy)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def krao_reduce_rows(
+    rows: jax.Array,
+    vals: jax.Array,
+    kr: jax.Array,
+    n_rows: int,
+    strategy: str = "segment",
+    layout: "BlockedLayout | ShardedBlockedLayout | None" = None,
+    vals_e: jax.Array | None = None,
+    kr_e: jax.Array | None = None,
+    mesh=None,
+    local_strategy: str = "blocked",
+    pi_gather=None,
+    factors=None,
+    sorted_rows: bool = True,
+) -> jax.Array:
+    """Shared segmented Khatri-Rao reduction: ``out[i] = sum x_j * kr_j``.
+
+    The MTTKRP kernel family (CP-ALS's bottleneck, paper Exp. 8) is the
+    Phi reduction without the model divide — same sorted stream, same
+    blocked schedule, same shard combine.  This entry point routes it
+    through the identical strategy stack:
+
+      * ``scatter``  — XLA scatter-add (``rows`` may be unsorted);
+      * ``segment``  — sorted ``segment_sum``;
+      * ``blocked``  — the blocked segmented schedule (jnp emulation),
+        via :func:`_phi_blocked_core` with plain weights;
+      * ``pallas``   — the MTTKRP Pallas kernel (repro.kernels.mttkrp);
+      * ``sharded``  — row-block shards + one psum combine; with
+        ``pi_gather``/``factors``, each shard computes its Khatri-Rao
+        rows shard-locally and ``kr``/``kr_e`` may be None.
+
+    ``rows`` must be sorted for every strategy except ``scatter`` and
+    ``segment``; for ``segment``, ``sorted_rows=False`` drops the
+    ``indices_are_sorted`` promise so unsorted COO order stays correct
+    (the :func:`repro.core.cpals.mttkrp` wrapper's default).
+    ``vals_e``/``kr_e`` are pre-expanded layout arrays (hoisted by the
+    solver), mirroring :func:`phi_from_rows`.
+    """
+    if strategy in ("scatter", "segment"):
+        return _krao_unblocked(rows, vals, kr, n_rows, strategy,
+                               bool(sorted_rows))
+    if strategy == "blocked":
+        layout, vals_e, kr_e = _resolve_layout(
+            rows, n_rows, layout, vals, kr, vals_e, kr_e
+        )
+        return _phi_blocked_core(
+            vals_e,
+            kr_e,
+            jnp.asarray(layout.local_rows),
+            jnp.asarray(layout.grid_rb),
+            None,
+            block_nnz=layout.block_nnz,
+            block_rows=layout.block_rows,
+            n_row_blocks=layout.n_row_blocks,
+            eps=0.0,
+        )[:n_rows]
+    if strategy == "pallas":
+        from repro.kernels.mttkrp import ops as mttkrp_ops
+
+        layout, vals_e, kr_e = _resolve_layout(
+            rows, n_rows, layout, vals, kr, vals_e, kr_e
+        )
+        return mttkrp_ops.mttkrp_blocked(layout, vals_e, kr_e)[:n_rows]
+    if strategy == "sharded":
+        from .distributed import krao_sharded  # deferred: avoids cycle
+
+        if pi_gather is not None:
+            slayout = _require_pig_layout(layout, pi_gather, factors)
+            if vals_e is None:
+                vals_e = expand_vals_to_shards(slayout, vals)
+            return krao_sharded(slayout, vals_e, None, mesh=mesh,
+                                local_strategy=local_strategy,
+                                pi_gather=pi_gather, factors=factors)
+        slayout, vals_e, kr_e, mesh = _resolve_sharded(
+            rows, n_rows, layout, mesh, vals, kr, vals_e, kr_e
+        )
+        if not isinstance(slayout, ShardedBlockedLayout):
+            # fewer row blocks than shards: warned fallback on the base
+            # layout, keeping the requested local compute flavour
+            return krao_reduce_rows(
+                rows, vals, kr, n_rows,
+                strategy=local_strategy, layout=slayout,
+            )
+        return krao_sharded(slayout, vals_e, kr_e, mesh=mesh,
+                            local_strategy=local_strategy)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
@@ -487,6 +645,21 @@ def expand_to_shards(slayout: ShardedBlockedLayout, vals, pi):
     vals_e = jnp.where(valid, vals[gather], 0.0)
     pi_e = jnp.where(valid[..., None], pi[gather], 0.0)
     return vals_e, pi_e
+
+
+def expand_vals_to_shards(slayout: ShardedBlockedLayout, vals):
+    """Expand sorted per-nonzero values into per-shard padded layout order.
+
+    The values-only half of :func:`expand_to_shards`, for the shard-local
+    Pi path where the (S, slot, R) expanded Pi array is never materialized
+    — each device builds its own Pi rows from gathered factor rows (see
+    ``repro.core.pi.pi_rows_local``).
+    """
+    gather = jnp.asarray(slayout.gather)
+    valid = jnp.asarray(slayout.valid)
+    if vals.shape[0] == 0:  # gather on a 0-row operand is ill-formed
+        return jnp.zeros(gather.shape, vals.dtype)
+    return jnp.where(valid, vals[gather], 0.0)
 
 
 def phi_mode(

@@ -17,7 +17,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-__all__ = ["pi_rows", "pi_rows_flops_words"]
+__all__ = ["pi_rows", "pi_rows_local", "pi_rows_flops_words"]
 
 
 def pi_rows(indices: jax.Array, factors: Sequence[jax.Array], n: int) -> jax.Array:
@@ -40,6 +40,31 @@ def pi_rows(indices: jax.Array, factors: Sequence[jax.Array], n: int) -> jax.Arr
             continue
         out = out * f[indices[:, m]]
     return out
+
+
+def pi_rows_local(
+    local_factors: Sequence[jax.Array],
+    local_idx: Sequence[jax.Array],
+    valid: jax.Array,
+) -> jax.Array:
+    """Shard-local Pi rows from gathered factor rows (one shard's slots).
+
+    The sharded counterpart of :func:`pi_rows`: instead of indexing full
+    (I_m, R) factor matrices, each shard receives only the factor rows its
+    nonzeros touch (``local_factors[m]``: (U_m, R), built from a
+    :class:`repro.core.layout.ShardedPiGather`) plus per-slot positions
+    into them (``local_idx[m]``: (slot,)).  ``valid`` masks padding slots
+    to zero — exactly what ``expand_to_shards`` produces for the
+    replicated path, so downstream reductions are unchanged.
+
+    The multiplication order matches :func:`pi_rows` (ascending mode), so
+    the result is bitwise identical to gathering the replicated Pi rows.
+    """
+    out = jnp.ones((valid.shape[0], local_factors[0].shape[1]),
+                   local_factors[0].dtype)
+    for f, li in zip(local_factors, local_idx):
+        out = out * f[li]
+    return jnp.where(valid[:, None], out, 0.0)
 
 
 def pi_rows_flops_words(nnz: int, rank: int, n_modes: int) -> tuple:

@@ -10,26 +10,57 @@ from repro.core.layout import BlockedLayout, round_up
 
 from .kernel import mttkrp_pallas_call
 
-__all__ = ["mttkrp_blocked"]
+__all__ = ["mttkrp_blocked", "mttkrp_blocked_arrays"]
+
+
+def mttkrp_blocked_arrays(
+    grid_rb: jax.Array,
+    vals_e: jax.Array,
+    local_rows: jax.Array,
+    kr_e: jax.Array,
+    *,
+    block_nnz: int,
+    block_rows: int,
+    n_rows_pad: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pallas MTTKRP on raw (possibly traced) layout arrays.
+
+    Like ``repro.kernels.phi.ops.phi_blocked_arrays``: no host-static
+    :class:`BlockedLayout` is needed, so this entry point runs on
+    per-shard slices inside ``shard_map`` where each device carries its
+    own layout data.  Returns the padded (n_rows_pad, R) window.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    r = kr_e.shape[1]
+    r_pad = round_up(r, 128)
+    vals2 = vals_e.reshape(-1, 1).astype(jnp.float32)
+    lrow2 = local_rows.astype(jnp.int32).reshape(-1, 1)
+    kr_p = jnp.pad(kr_e.astype(jnp.float32), ((0, 0), (0, r_pad - r)))
+    call = mttkrp_pallas_call(
+        n_grid=grid_rb.shape[0],
+        block_nnz=block_nnz,
+        block_rows=block_rows,
+        n_rows_pad=n_rows_pad,
+        rank_pad=r_pad,
+        interpret=bool(interpret),
+    )
+    return call(grid_rb.astype(jnp.int32), vals2, lrow2, kr_p)[:, :r]
 
 
 @functools.partial(jax.jit, static_argnames=("layout", "interpret"))
 def _run(layout: BlockedLayout, vals_e, kr_e, interpret: bool):
-    r = kr_e.shape[1]
-    r_pad = round_up(r, 128)
-    vals2 = vals_e.reshape(-1, 1).astype(jnp.float32)
-    lrow2 = jnp.asarray(layout.local_rows, jnp.int32).reshape(-1, 1)
-    kr_p = jnp.pad(kr_e.astype(jnp.float32), ((0, 0), (0, r_pad - r)))
-    grid_rb = jnp.asarray(layout.grid_rb, jnp.int32)
-    call = mttkrp_pallas_call(
-        n_grid=layout.n_grid,
+    return mttkrp_blocked_arrays(
+        jnp.asarray(layout.grid_rb, jnp.int32),
+        vals_e,
+        jnp.asarray(layout.local_rows, jnp.int32),
+        kr_e,
         block_nnz=layout.block_nnz,
         block_rows=layout.block_rows,
         n_rows_pad=layout.n_rows_pad,
-        rank_pad=r_pad,
         interpret=interpret,
     )
-    return call(grid_rb, vals2, lrow2, kr_p)[:, :r]
 
 
 def mttkrp_blocked(

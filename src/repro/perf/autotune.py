@@ -82,6 +82,7 @@ __all__ = [
     "current_device_kind",
     "default_cache_path",
     "policy_key",
+    "shard_assignment_fragment",
 ]
 
 
@@ -107,6 +108,7 @@ def policy_key(
     platform: str,
     n_shards: int = 1,
     stats: ModeStats | None = None,
+    assign: str | None = None,
 ) -> str:
     """Cache key for one tuning problem.
 
@@ -118,13 +120,33 @@ def policy_key(
 
     ``n_shards`` > 1 appends a ``/shards=N`` dimension, so sharded-mode
     entries never collide with (or shadow) the single-device entries.
+    ``assign`` (a :func:`shard_assignment_fragment`) further appends an
+    ``/assign=...`` dimension: the same shard *count* under a different
+    block->shard assignment (e.g. after nnz-weighted rebalancing) is a
+    different tuning problem, so rebalanced assignments never shadow the
+    static split's winners.
     """
     base = f"{platform}/nnz={nnz}/rows={n_rows}/rank={rank}"
     if stats is not None:
         base = f"v2/{base}/{stats.key_fragment()}"
     if n_shards in (None, 1):
         return base
-    return f"{base}/shards={n_shards}"
+    key = f"{base}/shards={n_shards}"
+    if assign is not None:
+        key = f"{key}/assign={assign}"
+    return key
+
+
+def shard_assignment_fragment(cuts) -> str:
+    """Short stable signature of a shard assignment's stream cuts.
+
+    Deterministic across processes (crc32 of the cut positions), so a
+    rebalanced assignment re-keys the same way in every future run.
+    """
+    import zlib
+
+    arr = np.asarray(list(cuts), np.int64)
+    return format(zlib.crc32(arr.tobytes()) & 0xFFFFFFFF, "08x")
 
 
 def _policy_to_json(p: PhiPolicy) -> dict:
@@ -146,6 +168,26 @@ def _stats_to_json(stats: ModeStats | None) -> dict | None:
     }
 
 
+def _env_int(name: str) -> int | None:
+    raw = os.environ.get(name)
+    if not raw:
+        return None
+    try:
+        return int(raw)
+    except ValueError:
+        return None
+
+
+def _env_float(name: str) -> float | None:
+    raw = os.environ.get(name)
+    if not raw:
+        return None
+    try:
+        return float(raw)
+    except ValueError:
+        return None
+
+
 class AutotuneCache:
     """Persistent JSON store of tuned policies (schema v2).
 
@@ -156,12 +198,50 @@ class AutotuneCache:
     the quarantine reason attached.  Corrupt or missing *files* load as
     empty; all writes are atomic so concurrent processes at worst lose a
     race, never the file.
+
+    Long-lived fleets accumulate entries without bound (every tensor
+    shape x distribution bin x shard assignment is a key), so the store
+    supports two optional caps:
+
+      * ``max_entries`` — LRU bound: every lookup that *serves* a policy
+        stamps the entry's ``served_at``; the cap is enforced at load
+        time and after every store()/migration, evicting the
+        least-recently-served entries (``served_at``, falling back to
+        ``tuned_at``).  Recency from a read-only process lives in memory
+        and is persisted opportunistically by whichever process next
+        writes the store — a deliberate trade against rewriting the JSON
+        file on every lookup.  Quarantined records are an audit trail,
+        not cache — they neither count toward nor are touched by the cap.
+      * ``max_age_days`` — TTL: entries whose ``tuned_at`` is older are
+        dropped at load time (a winner tuned months ago predates driver/
+        library churn even when the jax version string matches).
+
+    Defaults come from ``$REPRO_AUTOTUNE_MAX_ENTRIES`` /
+    ``$REPRO_AUTOTUNE_MAX_AGE_DAYS``; unset means unbounded (the PR-1..3
+    behaviour).
     """
 
     VERSION = 2
 
-    def __init__(self, path: str | None = None):
+    def __init__(
+        self,
+        path: str | None = None,
+        max_entries: int | None = None,
+        max_age_days: float | None = None,
+    ):
         self.path = path or default_cache_path()
+        if max_entries is None:
+            max_entries = _env_int("REPRO_AUTOTUNE_MAX_ENTRIES")
+        if max_age_days is None:
+            max_age_days = _env_float("REPRO_AUTOTUNE_MAX_AGE_DAYS")
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        if max_age_days is not None and max_age_days <= 0:
+            raise ValueError(f"max_age_days must be > 0, got {max_age_days}")
+        self.max_entries = max_entries
+        self.max_age_days = max_age_days
+        self.n_expired = 0  # TTL drops at the last load
+        self.n_evicted = 0  # LRU drops over this instance's lifetime
         self.entries: dict = {}
         self.quarantined: dict = {}
         self.load()
@@ -169,6 +249,7 @@ class AutotuneCache:
     # -- persistence ------------------------------------------------------
     def load(self) -> None:
         self.entries, self.quarantined = {}, {}
+        self.n_expired = 0
         try:
             with open(self.path) as f:
                 data = json.load(f)
@@ -191,12 +272,41 @@ class AutotuneCache:
             return
         if version != self.VERSION:
             return
+        cutoff = (
+            time.time() - self.max_age_days * 86400.0
+            if self.max_age_days is not None
+            else None
+        )
         for key, entry in raw.items():
             if isinstance(entry, dict) and isinstance(entry.get("policy"), dict):
+                if cutoff is not None and (
+                    not isinstance(entry.get("tuned_at"), (int, float))
+                    or entry["tuned_at"] < cutoff
+                ):
+                    self.n_expired += 1  # TTL: silently aged out
+                    continue
                 self.entries[key] = entry
             else:
                 self.quarantined[key] = {"entry": entry,
                                          "reason": "malformed-entry"}
+        # a bounded instance enforces its cap immediately, so a store
+        # written by unbounded processes cannot stay over it
+        self._evict_lru()
+
+    def _evict_lru(self) -> None:
+        """Drop least-recently-served entries beyond ``max_entries``."""
+        if self.max_entries is None:
+            return
+
+        def recency(item):
+            key, e = item
+            stamp = e.get("served_at") or e.get("tuned_at") or 0.0
+            return (stamp, key)  # deterministic tie-break
+
+        while len(self.entries) > self.max_entries:
+            victim = min(self.entries.items(), key=recency)[0]
+            del self.entries[victim]
+            self.n_evicted += 1
 
     def save(self) -> None:
         d = os.path.dirname(self.path)
@@ -249,9 +359,11 @@ class AutotuneCache:
         if fresh and self.entry_is_stale(e):
             return None
         try:
-            return _policy_from_json(e["policy"])
+            pol = _policy_from_json(e["policy"])
         except (KeyError, TypeError):
             return None
+        e["served_at"] = time.time()  # LRU recency (persisted on next save)
+        return pol
 
     def store(
         self,
@@ -282,6 +394,7 @@ class AutotuneCache:
         if probe_errors:
             entry["probe_errors"] = probe_errors
         self.entries[key] = entry
+        self._evict_lru()
         self.save()
 
     # -- v1 migration -----------------------------------------------------
@@ -325,6 +438,7 @@ class AutotuneCache:
             "migrated_from": old_key,
         }
         self.entries[new_key] = entry
+        self._evict_lru()
         self.save()
         return pol
 
@@ -445,8 +559,11 @@ class Autotuner:
         vmem_budget: int = 8 * 2**20,
         platform: str | None = None,
         include_pallas: bool | None = None,
+        cache_max_entries: int | None = None,
+        cache_max_age_days: float | None = None,
     ):
-        self.cache = AutotuneCache(cache_path)
+        self.cache = AutotuneCache(cache_path, max_entries=cache_max_entries,
+                                   max_age_days=cache_max_age_days)
         self.measure = measure
         self.iters = iters
         self.warmup = warmup
@@ -643,6 +760,8 @@ class Autotuner:
         rank: int,
         n_shards: int,
         stats: ModeStats | None = None,
+        cuts: "list | None" = None,
+        assign: str | None = None,
     ) -> tuple:
         """Tuned policies for one mode split into ``n_shards`` row shards.
 
@@ -654,8 +773,25 @@ class Autotuner:
         the largest-nnz shard, which dominates the critical path.  Returns
         ``(uniform_policy, per_shard_policies)``; shards that own no
         nonzeros get ``None`` in the per-shard list.
+
+        ``pi`` may be ``None`` for a *non-measuring* tuner (probes never
+        run, so the Pi rows are never read) — callers re-keying a
+        rebalanced assignment mid-solve use this to avoid materializing
+        the (nnz, R) array the shard-local Pi path exists to avoid.
+
+        ``cuts`` (optional) pins the shard assignment explicitly: a list
+        of ``n_shards + 1`` sorted-stream cut positions, e.g. from
+        ``repro.core.layout.shard_stream_cuts`` after a rebalance.  The
+        per-shard keys then gain an ``/assign=...`` dimension (``assign``
+        overrides the auto-derived :func:`shard_assignment_fragment`), so
+        a rebalanced assignment tunes separately from the static split.
+        Without ``cuts`` the default nnz-balanced split keeps the PR-2
+        keyspace (no assign dimension — old entries stay valid).
         """
         platform = self.platform or jax.default_backend()
+        if pi is None and self.measure:
+            raise ValueError("a measuring tuner needs the Pi rows to probe; "
+                             "pass pi or use Autotuner(measure=False)")
         rows_np = np.asarray(rows)
         nnz = int(rows_np.shape[0])
         if n_shards <= 1 or nnz == 0:
@@ -663,15 +799,30 @@ class Autotuner:
                                        rank=rank, stats=stats)
             return pol, [pol] * max(1, n_shards)
 
-        # contiguous nnz-balanced cuts, snapped forward to row boundaries
-        # (a row never spans shards)
-        cuts = [0]
-        for s in range(1, n_shards):
-            p = s * nnz // n_shards
-            while 0 < p < nnz and rows_np[p] == rows_np[p - 1]:
-                p += 1
-            cuts.append(max(p, cuts[-1]))
-        cuts.append(nnz)
+        if cuts is not None:
+            cuts = [int(c) for c in cuts]
+            if (
+                len(cuts) != n_shards + 1
+                or cuts[0] != 0
+                or cuts[-1] != nnz
+                or any(b_ < a_ for a_, b_ in zip(cuts, cuts[1:]))
+            ):
+                raise ValueError(
+                    f"cuts must be non-decreasing from 0 to nnz={nnz} with "
+                    f"{n_shards + 1} entries, got {cuts}"
+                )
+            if assign is None:
+                assign = shard_assignment_fragment(cuts)
+        else:
+            # contiguous nnz-balanced cuts, snapped forward to row
+            # boundaries (a row never spans shards)
+            cuts = [0]
+            for s in range(1, n_shards):
+                p = s * nnz // n_shards
+                while 0 < p < nnz and rows_np[p] == rows_np[p - 1]:
+                    p += 1
+                cuts.append(max(p, cuts[-1]))
+            cuts.append(nnz)
 
         per_shard: list = []
         best, best_nnz = None, -1
@@ -685,14 +836,15 @@ class Autotuner:
             local_rows = rows_np[c0:c1] - row_lo
             shard_stats = mode_run_stats(local_rows, row_hi - row_lo)
             key = policy_key(c1 - c0, row_hi - row_lo, rank, platform,
-                             n_shards=n_shards, stats=shard_stats)
+                             n_shards=n_shards, stats=shard_stats,
+                             assign=assign)
             v1_key = policy_key(c1 - c0, row_hi - row_lo, rank, platform,
                                 n_shards=n_shards)
             pol = self._tune_key(
                 key,
                 jnp.asarray(local_rows),
                 vals[c0:c1],
-                pi[c0:c1],
+                pi[c0:c1] if pi is not None else None,
                 b[row_lo:row_hi],
                 row_hi - row_lo,
                 rank,

@@ -24,7 +24,10 @@ __all__ = [
     "CollectiveStats",
     "allreduce_wire_bytes",
     "collective_stats",
+    "entry_parameter_bytes",
     "phi_combine_wire_bound",
+    "pi_gather_wire_bound",
+    "pi_replicated_gather_bytes",
     "shape_bytes",
 ]
 
@@ -116,6 +119,78 @@ def phi_combine_wire_bound(
     """
     n_rows_pad = -(-max(n_rows, block_rows) // block_rows) * block_rows
     return allreduce_wire_bytes(2 * n_rows_pad * rank * itemsize, n_shards)
+
+
+def pi_gather_wire_bound(
+    slot_per_shard: int,
+    touched_rows_pad: int,
+    rank: int,
+    n_modes: int,
+    itemsize: int = 4,
+    idx_itemsize: int = 4,
+) -> float:
+    """Analytic per-device byte bound on the shard-local Pi gather inputs.
+
+    With the sharded Pi gather (``repro.core.layout.ShardedPiGather``)
+    each device receives, per mode update:
+
+      * its padded nonzero slots — values (f32), validity (pred) and one
+        local-index map per gathered mode (int32 each): O(nnz / S);
+      * the factor rows its nonzeros touch — ``touched_rows_pad`` rows of
+        R floats across the N-1 gathered modes: O(touched_rows * R).
+
+    Total: ``slot * ((N-1) * 4 + 1 + 4) + touched * R * 4`` — the
+    O(nnz/S + touched_rows * R) scaling Ballard et al.'s MTTKRP
+    communication lower bounds prescribe, in place of the replicated
+    baseline's O(sum_m I_m * R) factor bytes per device
+    (:func:`pi_replicated_gather_bytes`).  Asserted against the
+    post-partitioning HLO entry parameters in ``tests/test_sharded_pi.py``
+    via :func:`entry_parameter_bytes`.
+    """
+    per_slot = (n_modes - 1) * idx_itemsize + 1 + itemsize
+    return float(slot_per_shard * per_slot
+                 + touched_rows_pad * rank * itemsize)
+
+
+def pi_replicated_gather_bytes(
+    shape, mode: int, rank: int, itemsize: int = 4
+) -> float:
+    """Factor bytes the replicated Pi path holds on *every* device: the
+    full (I_m, R) matrix of each gathered mode — the O(I * R) term the
+    sharded gather eliminates."""
+    return float(
+        sum(int(s) for m, s in enumerate(shape) if m != mode)
+        * rank * itemsize
+    )
+
+
+_PARAM_RE = re.compile(r"=\s*(.*?)\s*parameter\((\d+)\)")
+
+
+def entry_parameter_bytes(hlo_text: str) -> list:
+    """Per-parameter byte sizes of the ENTRY computation.
+
+    On post-SPMD-partitioning HLO (``compiled.as_text()``) parameter
+    shapes are the *per-device local* shapes, so these are the bytes each
+    device actually holds for every operand — the measurement side of
+    :func:`pi_gather_wire_bound`.  Only the ENTRY computation's
+    parameters count (nested reducer/branch computations declare their
+    own, unrelated, parameters).  Returned in parameter order.
+    """
+    out: dict = {}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if not in_entry:
+            continue
+        if line.startswith("}"):
+            break
+        m = _PARAM_RE.search(line)
+        if m:
+            out[int(m.group(2))] = shape_bytes(m.group(1))
+    return [out[i] for i in sorted(out)]
 
 
 @dataclasses.dataclass

@@ -18,6 +18,7 @@ from repro.perf.autotune import (
     AutotuneCache,
     default_cache_path,
     policy_key,
+    shard_assignment_fragment,
 )
 
 
@@ -418,6 +419,158 @@ def test_stale_device_kind_is_retuned(tmp_path):
     c.entries[key]["device_kind"] = "TPU v9000"
     assert c.lookup(key, fresh=True) is None          # stale for measuring
     assert c.lookup(key) == PhiPolicy(strategy="segment")  # served otherwise
+
+
+# ---------------------------------------------------------------------------
+# shard-assignment keys (nnz-weighted rebalancing)
+# ---------------------------------------------------------------------------
+
+
+def test_policy_key_assign_dimension():
+    """assign only applies to sharded keys and never perturbs the
+    PR-2/PR-3 keyspace (no assign -> byte-identical keys)."""
+    base = policy_key(1000, 50, 8, "cpu", n_shards=4)
+    frag = shard_assignment_fragment([0, 250, 500, 750, 1000])
+    k = policy_key(1000, 50, 8, "cpu", n_shards=4, assign=frag)
+    assert k == base + f"/assign={frag}"
+    # deterministic across calls; different cuts -> different fragment
+    assert frag == shard_assignment_fragment([0, 250, 500, 750, 1000])
+    assert frag != shard_assignment_fragment([0, 300, 500, 750, 1000])
+    # unsharded keys ignore assign entirely
+    assert policy_key(1000, 50, 8, "cpu", assign=frag) == \
+        policy_key(1000, 50, 8, "cpu")
+
+
+def test_sharded_tuning_with_explicit_cuts_uses_assign_keys(small_tensor,
+                                                            tmp_path):
+    """Explicit cuts (a rebalanced assignment) tune under /assign= keys,
+    so they never shadow the static split's entries — and the same cuts
+    hit their own entries on repeat."""
+    mv, pi, b = _mode_problem(small_tensor)
+    path = str(tmp_path / "cache.json")
+    tuner = Autotuner(cache_path=path, measure=False)
+    tuner.policy_for_sharded_mode(mv.rows, mv.sorted_vals, pi, b,
+                                  n_rows=mv.n_rows, rank=4, n_shards=2)
+    static_keys = set(tuner.cache.entries)
+    assert not any("/assign=" in k for k in static_keys)
+
+    cuts = [0, mv.nnz // 3, mv.nnz]
+    tuner.policy_for_sharded_mode(mv.rows, mv.sorted_vals, pi, b,
+                                  n_rows=mv.n_rows, rank=4, n_shards=2,
+                                  cuts=cuts)
+    new_keys = set(tuner.cache.entries) - static_keys
+    assert new_keys and all("/assign=" in k for k in new_keys)
+
+    t2 = Autotuner(cache_path=path, measure=False)
+    t2.policy_for_sharded_mode(mv.rows, mv.sorted_vals, pi, b,
+                               n_rows=mv.n_rows, rank=4, n_shards=2,
+                               cuts=cuts)
+    assert t2.n_hits == 2 and t2.n_searches == 0
+
+    with pytest.raises(ValueError, match="cuts"):
+        tuner.policy_for_sharded_mode(mv.rows, mv.sorted_vals, pi, b,
+                                      n_rows=mv.n_rows, rank=4, n_shards=2,
+                                      cuts=[0, mv.nnz])  # wrong length
+
+
+# ---------------------------------------------------------------------------
+# TTL / LRU store bound
+# ---------------------------------------------------------------------------
+
+
+def _fill(cache, n, prefix="k"):
+    for i in range(n):
+        cache.store(f"{prefix}{i}", PhiPolicy(strategy="segment"), 0.1,
+                    "grid")
+
+
+def test_lru_eviction_order_is_least_recently_served(tmp_path):
+    """Serving an entry (lookup) refreshes it; the cap evicts the entry
+    that went longest without being served (tuned_at as fallback)."""
+    path = str(tmp_path / "cache.json")
+    c = AutotuneCache(path, max_entries=3)
+    _fill(c, 3)
+    # serve k0 and k2 -> k1 is now least-recently-served
+    assert c.lookup("k0") is not None
+    assert c.lookup("k2") is not None
+    c.store("k3", PhiPolicy(), 0.1, "grid")
+    assert sorted(c.entries) == ["k0", "k2", "k3"]
+    assert c.n_evicted == 1
+    # eviction survives the round trip and keeps applying
+    c2 = AutotuneCache(path, max_entries=2)
+    c2.store("k4", PhiPolicy(), 0.1, "grid")
+    assert len(c2.entries) == 2 and "k4" in c2.entries
+
+
+def test_lru_unbounded_by_default(tmp_path):
+    c = AutotuneCache(str(tmp_path / "cache.json"))
+    _fill(c, 50)
+    assert len(c.entries) == 50 and c.n_evicted == 0
+
+
+def test_lru_never_touches_quarantine(tmp_path):
+    """Quarantined records are an audit trail: they neither count toward
+    the cap nor get evicted by it."""
+    path = str(tmp_path / "cache.json")
+    v1_key = policy_key(100, 10, 8, "cpu")
+    _write_v1_store(path, v1_key, {"strategy": "segment", "block_nnz": 256,
+                                   "block_rows": 256,
+                                   "gather_mode": "prefetch"})
+    c = AutotuneCache(path, max_entries=2)
+    assert c.quarantined[v1_key]["reason"] == "v1-schema"
+    _fill(c, 5)
+    assert len(c.entries) == 2
+    assert c.quarantined[v1_key]["reason"] == "v1-schema"  # untouched
+    # and the quarantined v1 winner is still migratable afterwards
+    assert c.migrate_quarantined(v1_key, "v2-target") is not None
+    assert len(c.entries) == 2  # migration respects the cap too
+    assert "v2-target" in c.entries
+
+
+def test_ttl_expires_old_entries_at_load(tmp_path):
+    import time as _time
+
+    path = str(tmp_path / "cache.json")
+    c = AutotuneCache(path)
+    _fill(c, 3)
+    c.entries["k0"]["tuned_at"] = _time.time() - 30 * 86400
+    c.entries["k1"].pop("tuned_at")  # unstampable entry ages out too
+    c.save()
+    fresh = AutotuneCache(path, max_age_days=7.0)
+    assert sorted(fresh.entries) == ["k2"]
+    assert fresh.n_expired == 2
+    # without the TTL the same file still serves everything
+    assert len(AutotuneCache(path).entries) == 3
+
+
+def test_cache_bounds_env_overrides(tmp_path, monkeypatch):
+    path = str(tmp_path / "cache.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_MAX_ENTRIES", "2")
+    c = AutotuneCache(path)
+    assert c.max_entries == 2
+    _fill(c, 4)
+    assert len(c.entries) == 2
+    monkeypatch.setenv("REPRO_AUTOTUNE_MAX_ENTRIES", "not-a-number")
+    assert AutotuneCache(path).max_entries is None
+    monkeypatch.delenv("REPRO_AUTOTUNE_MAX_ENTRIES")
+    monkeypatch.setenv("REPRO_AUTOTUNE_MAX_AGE_DAYS", "1.5")
+    assert AutotuneCache(path).max_age_days == 1.5
+    with pytest.raises(ValueError, match="max_entries"):
+        AutotuneCache(path, max_entries=0)
+    with pytest.raises(ValueError, match="max_age_days"):
+        AutotuneCache(path, max_age_days=-1)
+
+
+def test_tuner_passes_cache_bounds_through(small_tensor, tmp_path):
+    """Autotuner(cache_max_entries=...) bounds the store while tuning:
+    per-shard entries beyond the cap evict least-recently-served."""
+    mv, pi, b = _mode_problem(small_tensor)
+    tuner = Autotuner(cache_path=str(tmp_path / "c.json"), measure=False,
+                      cache_max_entries=2)
+    tuner.policy_for_sharded_mode(mv.rows, mv.sorted_vals, pi, b,
+                                  n_rows=mv.n_rows, rank=4, n_shards=4)
+    assert len(tuner.cache.entries) == 2
+    assert tuner.cache.n_evicted >= 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,276 @@
+"""MTTKRP / CP-ALS routed through the full strategy stack: cross-strategy
+equivalence (scatter = segment = blocked = pallas = sharded = dense-f64
+oracle) in-process and on 1/2/4 forced host devices, CP-ALS solver
+equivalence across strategies + policy="auto", and the trace-count
+regression for the hoisted jitted mode update."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    cp_als,
+    krao_reduce_rows,
+    mttkrp,
+    mttkrp_mode,
+    sort_mode,
+)
+from repro.core.layout import (
+    build_blocked_layout,
+    build_shard_pi_gather,
+    shard_blocked_layout,
+)
+from repro.core.phi import ALL_PHI_STRATEGIES
+from repro.core.pi import pi_rows
+from repro.core.sparse_tensor import random_ktensor
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def dense_mttkrp_reference(rows, vals, kr, n_rows):
+    """Float64 numpy MTTKRP oracle: M[i] += x_j * kr_j."""
+    rows = np.asarray(rows)
+    vals = np.asarray(vals, np.float64)
+    kr = np.asarray(kr, np.float64)
+    out = np.zeros((n_rows, kr.shape[1]))
+    np.add.at(out, rows, vals[:, None] * kr)
+    return out
+
+
+def _mode_problem(small_tensor, mode=0, bn=64, br=8):
+    t, kt = small_tensor
+    mv = sort_mode(t, mode)
+    kr = pi_rows(mv.sorted_idx, kt.factors, mode)
+    base = build_blocked_layout(np.asarray(mv.rows), mv.n_rows, bn, br)
+    return t, kt, mv, kr, base
+
+
+# ---------------------------------------------------------------------------
+# Cross-strategy equivalence (single process; sharded runs emulated)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ALL_PHI_STRATEGIES)
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_all_mttkrp_strategies_match_dense_reference(small_tensor, strategy,
+                                                     mode):
+    """Every MTTKRP path — unblocked, blocked, Pallas, sharded — pins to
+    the same f64 numerics."""
+    t, kt, mv, kr, base = _mode_problem(small_tensor, mode)
+    ref = dense_mttkrp_reference(mv.rows, mv.sorted_vals, kr, mv.n_rows)
+    layout = None
+    if strategy in ("blocked", "pallas"):
+        layout = base
+    elif strategy == "sharded":
+        layout = shard_blocked_layout(base, min(4, base.n_row_blocks))
+    out = krao_reduce_rows(mv.rows, mv.sorted_vals, kr, mv.n_rows,
+                           strategy=strategy, layout=layout)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("local_strategy", ["blocked", "pallas"])
+def test_sharded_mttkrp_local_kr_matches_replicated(small_tensor,
+                                                    local_strategy):
+    """Shard-local Khatri-Rao (pi_gather) == precomputed-rows sharded path,
+    bitwise, for both local compute flavours."""
+    t, kt, mv, kr, base = _mode_problem(small_tensor)
+    sl = shard_blocked_layout(base, 3)
+    pig = build_shard_pi_gather(sl, np.asarray(mv.sorted_idx), 0)
+    rep = krao_reduce_rows(mv.rows, mv.sorted_vals, kr, mv.n_rows,
+                           strategy="sharded", layout=sl,
+                           local_strategy=local_strategy)
+    loc = krao_reduce_rows(mv.rows, mv.sorted_vals, None, mv.n_rows,
+                           strategy="sharded", layout=sl,
+                           local_strategy=local_strategy,
+                           pi_gather=pig, factors=kt.factors)
+    np.testing.assert_allclose(np.asarray(loc), np.asarray(rep),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_mttkrp_wrapper_and_mode_view_agree(small_tensor):
+    """Legacy mttkrp(indices, ...) == mttkrp_mode(ModeView, ...) == oracle,
+    and the unsorted scatter path still accepts raw COO order."""
+    t, kt, mv, kr, base = _mode_problem(small_tensor)
+    ref = dense_mttkrp_reference(mv.rows, mv.sorted_vals, kr, mv.n_rows)
+    legacy = mttkrp(t.indices, t.values, tuple(kt.factors), 0, t.shape[0],
+                    strategy="scatter")
+    np.testing.assert_allclose(np.asarray(legacy), ref, rtol=3e-5, atol=1e-5)
+    via_mv = mttkrp_mode(mv, kt.factors, strategy="blocked", layout=base)
+    np.testing.assert_allclose(np.asarray(via_mv), ref, rtol=3e-5, atol=1e-5)
+
+
+def test_krao_sharded_falls_back_when_too_few_row_blocks(small_tensor,
+                                                         monkeypatch):
+    """Sharded MTTKRP with more shards than row blocks warns and falls
+    back to the single-device blocked path (mirrors the Phi behaviour)."""
+    import warnings
+
+    t, kt, mv, kr, _ = _mode_problem(small_tensor)
+    monkeypatch.setattr("repro.core.phi._default_shard_count",
+                        lambda mesh: 4096)
+    ref = dense_mttkrp_reference(mv.rows, mv.sorted_vals, kr, mv.n_rows)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = krao_reduce_rows(mv.rows, mv.sorted_vals, kr, mv.n_rows,
+                               strategy="sharded")
+    assert any("falling back" in str(x.message) for x in w)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# CP-ALS solver equivalence across the stack
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["segment", "blocked", "pallas",
+                                      "sharded"])
+def test_cp_als_strategies_match_scatter(small_tensor, strategy):
+    t, kt = small_tensor
+    init = random_ktensor(jax.random.PRNGKey(1), t.shape, 4)
+    kt0, fits0 = cp_als(t, 4, n_iters=3, init=init, strategy="scatter")
+    kt1, fits1 = cp_als(t, 4, n_iters=3, init=init, strategy=strategy,
+                        n_shards=3)
+    np.testing.assert_allclose(fits1, fits0, rtol=2e-4, atol=2e-5)
+    for a, b in zip(kt0.factors, kt1.factors):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-4)
+
+
+def test_cp_als_auto_policy_uses_tuner(small_tensor, tmp_path):
+    """policy='auto' consults the same persistent autotuner as CP-APR —
+    entries appear in the store and the fit matches the scatter run."""
+    from repro.perf.autotune import Autotuner
+
+    t, kt = small_tensor
+    init = random_ktensor(jax.random.PRNGKey(1), t.shape, 4)
+    tuner = Autotuner(cache_path=str(tmp_path / "c.json"), measure=False)
+    kt0, fits0 = cp_als(t, 4, n_iters=2, init=init, strategy="scatter")
+    kt1, fits1 = cp_als(t, 4, n_iters=2, init=init, policy="auto",
+                        autotuner=tuner)
+    np.testing.assert_allclose(fits1, fits0, rtol=2e-4, atol=2e-5)
+    assert len(tuner.cache.entries) == t.ndim  # one v2 key per mode
+    # a second run hits the cache, no further searches
+    tuner2 = Autotuner(cache_path=str(tmp_path / "c.json"), measure=False)
+    cp_als(t, 4, n_iters=1, init=init, policy="auto", autotuner=tuner2)
+    assert tuner2.n_hits == t.ndim and tuner2.n_searches == 0
+
+
+def test_cp_als_mode_updates_trace_once(small_tensor):
+    """The hoisted jitted mode update traces exactly once per mode across
+    many iterations — the re-trace regression this PR fixes (the per-mode
+    Python loop used to rebuild work per call)."""
+    import repro.core.cpapr as cpapr_mod  # hoisted_mode_inputs lives here
+
+    t, kt = small_tensor
+    init = random_ktensor(jax.random.PRNGKey(1), t.shape, 4)
+    traces = []
+    real_pi_rows = cpapr_mod.pi_rows
+
+    def counting_pi_rows(idx, factors, n):
+        traces.append(n)  # runs at trace time only (inside jax.jit)
+        return real_pi_rows(idx, factors, n)
+
+    try:
+        cpapr_mod.pi_rows = counting_pi_rows
+        cp_als(t, 4, n_iters=5, init=init, strategy="segment")
+    finally:
+        cpapr_mod.pi_rows = real_pi_rows
+    # one trace per mode, regardless of iteration count
+    assert sorted(traces) == list(range(t.ndim)), traces
+
+
+# ---------------------------------------------------------------------------
+# Real-mesh equivalence on 1/2/4 forced host devices (subprocess)
+# ---------------------------------------------------------------------------
+
+
+def _run(script: str, devices: int, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+MTTKRP_EQUIV_SCRIPT = """
+import jax, numpy as np
+from repro.core.sparse_tensor import random_poisson_tensor, sort_mode
+from repro.core.pi import pi_rows
+from repro.core.layout import (build_blocked_layout, shard_blocked_layout,
+                               build_shard_pi_gather)
+from repro.core.phi import krao_reduce_rows
+from repro.core.distributed import make_phi_mesh
+
+n_dev = jax.device_count()
+assert n_dev == {devices}, n_dev
+t, kt = random_poisson_tensor(jax.random.PRNGKey(0), (40, 30, 25),
+                              nnz=1500, rank=4)
+for mode in range(t.ndim):
+    mv = sort_mode(t, mode)
+    kr = pi_rows(mv.sorted_idx, kt.factors, mode)
+    rows = np.asarray(mv.rows)
+    vals = np.asarray(mv.sorted_vals, np.float64)
+    dense = np.zeros((mv.n_rows, 4))
+    np.add.at(dense, rows, vals[:, None] * np.asarray(kr, np.float64))
+
+    base = build_blocked_layout(rows, mv.n_rows, 64, 8)
+    sl = shard_blocked_layout(base, n_dev)
+    pig = build_shard_pi_gather(sl, np.asarray(mv.sorted_idx), mode)
+    mesh = make_phi_mesh(n_dev) if n_dev > 1 else None
+    cases = [
+        ("scatter", None, None, False), ("segment", None, None, False),
+        ("blocked", base, None, False), ("pallas", base, None, False),
+        ("sharded", sl, mesh, False), ("sharded", sl, mesh, True),
+    ]
+    for strategy, layout, m, local_kr in cases:
+        out = krao_reduce_rows(
+            mv.rows, mv.sorted_vals, None if local_kr else kr, mv.n_rows,
+            strategy=strategy, layout=layout, mesh=m,
+            pi_gather=pig if local_kr else None,
+            factors=kt.factors if local_kr else None)
+        np.testing.assert_allclose(
+            np.asarray(out), dense, rtol=3e-5, atol=1e-5,
+            err_msg=f"{{strategy}} local_kr={{local_kr}} mode {{mode}}")
+print("MTTKRP_EQUIV_OK")
+"""
+
+
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_mttkrp_cross_strategy_equivalence_forced_devices(devices):
+    """scatter = segment = blocked = pallas = sharded (replicated and
+    shard-local Khatri-Rao) = dense reference on 1/2/4 forced host devices
+    (real mesh + psum whenever devices > 1)."""
+    assert "MTTKRP_EQUIV_OK" in _run(
+        MTTKRP_EQUIV_SCRIPT.format(devices=devices), devices)
+
+
+CPALS_MESH_SCRIPT = """
+import jax, numpy as np
+from repro.core import cp_als
+from repro.core.sparse_tensor import random_poisson_tensor, random_ktensor
+from repro.core.distributed import make_phi_mesh
+
+assert jax.device_count() == 4
+t, _ = random_poisson_tensor(jax.random.PRNGKey(0), (40, 30, 25),
+                             nnz=1500, rank=4)
+init = random_ktensor(jax.random.PRNGKey(1), t.shape, 4)
+kt0, fits0 = cp_als(t, 4, n_iters=2, init=init, strategy="scatter")
+kt1, fits1 = cp_als(t, 4, n_iters=2, init=init, strategy="sharded",
+                    mesh=make_phi_mesh(4))
+np.testing.assert_allclose(fits1, fits0, rtol=2e-4, atol=2e-5)
+for a, b in zip(kt0.factors, kt1.factors):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-3, atol=5e-4)
+print("CPALS_MESH_OK")
+"""
+
+
+def test_cp_als_sharded_real_mesh():
+    """Full CP-ALS under a real 4-device mesh matches the scatter run."""
+    assert "CPALS_MESH_OK" in _run(CPALS_MESH_SCRIPT, devices=4)

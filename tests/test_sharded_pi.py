@@ -1,0 +1,383 @@
+"""Sharded Pi gather + nnz-weighted rebalancing: index-map invariants,
+shard-local == replicated Pi numerics, the compiled-HLO assertion that
+per-device gather bytes scale as O(nnz/S + touched_rows * R) rather than
+the replicated O(I * R), and solver-level rebalancing equivalence."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cpapr_mu, CPAPRConfig, sort_mode
+from repro.core.layout import (
+    build_blocked_layout,
+    build_shard_pi_gather,
+    rebalance_shards,
+    shard_blocked_layout,
+    shard_row_ranges,
+    shard_stream_cuts,
+)
+from repro.core.phi import expand_to_shards, phi_from_rows, phi_mu_step
+from repro.core.pi import pi_rows, pi_rows_local
+from repro.core.policy import PhiPolicy
+from repro.core.sparse_tensor import random_ktensor
+
+from conftest import dense_phi_reference
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mode_problem(small_tensor, mode=0, bn=64, br=8, n_shards=3):
+    t, kt = small_tensor
+    mv = sort_mode(t, mode)
+    pi = pi_rows(mv.sorted_idx, kt.factors, mode)
+    b = kt.factors[mode] * kt.lam[None, :]
+    base = build_blocked_layout(np.asarray(mv.rows), mv.n_rows, bn, br)
+    sl = shard_blocked_layout(base, min(n_shards, base.n_row_blocks))
+    pig = build_shard_pi_gather(sl, np.asarray(mv.sorted_idx), mode)
+    return t, kt, mv, pi, b, sl, pig
+
+
+# ---------------------------------------------------------------------------
+# Index-map invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_pi_gather_index_maps_are_consistent(small_tensor, mode, n_shards):
+    """For every shard and gathered mode: touched rows are unique, sorted,
+    in range, and touched[local_idx] reproduces the original coordinates
+    of every valid slot."""
+    t, kt, mv, pi, b, sl, pig = _mode_problem(small_tensor, mode,
+                                              n_shards=n_shards)
+    idx = np.asarray(mv.sorted_idx)
+    assert pig.mode == mode and pig.n_shards == sl.n_shards
+    assert pig.modes == tuple(m for m in range(t.ndim) if m != mode)
+    for j, m in enumerate(pig.modes):
+        touched = pig.touched[j]
+        lidx = pig.local_idx[j]
+        assert touched.shape[0] == sl.n_shards
+        assert lidx.shape == sl.gather.shape
+        for s in range(sl.n_shards):
+            cnt = int(pig.touched_count[s, j])
+            u = touched[s, :cnt]
+            assert np.all(np.diff(u) > 0)  # unique + sorted
+            assert u.size == 0 or (0 <= u.min() and u.max() < t.shape[m])
+            v = sl.valid[s]
+            assert np.all(lidx[s][v] < cnt)
+            # round trip: gathered rows reproduce the slot's coordinate
+            np.testing.assert_array_equal(
+                touched[s][lidx[s][v]], idx[sl.gather[s][v], m]
+            )
+    # padded total is what the wire bound charges for
+    assert pig.touched_rows_pad == sum(x.shape[1] for x in pig.touched)
+    assert pig.gather_bytes(4) == pig.touched_rows_pad * 4 * 4
+
+
+def test_pi_rows_local_matches_global_gather(small_tensor):
+    """pi_rows_local on gathered factor rows == expand_to_shards of the
+    globally computed Pi rows, bitwise (same multiplication order)."""
+    import jax.numpy as jnp
+
+    t, kt, mv, pi, b, sl, pig = _mode_problem(small_tensor)
+    _, pi_es = expand_to_shards(sl, mv.sorted_vals, pi)
+    for s in range(sl.n_shards):
+        fgs = [jnp.asarray(kt.factors[m])[pig.touched[j][s]]
+               for j, m in enumerate(pig.modes)]
+        local = pi_rows_local(fgs,
+                              [jnp.asarray(x[s]) for x in pig.local_idx],
+                              jnp.asarray(sl.valid[s]))
+        np.testing.assert_array_equal(np.asarray(local), np.asarray(pi_es[s]))
+
+
+def test_pi_gather_rejects_mismatched_layout(small_tensor):
+    t, kt, mv, pi, b, sl, pig = _mode_problem(small_tensor)
+    with pytest.raises(TypeError, match="ShardedBlockedLayout"):
+        phi_from_rows(mv.rows, mv.sorted_vals, None, b, mv.n_rows,
+                      strategy="sharded", layout=None, pi_gather=pig,
+                      factors=kt.factors)
+    with pytest.raises(ValueError, match="factors"):
+        phi_from_rows(mv.rows, mv.sorted_vals, None, b, mv.n_rows,
+                      strategy="sharded", layout=sl, pi_gather=pig)
+    other = shard_blocked_layout(sl.base, 2)
+    with pytest.raises(ValueError, match="shards"):
+        phi_mu_step(mv.rows, mv.sorted_vals, None, b, mv.n_rows,
+                    strategy="sharded", layout=other, pi_gather=pig,
+                    factors=kt.factors)
+
+
+def test_pi_gather_rejects_stale_assignment():
+    """A pig built from the pre-rebalance assignment must not silently run
+    against the rebalanced layout (same shard count, moved boundaries)."""
+    import jax.numpy as jnp
+
+    rows = _skewed_rows()
+    base = build_blocked_layout(rows, SKEW_ROWS, 64, 8)
+    static = shard_blocked_layout(base, 2)
+    rebal = rebalance_shards(static)
+    assert not np.array_equal(static.rb_start, rebal.rb_start)
+    rng = np.random.default_rng(0)
+    idx = np.stack([rows,
+                    rng.integers(0, 30, rows.size).astype(np.int32),
+                    rng.integers(0, 25, rows.size).astype(np.int32)], 1)
+    stale_pig = build_shard_pi_gather(static, idx, 0)
+    factors = tuple(jnp.ones((s, 3)) for s in (SKEW_ROWS, 30, 25))
+    with pytest.raises(ValueError, match="assignment"):
+        phi_from_rows(jnp.asarray(rows), jnp.ones(rows.size), None,
+                      factors[0], SKEW_ROWS, strategy="sharded",
+                      layout=rebal, pi_gather=stale_pig, factors=factors)
+
+
+# ---------------------------------------------------------------------------
+# Numerics: shard-local Pi == replicated Pi == dense reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_local_pi_phi_matches_replicated_and_dense(small_tensor, mode):
+    t, kt, mv, pi, b, sl, pig = _mode_problem(small_tensor, mode)
+    ref = dense_phi_reference(mv.rows, mv.sorted_vals, pi, b, mv.n_rows)
+    rep = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                        strategy="sharded", layout=sl)
+    loc = phi_from_rows(mv.rows, mv.sorted_vals, None, b, mv.n_rows,
+                        strategy="sharded", layout=sl, pi_gather=pig,
+                        factors=kt.factors)
+    np.testing.assert_array_equal(np.asarray(loc), np.asarray(rep))
+    np.testing.assert_allclose(np.asarray(loc), ref, rtol=3e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("local_strategy", ["blocked", "pallas"])
+def test_local_pi_fused_step_matches_scatter(small_tensor, local_strategy):
+    t, kt, mv, pi, b, sl, pig = _mode_problem(small_tensor)
+    tol = 1e-4
+    phi = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                        strategy="scatter")
+    viol_ref = np.max(np.abs(np.minimum(np.asarray(b), 1 - np.asarray(phi))))
+    b_ref = (np.asarray(b) * np.asarray(phi) if viol_ref > tol
+             else np.asarray(b))
+    bs, vs = phi_mu_step(mv.rows, mv.sorted_vals, None, b, mv.n_rows,
+                         tol=tol, strategy="sharded", layout=sl,
+                         local_strategy=local_strategy,
+                         pi_gather=pig, factors=kt.factors)
+    np.testing.assert_allclose(float(vs), viol_ref, rtol=3e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(bs), b_ref, rtol=3e-5, atol=1e-5)
+
+
+def test_cpapr_shard_pi_matches_replicated_pi(small_tensor):
+    """Full solver: shard_pi=True (default) == shard_pi=False == segment."""
+    t, _ = small_tensor
+    init = random_ktensor(jax.random.PRNGKey(1), t.shape, 4)
+    base = dict(rank=4, max_outer=3, strategy="sharded", n_shards=3,
+                track_loglik=False)
+    on = cpapr_mu(t, 4, init=init, config=CPAPRConfig(**base, shard_pi=True))
+    off = cpapr_mu(t, 4, init=init, config=CPAPRConfig(**base,
+                                                       shard_pi=False))
+    ref = cpapr_mu(t, 4, init=init, config=CPAPRConfig(
+        rank=4, max_outer=3, strategy="segment", track_loglik=False))
+    np.testing.assert_allclose(on.kkt_history, off.kkt_history, rtol=1e-6)
+    np.testing.assert_allclose(on.kkt_history, ref.kkt_history, rtol=1e-4)
+    for a, b in zip(on.ktensor.factors, ref.ktensor.factors):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Solver-level rebalancing
+# ---------------------------------------------------------------------------
+
+
+SKEW_ROWS = 192  # 24 row blocks of 8 rows at block_rows=8
+
+
+def _skewed_rows():
+    """20 sparse row blocks (2 nnz each, one padded grid step apiece) and
+    4 dense ones (320 nnz, 5 steps apiece): the step-balanced split gives
+    one shard all the padding steps and almost no nonzeros, so the
+    nnz-weighted re-split must move the boundary."""
+    sparse = np.repeat(np.arange(20) * 8, 2)
+    dense = np.repeat(160 + np.arange(4) * 8, 320)
+    return np.sort(np.concatenate([sparse, dense])).astype(np.int32)
+
+
+def test_rebalance_moves_boundaries_on_skewed_layout():
+    rows = _skewed_rows()
+    base = build_blocked_layout(rows, SKEW_ROWS, 64, 8)
+    sl = shard_blocked_layout(base, 2)
+    rb = rebalance_shards(sl)
+    assert not np.array_equal(rb.rb_start, sl.rb_start)
+    imb = lambda s: float(s.shard_nnz.max() / max(s.shard_nnz.mean(), 1.0))
+    assert imb(rb) < imb(sl)  # nnz imbalance strictly improves
+    # still a partition of the same nonzeros
+    np.testing.assert_array_equal(np.sort(rb.gather[rb.valid]),
+                                  np.arange(len(rows)))
+    assert np.all(np.diff(rb.grid_rb, axis=1) >= 0)
+
+
+def test_rebalance_measured_seconds_shed_slow_shard():
+    """A shard reported slow (high seconds-per-nnz) sheds row blocks."""
+    rows = np.repeat(np.arange(64, dtype=np.int32), 20)
+    base = build_blocked_layout(rows, 64, 64, 8)
+    sl = shard_blocked_layout(base, 4)
+    assert int(sl.rb_count[-1]) > 1  # the shard with room to shed
+    secs = np.ones(4)
+    secs[-1] = 10.0  # the last shard is 10x slower per nonzero
+    rb = rebalance_shards(sl, shard_seconds=secs)
+    assert int(rb.rb_count[-1]) < int(sl.rb_count[-1])
+    assert int(rb.shard_nnz.sum()) == len(rows)
+    with pytest.raises(ValueError, match="shape"):
+        rebalance_shards(sl, shard_seconds=np.ones(3))
+    with pytest.raises(ValueError, match="non-negative"):
+        rebalance_shards(sl, shard_seconds=-secs)
+
+
+def test_cpapr_rebalancing_convergence_unchanged(small_tensor):
+    """rebalance_every=1 rebuilds layouts between sweeps without changing
+    the numerics vs static sharding (same math, different partition)."""
+    t, _ = small_tensor
+    init = random_ktensor(jax.random.PRNGKey(1), t.shape, 4)
+    pol = PhiPolicy(strategy="blocked", block_nnz=64, block_rows=8)
+    static = cpapr_mu(t, 4, init=init, config=CPAPRConfig(
+        rank=4, max_outer=4, strategy="sharded", n_shards=3, policy=pol,
+        track_loglik=False))
+    rebal = cpapr_mu(t, 4, init=init, config=CPAPRConfig(
+        rank=4, max_outer=4, strategy="sharded", n_shards=3, policy=pol,
+        track_loglik=False, rebalance_every=1))
+    np.testing.assert_allclose(rebal.kkt_history, static.kkt_history,
+                               rtol=1e-5)
+    for a, b in zip(static.ktensor.factors, rebal.ktensor.factors):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+    for ev in rebal.rebalances or []:
+        assert ev["imbalance_new"] <= ev["imbalance_old"] + 1e-9
+
+
+def test_rebalance_threads_assignment_through_autotune_keys(tmp_path):
+    """With policy='auto' + a configured tuner, a boundary move re-keys
+    the shard sub-problems under /assign=... cache keys."""
+    from repro.perf.autotune import Autotuner
+    from repro.core.sparse_tensor import SparseTensor
+    import jax.numpy as jnp
+
+    rows = _skewed_rows()
+    rng = np.random.default_rng(0)
+    idx = np.stack([rows,
+                    rng.integers(0, 30, rows.size).astype(np.int32),
+                    rng.integers(0, 25, rows.size).astype(np.int32)], 1)
+    t = SparseTensor(shape=(SKEW_ROWS, 30, 25), indices=jnp.asarray(idx),
+                     values=jnp.ones(rows.size, jnp.float32))
+    # platform="tpu" so the non-measuring heuristic picks a *blocked*
+    # policy (on cpu it would pick segment, which has nothing to shard)
+    tuner = Autotuner(cache_path=str(tmp_path / "c.json"), measure=False,
+                      platform="tpu")
+    res = cpapr_mu(t, 3, config=CPAPRConfig(
+        rank=3, max_outer=2, max_inner=2, strategy="sharded", n_shards=2,
+        policy="auto", autotuner=tuner, track_loglik=False,
+        rebalance_every=1))
+    moved = [ev for ev in res.rebalances or [] if ev["mode"] == 0]
+    assert moved, "skewed mode 0 should rebalance"
+    assert any("/assign=" in k for k in tuner.cache.entries)
+
+
+def test_shard_row_ranges_and_stream_cuts_cover(small_tensor):
+    t, kt, mv, pi, b, sl, pig = _mode_problem(small_tensor)
+    ranges = shard_row_ranges(sl)
+    assert ranges[0][0] == 0 and ranges[-1][1] == mv.n_rows
+    for (a0, a1), (b0, b1) in zip(ranges, ranges[1:]):
+        assert a1 == b0
+    rows = np.asarray(mv.rows)
+    cuts = shard_stream_cuts(sl, rows)
+    assert cuts[0] == 0 and cuts[-1] == mv.nnz
+    for s in range(sl.n_shards):
+        seg = rows[cuts[s]:cuts[s + 1]]
+        lo, hi = ranges[s]
+        assert seg.size == 0 or (lo <= seg.min() and seg.max() < hi)
+        assert seg.size == int(sl.shard_nnz[s])
+
+
+# ---------------------------------------------------------------------------
+# Compiled-HLO wire accounting (forced-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+def _run(script: str, devices: int, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+PI_HLO_SCRIPT = """
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.core.sparse_tensor import SparseTensor, sort_mode, random_ktensor
+from repro.core.layout import (build_blocked_layout, shard_blocked_layout,
+                               build_shard_pi_gather)
+from repro.core.phi import expand_vals_to_shards
+from repro.core.distributed import (_sharded_local_pi_buf,
+                                    _gather_factor_shards, make_phi_mesh)
+from repro.perf.hlo import (collective_stats, entry_parameter_bytes,
+                            pi_gather_wire_bound,
+                            pi_replicated_gather_bytes)
+
+S = jax.device_count()
+assert S == 4
+# clustered coordinates: each row-block shard touches only a slice of the
+# other modes' rows, so touched_rows << I_m (the locality the sharded
+# gather exploits)
+rng = np.random.default_rng(0)
+nnz, I0, I1, I2, R = 2400, 64, 120, 100, 4
+i0 = np.sort(rng.integers(0, I0, nnz)).astype(np.int32)
+i1 = ((i0 * I1 // I0) + rng.integers(0, 8, nnz)) % I1
+i2 = ((i0 * I2 // I0) + rng.integers(0, 8, nnz)) % I2
+idx = np.stack([i0, i1.astype(np.int32), i2.astype(np.int32)], 1)
+t = SparseTensor(shape=(I0, I1, I2), indices=jnp.asarray(idx),
+                 values=jnp.asarray((rng.poisson(1.0, nnz) + 1.0)
+                                    .astype(np.float32)))
+kt = random_ktensor(jax.random.PRNGKey(0), t.shape, R)
+mv = sort_mode(t, 0)
+base = build_blocked_layout(np.asarray(mv.rows), mv.n_rows, 64, 8)
+sl = shard_blocked_layout(base, S)
+pig = build_shard_pi_gather(sl, np.asarray(mv.sorted_idx), 0)
+mesh = make_phi_mesh(S)
+vals_es = expand_vals_to_shards(sl, mv.sorted_vals)
+fgs = _gather_factor_shards(pig, kt.factors)
+b = kt.factors[0] * kt.lam[None, :]
+txt = _sharded_local_pi_buf.lower(sl, pig, vals_es, fgs, b, 1e-10, mesh,
+                                  "blocked", False).compile().as_text()
+params = entry_parameter_bytes(txt)
+slot = sl.n_grid_shard * sl.block_nnz
+b_bytes = b.shape[0] * R * 4  # the replicated mode-0 factor (combine operand)
+fg_bytes = [x.shape[1] * R * 4 for x in pig.touched]
+repl = pi_replicated_gather_bytes(t.shape, 0, R)
+bound = pi_gather_wire_bound(slot, pig.touched_rows_pad, R, t.ndim)
+print("params", params, "fg", fg_bytes, "bound", bound, "repl", repl)
+
+# 1. the per-device parameter set is exactly {values slice, one gathered
+#    factor slice per mode, the replicated mode-n factor}
+assert sorted(params) == sorted([slot * 4.0] + [float(x) for x in fg_bytes]
+                                + [float(b_bytes)]), params
+# 2. per-device Pi-gather bytes obey the analytic O(nnz/S + touched*R)
+#    bound ...
+assert sum(params) - b_bytes <= bound
+# 3. ... and beat the replicated O(I*R) factor baseline outright
+assert sum(fg_bytes) < repl, (fg_bytes, repl)
+for fg_b, mode_m in zip(fg_bytes, pig.modes):
+    assert fg_b < t.shape[mode_m] * R * 4  # every factor slice < full I_m*R
+# 4. the shard-local Pi path still pays exactly one combine collective
+cs = collective_stats(txt, n_participants=S)
+assert cs.by_kind_count.get("all-reduce", 0) == 1, cs.by_kind_count
+print("PI_HLO_OK")
+"""
+
+
+def test_sharded_pi_gather_bytes_within_bound():
+    """Compiled-HLO assertion (acceptance criterion): sharded-Pi
+    per-device gather bytes are O(nnz/S + touched_rows * R), not the
+    replicated O(I * R)."""
+    assert "PI_HLO_OK" in _run(PI_HLO_SCRIPT, devices=4)
