@@ -1,11 +1,14 @@
-"""Sharded vs single-device fused Phi->MU step (PR 2 tentpole receipt).
+"""Sharded fused Phi->MU step: single-device vs psum vs reduce-scatter.
 
-Times one fused ``phi_mu_step`` under the single-device blocked schedule
-and under the same schedule sharded over the available devices (real
-``shard_map`` + psum when >1 device, the bit-matching one-device
-emulation otherwise), and records the combine's collective bytes next to
-the analytic O(I_n * R) bound so the perf trajectory in BENCH_phi.json
-tracks both the speedup and the communication cost.
+Times one fused ``phi_mu_step`` under the single-device blocked
+schedule, the same schedule sharded with the PR-2 **psum** combine, and
+the owner-partitioned **reduce-scatter** combine (real ``shard_map`` +
+collectives when >1 device, the bit-matching one-device emulation
+otherwise).  Records, next to the analytic bounds, both combines' wire
+bytes and the per-device combine *output* (the psum path replicates the
+full O(I_n*R) window; the reduce-scatter path keeps only the owned
+O(I_n*R/S) slice) so the perf trajectory in BENCH_phi.json tracks the
+speedup and the communication cut per device count.
 
 Force a multi-device CPU run with::
 
@@ -19,8 +22,16 @@ import jax
 import numpy as np
 
 from repro.core import sort_mode
-from repro.core.distributed import make_phi_mesh, sharded_combine_bytes
-from repro.core.layout import build_blocked_layout, shard_blocked_layout
+from repro.core.distributed import (
+    make_phi_mesh,
+    owner_scatter_wire_bytes,
+    sharded_combine_bytes,
+)
+from repro.core.layout import (
+    build_blocked_layout,
+    owner_partition,
+    shard_blocked_layout,
+)
 from repro.core.phi import (
     _sharded_block_rows,
     expand_to_layout,
@@ -28,7 +39,11 @@ from repro.core.phi import (
     phi_mu_step,
 )
 from repro.core.pi import pi_rows
-from repro.perf.hlo import phi_combine_wire_bound
+from repro.perf.hlo import (
+    allreduce_wire_bytes,
+    phi_combine_wire_bound,
+    phi_reduce_scatter_wire_bound,
+)
 from repro.perf.timing import bench_seconds
 
 from .common import QUICK_TENSORS, RANK, Reporter, geomean, get_tensor
@@ -40,18 +55,21 @@ TOL = 1e-4
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_rows", "strategy", "layout", "mesh")
+    jax.jit,
+    static_argnames=("n_rows", "strategy", "layout", "mesh", "combine"),
 )
-def _step(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy, layout, mesh):
+def _step(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy, layout, mesh,
+          combine="psum"):
     return phi_mu_step(rows, vals, pi, b, n_rows=n_rows, tol=TOL,
                        strategy=strategy, layout=layout,
-                       vals_e=vals_e, pi_e=pi_e, mesh=mesh)
+                       vals_e=vals_e, pi_e=pi_e, mesh=mesh, combine=combine)
 
 
 def run(tensors=QUICK_TENSORS, iters: int = 3, devices: int | None = None):
     rep = Reporter("sharded")
     n_dev = devices if devices is not None else jax.device_count()
     ratios = []
+    rs_ratios = []
     for name in tensors:
         t, kt = get_tensor(name)
         mv = sort_mode(t, 0)
@@ -70,6 +88,7 @@ def run(tensors=QUICK_TENSORS, iters: int = 3, devices: int | None = None):
             iters=iters)
 
         slayout = shard_blocked_layout(base, n_shards)
+        opart = owner_partition(slayout)
         mesh = make_phi_mesh(n_shards) if jax.device_count() >= n_shards > 1 \
             else None
         vals_es, pi_es = expand_to_shards(slayout, mv.sorted_vals, pi)
@@ -77,17 +96,34 @@ def run(tensors=QUICK_TENSORS, iters: int = 3, devices: int | None = None):
             _step, mv.rows, mv.sorted_vals, pi, b, vals_es, pi_es,
             n_rows=mv.n_rows, strategy="sharded", layout=slayout, mesh=mesh,
             iters=iters)
+        t_rs = bench_seconds(
+            _step, mv.rows, mv.sorted_vals, pi, b, vals_es, pi_es,
+            n_rows=mv.n_rows, strategy="sharded", layout=slayout, mesh=mesh,
+            combine="reduce_scatter", iters=iters)
 
         ratios.append(t_single / t_shard)
+        rs_ratios.append(t_shard / t_rs)
         rep.row(tensor=name, nnz=mv.nnz, n_rows=mv.n_rows,
                 devices=n_shards, real_mesh=mesh is not None,
                 single_s=round(t_single, 6), sharded_s=round(t_shard, 6),
+                reduce_scatter_s=round(t_rs, 6),
                 speedup=round(t_single / t_shard, 3),
+                combine_speedup=round(t_shard / t_rs, 3),
                 combine_bytes=sharded_combine_bytes(slayout, RANK),
                 combine_bound_bytes=round(phi_combine_wire_bound(
+                    mv.n_rows, RANK, n_shards, block_rows=br)),
+                # per-device wire + combine-output accounting: the psum
+                # path replicates the full window, the reduce-scatter
+                # path keeps only the owned O(I_n*R/S) slice
+                psum_wire_bytes=round(allreduce_wire_bytes(
+                    sharded_combine_bytes(slayout, RANK), n_shards)),
+                rs_wire_bytes=round(owner_scatter_wire_bytes(opart, RANK)),
+                rs_owned_bytes=opart.scatter_bytes(RANK),
+                rs_bound_bytes=round(phi_reduce_scatter_wire_bound(
                     mv.n_rows, RANK, n_shards, block_rows=br)))
     rep.row(summary="geomean", devices=n_dev,
-            speedup=round(geomean(ratios), 3))
+            speedup=round(geomean(ratios), 3),
+            combine_speedup=round(geomean(rs_ratios), 3))
     return rep.finish()
 
 

@@ -78,8 +78,10 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
                            autotune_probe_failures, twin_autotune,
                            v2_vs_v1_regret}}
       fused:     {tensor: {strategy: {unfused_s, fused_s, speedup}}}
-      sharded:   {tensor: {devices, single_s, sharded_s, speedup,
-                           combine_bytes, combine_bound_bytes}}
+      sharded:   {tensor: {devices, single_s, sharded_s, reduce_scatter_s,
+                           speedup, combine_speedup, combine_bytes,
+                           combine_bound_bytes, psum_wire_bytes,
+                           rs_wire_bytes, rs_owned_bytes, rs_bound_bytes}}
       rebalance: {tensor: {devices, rebalance_gain, imbalance_static,
                            imbalance_rebalanced, boundaries_moved,
                            sharded_mttkrp_speedup, pi_gather_bytes,
@@ -100,9 +102,16 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
     the sharded-MTTKRP speedup of the CP-ALS kernel family routed through
     the strategy stack, and the sharded-Pi per-device gather bytes
     against the replicated O(I*R) baseline (``pi_wire_ratio`` < 1 means
-    the shard-local gather moves less than replication).
+    the shard-local gather moves less than replication).  Schema 5 adds
+    the reduce-scatter combine columns to the ``sharded`` section (see
+    ``bench_sharded``): ``reduce_scatter_s`` / ``combine_speedup`` time
+    the owner-partitioned epilogue against the psum combine, and the
+    byte columns receipt the communication cut — ``rs_wire_bytes`` vs
+    ``psum_wire_bytes`` per device per inner iteration, and
+    ``rs_owned_bytes`` (the owned O(I_n*R/S) slice each device keeps) vs
+    ``combine_bytes`` (the full window the psum path replicates).
     """
-    out: dict = {"schema": 4, "generated_unix": time.time(),
+    out: dict = {"schema": 5, "generated_unix": time.time(),
                  "breakdown": {}, "policy": {}, "fused": {}, "sharded": {},
                  "rebalance": {}, "summary": {}}
     found = False
@@ -161,14 +170,18 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
     rows = _load_rows("sharded")
     if rows:
         found = True
-        keep = ("devices", "real_mesh", "single_s", "sharded_s", "speedup",
-                "combine_bytes", "combine_bound_bytes")
+        keep = ("devices", "real_mesh", "single_s", "sharded_s",
+                "reduce_scatter_s", "speedup", "combine_speedup",
+                "combine_bytes", "combine_bound_bytes", "psum_wire_bytes",
+                "rs_wire_bytes", "rs_owned_bytes", "rs_bound_bytes")
         for r in rows:
             if "tensor" in r:
                 out["sharded"][r["tensor"]] = {k: r[k] for k in keep if k in r}
             elif r.get("summary") == "geomean":
                 out["summary"]["sharded_speedup"] = r["speedup"]
                 out["summary"]["sharded_devices"] = r.get("devices")
+                if "combine_speedup" in r:
+                    out["summary"]["combine_speedup"] = r["combine_speedup"]
 
     rows = _load_rows("rebalance")
     if rows:

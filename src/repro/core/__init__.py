@@ -15,11 +15,13 @@ from .cpapr import CPAPRConfig, CPAPRResult, cpapr_mu, kkt_violation, poisson_lo
 from .layout import (
     BlockedLayout,
     ModeStats,
+    OwnerPartition,
     ShardedBlockedLayout,
     ShardedPiGather,
     build_blocked_layout,
     build_shard_pi_gather,
     mode_run_stats,
+    owner_partition,
     rebalance_shards,
     shard_blocked_layout,
     shard_row_ranges,

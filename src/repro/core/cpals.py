@@ -83,6 +83,7 @@ def _make_als_mode_update(
     local_strategy: str,
     mesh,
     pig,
+    combine: str = "psum",
 ):
     """One jitted per-mode ALS update: ``factors -> A_n'``.
 
@@ -115,6 +116,7 @@ def _make_als_mode_update(
             local_strategy=local_strategy,
             pi_gather=pig,
             factors=factors if pig is not None else None,
+            combine=combine,
         )
         gram = jnp.ones((rank, rank), m_n.dtype)
         for m, f in enumerate(factors):
@@ -140,6 +142,7 @@ def cp_als(
     n_shards: int | None = None,
     shard_pi: bool = True,
     mode_views: Sequence[ModeView] | None = None,
+    combine: str = "auto",
 ) -> tuple:
     """Plain CP-ALS on a sparse tensor (least-squares, not Poisson).
 
@@ -150,11 +153,17 @@ def cp_als(
     reduction through the same stack as CP-APR's Phi (via
     ``cpapr.resolve_mode_policies``): ``policy="auto"`` engages the
     persistent autotuner, ``strategy="sharded"`` runs row-block shards
-    with one psum combine per mode update, and ``shard_pi`` (default)
+    with one combine per mode update, and ``shard_pi`` (default)
     computes the Khatri-Rao rows shard-locally from the factor rows each
-    shard touches.
+    shard touches.  ``combine`` picks the sharded combine flavour
+    (``"auto"`` resolves to the reduce-scatter epilogue on sharded
+    modes, mirroring CP-APR; bitwise-identical results).
     """
-    from .cpapr import mode_pi_gather, resolve_mode_policies  # deferred
+    from .cpapr import (  # deferred: cpapr imports phi
+        effective_mode_combine,
+        mode_pi_gather,
+        resolve_mode_policies,
+    )
 
     if init is None:
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -168,7 +177,7 @@ def cp_als(
     strategies, layouts, _policies, locals_ = resolve_mode_policies(
         mvs, factors, ones,
         rank=rank, strategy=strategy, policy=policy,
-        autotuner=autotuner, mesh=mesh, n_shards=n_shards,
+        autotuner=autotuner, mesh=mesh, n_shards=n_shards, combine=combine,
     )
     pigs = [mode_pi_gather(mvs[n], layouts[n], shard_pi)
             for n in range(t.ndim)]
@@ -176,6 +185,8 @@ def cp_als(
         _make_als_mode_update(
             mvs[n], rank, strategies[n], layouts[n], locals_[n],
             mesh if strategies[n] == "sharded" else None, pigs[n],
+            combine=effective_mode_combine(combine, strategies[n],
+                                           layouts[n], rank),
         )
         for n in range(t.ndim)
     ]

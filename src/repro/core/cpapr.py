@@ -50,6 +50,7 @@ from .layout import (
     build_blocked_layout,
     build_shard_pi_gather,
     mode_run_stats,
+    owner_partition,
     rebalance_shards,
     shard_blocked_layout,
     shard_stream_cuts,
@@ -105,6 +106,14 @@ class CPAPRConfig:
     # block->shard assignment moves, so every shard remains a valid
     # blocked schedule.  Changed modes re-jit their update.
     rebalance_every: int = 0
+    # strategy="sharded" combine flavour: "psum" (PR-2 all-reduce of the
+    # full (buf_rows, R) window, the bitwise reference), "reduce_scatter"
+    # (owner-partitioned epilogue: each device keeps only its owned
+    # O(I_n*R/S) slice through the inner MU loop and the updated factor
+    # rows are gathered once per mode update, async-dispatched so the
+    # gather overlaps the next mode's Phi prologue), or "auto" (default:
+    # reduce_scatter whenever the mode is actually sharded).
+    combine: str = "auto"
 
 
 @dataclasses.dataclass
@@ -170,6 +179,135 @@ def poisson_loglik(t: SparseTensor, kt: KTensor, eps: float = 1e-10) -> jax.Arra
     return jnp.sum(t.values * jnp.log(jnp.maximum(m, eps))) - jnp.sum(kt.lam)
 
 
+def resolve_combine(combine: str, strategy: str) -> str:
+    """Resolve a (possibly ``"auto"``) combine flavour for one mode.
+
+    ``"auto"`` means reduce-scatter whenever the mode actually runs
+    sharded (it is never slower and its per-device epilogue footprint is
+    O(I_n * R / S)); non-sharded modes always resolve to ``"psum"`` —
+    there is nothing to combine.
+    """
+    from .distributed import PHI_COMBINES  # deferred: avoids cycle
+
+    if strategy != "sharded":
+        return "psum"
+    if combine == "auto":
+        return "reduce_scatter"
+    if combine not in PHI_COMBINES:
+        raise ValueError(
+            f"unknown combine {combine!r}; expected 'auto' or one of "
+            f"{PHI_COMBINES}"
+        )
+    return combine
+
+
+def effective_mode_combine(combine: str, strategy: str, layout,
+                           rank: int) -> str:
+    """Per-mode combine after the wire-aware ``"auto"`` demotion.
+
+    ``"auto"`` prefers the reduce-scatter epilogue but consults
+    :func:`repro.core.distributed.preferred_combine` on the mode's
+    actual sharded layout: a heavily block-skewed split pads the owner
+    slots past the psum wire, and auto then keeps the psum combine for
+    that mode.  An explicit ``combine="reduce_scatter"`` is never
+    demoted.
+    """
+    eff = resolve_combine(combine, strategy)
+    if (
+        combine == "auto"
+        and eff == "reduce_scatter"
+        and isinstance(layout, ShardedBlockedLayout)
+    ):
+        from .distributed import preferred_combine  # deferred: avoids cycle
+
+        eff = preferred_combine(layout, rank)
+    return eff
+
+
+def _make_owner_mode_update(
+    mv: ModeView,
+    cfg: CPAPRConfig,
+    layout: ShardedBlockedLayout,
+    local_strategy: str,
+    pig: "ShardedPiGather | None",
+):
+    """Owner-partitioned per-mode solve (the reduce-scatter epilogue).
+
+    Returns ``(update, gather)``: ``update(factors, lam)`` runs the
+    scooch and the fused inner MU loop entirely on the owner-stacked
+    (S, own_rows, R) carry — each inner iteration's only combine is a
+    reduce-scatter whose per-device output is the owned O(I_n * R / S)
+    slice — and returns ``(b_own, viol, n_inner)``.  ``gather(b_own)``
+    reassembles the full factor and renormalizes; it is a *separate*
+    jitted dispatch (one trace per mode) so the solver can fire it
+    asynchronously and let the runtime overlap the factor-row gather
+    with the next mode's Phi prologue (the schedule expansion and value
+    gathers, which depend on no factor).
+    """
+    from .distributed import (  # deferred: avoids import cycle
+        owner_stack,
+        owner_unstack,
+        phi_mu_sharded_owner,
+        phi_sharded_owner,
+    )
+
+    n = mv.mode
+    mesh = cfg.mesh
+    opart = owner_partition(layout)
+
+    @jax.jit
+    def update(factors: tuple, lam: jax.Array):
+        a_n = factors[n]
+        _, vals_e, pi_e = hoisted_mode_inputs(mv, factors, "sharded",
+                                              layout, pig)
+        a_own = owner_stack(opart, a_n)
+        lam_b = lam[None, None, :]
+
+        # --- scooch: lift inadmissible zeros (Alg. 1 line 3), owner-local
+        phi0_own = phi_sharded_owner(
+            layout, opart, vals_e, pi_e, a_own * lam_b,
+            eps=cfg.eps, mesh=mesh, local_strategy=local_strategy,
+            pi_gather=pig,
+            factors=factors if pig is not None else None,
+        )
+        s = jnp.where((a_own < cfg.kappa_tol) & (phi0_own > 1.0),
+                      cfg.kappa, 0.0)
+        b0_own = (a_own + s) * lam_b
+
+        # --- fused inner MU loop (Alg. 1 lines 5-8), owner-stacked carry
+        def cond(state):
+            i, _, viol = state
+            return (i < cfg.max_inner) & (viol > cfg.tol)
+
+        def body(state):
+            i, b_own, _ = state
+            b_new, viol = phi_mu_sharded_owner(
+                layout, opart, vals_e, pi_e, b_own,
+                eps=cfg.eps, tol=cfg.tol, mesh=mesh,
+                local_strategy=local_strategy, pi_gather=pig,
+                factors=factors if pig is not None else None,
+            )
+            return (i + 1, b_new, viol)
+
+        i, b_own, viol = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), b0_own,
+                         jnp.asarray(jnp.inf, b0_own.dtype))
+        )
+        return b_own, viol, i
+
+    @jax.jit
+    def gather(b_own: jax.Array):
+        # --- renormalize (Alg. 1 lines 9-10) on the reassembled factor.
+        # Under a mesh the stacked carry is device-sharded, so this is
+        # the once-per-mode-update all-gather of the updated rows.
+        b = owner_unstack(opart, b_own)
+        lam_new = jnp.sum(b, axis=0)
+        safe = jnp.maximum(lam_new, cfg.eps)
+        return b / safe, lam_new
+
+    return update, gather
+
+
 def _make_mode_update(
     mv: ModeView,
     cfg: CPAPRConfig,
@@ -178,17 +316,29 @@ def _make_mode_update(
     local_strategy: str = "blocked",
     pig: "ShardedPiGather | None" = None,
 ):
-    """Jitted per-mode solve: returns (A_n', lam', kkt, n_inner).
+    """Jitted per-mode solve.
 
-    With ``pig`` (sharded strategy + ``cfg.shard_pi``) the Pi rows are
-    never materialized: each shard gathers only the factor rows its
-    nonzeros touch and rebuilds its Pi product inside the shard, per
-    inner iteration.
+    Returns ``(update, gather)``.  On the psum/unsharded paths
+    ``update(factors, lam)`` returns ``(A_n', lam', kkt, n_inner)`` and
+    ``gather`` is ``None``; when the mode runs sharded with the
+    reduce-scatter combine the pair comes from
+    :func:`_make_owner_mode_update` instead (owner-stacked carry +
+    separate async gather).  With ``pig`` (sharded strategy +
+    ``cfg.shard_pi``) the Pi rows are never materialized: each shard
+    gathers only the factor rows its nonzeros touch and rebuilds its Pi
+    product inside the shard, per inner iteration.
     """
 
     n = mv.mode
     n_rows = mv.n_rows
     mesh = cfg.mesh if strategy == "sharded" else None
+    if (
+        strategy == "sharded"
+        and isinstance(layout, ShardedBlockedLayout)
+        and effective_mode_combine(cfg.combine, strategy, layout, cfg.rank)
+        == "reduce_scatter"
+    ):
+        return _make_owner_mode_update(mv, cfg, layout, local_strategy, pig)
 
     @jax.jit
     def update(factors: tuple, lam: jax.Array):
@@ -254,7 +404,7 @@ def _make_mode_update(
         a_new = b / safe
         return a_new, lam_new, viol, i
 
-    return update
+    return update, None
 
 
 def _effective_shard_count(mesh, n_shards) -> int:
@@ -300,6 +450,7 @@ def resolve_mode_policies(
     autotuner: "object | None" = None,
     mesh: "object | None" = None,
     n_shards: "int | None" = None,
+    combine: str = "auto",
 ) -> tuple:
     """Per-mode (strategy, layout, policy, local_strategy) lists.
 
@@ -308,6 +459,14 @@ def resolve_mode_policies(
     (``repro.core.cpals.cp_als``) both route through it, so
     ``policy="auto"`` / explicit :class:`PhiPolicy` / sharded layouts
     behave identically across the paper's two algorithm families.
+    ``combine`` (the sharded psum / reduce-scatter epilogue choice, or
+    ``"auto"``) is folded into the autotuner's sharded cache keys.  The
+    keys follow the *requested* resolution (``"auto"`` keys as
+    reduce-scatter): the tuned sub-problems are shard-local fused MU
+    steps, which no combine flavour changes, so the later per-mode
+    wire-aware demotion (:func:`effective_mode_combine`, which needs the
+    built layout) deliberately does not re-key — the dimension exists so
+    future combine-*sensitive* probes stay separable.
     """
     n_modes = len(mvs)
     strategies = [strategy] * n_modes
@@ -315,6 +474,7 @@ def resolve_mode_policies(
     policies: list = [None] * n_modes
     locals_: list = ["blocked"] * n_modes
     sharded = strategy == "sharded"
+    eff_combine = resolve_combine(combine, strategy)
     eff_shards = (
         _effective_shard_count(mesh, n_shards) if sharded else 1
     )
@@ -333,6 +493,7 @@ def resolve_mode_policies(
                 pol, _ = tuner.policy_for_sharded_mode(
                     mv.rows, mv.sorted_vals, pi_n, b_n,
                     n_rows=mv.n_rows, rank=rank, n_shards=eff_shards,
+                    combine=eff_combine,
                 )
             else:
                 # Segment-run stats computed once per mode (host numpy,
@@ -407,6 +568,7 @@ def _resolve_mode_policies(
         autotuner=cfg.autotuner,
         mesh=cfg.mesh,
         n_shards=cfg.n_shards,
+        combine=cfg.combine,
     )
 
 
@@ -438,11 +600,12 @@ def cpapr_mu(
 
     pigs = [mode_pi_gather(mvs[n], layouts[n], cfg.shard_pi)
             for n in range(n_modes)]
-    updates = [
-        _make_mode_update(mvs[n], cfg, strategies[n], layouts[n], locals_[n],
-                          pig=pigs[n])
-        for n in range(n_modes)
-    ]
+    updates, gathers = [], []
+    for n in range(n_modes):
+        upd, gat = _make_mode_update(mvs[n], cfg, strategies[n], layouts[n],
+                                     locals_[n], pig=pigs[n])
+        updates.append(upd)
+        gathers.append(gat)
 
     def _nnz_imbalance(sl: ShardedBlockedLayout) -> float:
         mean = float(sl.shard_nnz.mean())
@@ -482,6 +645,7 @@ def cpapr_mu(
                     factors[n] * lam[None, :],
                     n_rows=mv.n_rows, rank=cfg.rank,
                     n_shards=new_sl.n_shards, cuts=cuts,
+                    combine=resolve_combine(cfg.combine, strategies[n]),
                 )
             events.append({
                 "outer": outer,
@@ -493,7 +657,7 @@ def cpapr_mu(
             })
             layouts[n] = new_sl
             pigs[n] = mode_pi_gather(mvs[n], new_sl, cfg.shard_pi)
-            updates[n] = _make_mode_update(
+            updates[n], gathers[n] = _make_mode_update(
                 mvs[n], cfg, strategies[n], new_sl, locals_[n], pig=pigs[n]
             )
 
@@ -507,7 +671,15 @@ def cpapr_mu(
         worst = 0.0
         inner_total = 0
         for n in range(n_modes):
-            a_new, lam, viol, n_inner = updates[n](tuple(factors), lam)
+            if gathers[n] is None:
+                a_new, lam, viol, n_inner = updates[n](tuple(factors), lam)
+            else:
+                # Owner-partitioned mode: the inner loop returns the
+                # owner-stacked carry; the factor-row gather is its own
+                # async dispatch, so it overlaps the host-side dispatch
+                # (and factor-independent prologue) of the next mode.
+                b_own, viol, n_inner = updates[n](tuple(factors), lam)
+                a_new, lam = gathers[n](b_own)
             factors[n] = a_new
             worst = max(worst, float(viol))
             inner_total += int(n_inner)

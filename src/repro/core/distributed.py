@@ -28,21 +28,44 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .layout import ShardedBlockedLayout, ShardedPiGather
+from .layout import (
+    OwnerPartition,
+    ShardedBlockedLayout,
+    ShardedPiGather,
+    owner_partition,
+)
 from .pi import pi_rows_local
 from .sparse_tensor import KTensor, SparseTensor, random_ktensor, sort_mode
 
 __all__ = [
     "DistCPAPRConfig",
+    "PHI_COMBINES",
     "dist_cpapr_mu",
     "shard_mode_views",
     "make_phi_mesh",
     "mesh_device_count",
     "krao_sharded",
+    "owner_stack",
+    "owner_unstack",
+    "owner_scatter_wire_bytes",
+    "preferred_combine",
     "phi_sharded",
+    "phi_sharded_owner",
     "phi_mu_sharded",
+    "phi_mu_sharded_owner",
     "sharded_combine_bytes",
 ]
+
+# Combine flavours of the sharded Phi/MTTKRP reduction:
+#   "psum"           — all-reduce the full (buf_rows, R) window (PR-2);
+#                      every device holds the combined window, the MU
+#                      epilogue runs replicated.  Bitwise reference.
+#   "reduce_scatter" — reduce-scatter over row-owner slots; each device
+#                      keeps only its owned O(I_n*R/S) slice and runs
+#                      the epilogue owner-locally.  Bitwise-identical
+#                      results (owner slots sum disjoint-support
+#                      windows, so both combines add exact zeros).
+PHI_COMBINES = ("psum", "reduce_scatter")
 
 
 def _resolve_shard_map():
@@ -97,26 +120,21 @@ def sharded_combine_bytes(slayout: ShardedBlockedLayout, rank: int,
     return slayout.combine_bytes(rank, itemsize)
 
 
-def _shard_partial(slayout: ShardedBlockedLayout, eps: float,
-                   local_strategy: str,
-                   vals_e, pi_e, local_rows, grid_rb, rb_start, b_buf):
-    """One shard's contribution to the global output window.
+def _shard_window(slayout: ShardedBlockedLayout, eps: float,
+                  local_strategy: str,
+                  vals_e, pi_e, local_rows, grid_rb, b_win):
+    """One shard's local output window (``n_rb_shard * block_rows``, R).
 
-    Computes the local blocked reduction over this shard's row-block
-    range (``local_strategy``: 'blocked' = jnp emulation, 'pallas' = the
-    real kernel) and places it at its global row offset inside a zero
-    ``buf_rows``-row buffer — the psum combine then sums disjoint windows
-    (plus zeros).  With ``b_buf=None`` the reduction is the *plain*
-    Khatri-Rao sum (MTTKRP); otherwise the Phi model weighting applies.
+    The local blocked reduction over this shard's row-block range
+    (``local_strategy``: 'blocked' = jnp emulation, 'pallas' = the real
+    kernel).  ``b_win`` is the shard's B window (or None for the *plain*
+    Khatri-Rao sum, MTTKRP).  Rows past the shard's real row-block count
+    are all-padding (only invalid slots visit them), so they come back
+    exactly zero — the invariant both combines rely on.
     """
     from .phi import _phi_blocked_core  # deferred: phi lazily imports us
 
     br = slayout.block_rows
-    r = pi_e.shape[-1]
-    row0 = rb_start * br
-    b_win = None if b_buf is None else jax.lax.dynamic_slice(
-        b_buf, (row0, 0), (slayout.n_rb_shard * br, r)
-    )
     if local_strategy == "pallas":
         if b_win is None:
             from repro.kernels.mttkrp import ops as mttkrp_ops
@@ -155,6 +173,26 @@ def _shard_partial(slayout: ShardedBlockedLayout, eps: float,
             n_row_blocks=slayout.n_rb_shard,
             eps=eps,
         )
+    return phi_local
+
+
+def _shard_partial(slayout: ShardedBlockedLayout, eps: float,
+                   local_strategy: str,
+                   vals_e, pi_e, local_rows, grid_rb, rb_start, b_buf):
+    """One shard's contribution to the global output window.
+
+    Computes the local window (:func:`_shard_window`) and places it at
+    its global row offset inside a zero ``buf_rows``-row buffer — the
+    psum combine then sums disjoint windows (plus zeros).
+    """
+    br = slayout.block_rows
+    r = pi_e.shape[-1]
+    row0 = rb_start * br
+    b_win = None if b_buf is None else jax.lax.dynamic_slice(
+        b_buf, (row0, 0), (slayout.n_rb_shard * br, r)
+    )
+    phi_local = _shard_window(slayout, eps, local_strategy,
+                              vals_e, pi_e, local_rows, grid_rb, b_win)
     out = jnp.zeros((slayout.buf_rows, r), phi_local.dtype)
     return jax.lax.dynamic_update_slice(out, phi_local, (row0, 0))
 
@@ -296,6 +334,232 @@ def _krao_sharded_buf(slayout: ShardedBlockedLayout, vals_es, kr_es,
                         ())
 
 
+# ---------------------------------------------------------------------------
+# Reduce-scatter epilogue over row-owner partitions
+# ---------------------------------------------------------------------------
+
+
+def owner_stack(opart: OwnerPartition, b):
+    """Owner-stacked (S, own_rows, R) form of a full factor block.
+
+    Pads ``b`` to the combine window, slices each owner's padded row
+    window, and masks rows owned by the *next* owner to zero.  The
+    masked tail only ever multiplies invalid layout slots inside the
+    shard-local compute, so Phi built from the stacked form is
+    bitwise-identical to Phi built from the full window.
+    """
+    r = b.shape[-1]
+    b_buf = jnp.pad(b, ((0, opart.buf_rows - b.shape[0]), (0, 0)))
+    slots = jnp.stack([
+        jax.lax.dynamic_slice(b_buf, (int(s0), 0), (opart.own_rows, r))
+        for s0 in opart.row_start
+    ])
+    return jnp.where(jnp.asarray(opart.masks())[:, :, None], slots, 0.0)
+
+
+def owner_unstack(opart: OwnerPartition, stacked):
+    """Reassemble the full (n_rows, R) block from owner-stacked slices.
+
+    This is the once-per-mode-update factor-row gather of the
+    reduce-scatter epilogue: under a mesh the stacked array is
+    device-sharded on its owner axis, so consuming it here gathers the
+    O(I_n * R) updated rows **once per mode update** — instead of the
+    psum path's all-reduce of the full window once per inner iteration.
+    Keep it in its own jitted dispatch (the solver does) so the runtime
+    can overlap the gather with the next mode's Phi prologue.
+    """
+    r = stacked.shape[-1]
+    out = jnp.zeros((opart.buf_rows, r), stacked.dtype)
+    for s in range(opart.n_shards):
+        cnt = int(opart.row_count[s])
+        out = jax.lax.dynamic_update_slice(
+            out, stacked[s, :cnt], (int(opart.row_start[s]), 0)
+        )
+    return out[: opart.n_rows]
+
+
+def owner_scatter_wire_bytes(opart: OwnerPartition, rank: int,
+                             itemsize: int = 4) -> float:
+    """Per-device ring wire bytes of the reduce-scatter combine.
+
+    Input is the (S * own_rows, R) owner-slot operand, output the owned
+    (own_rows, R) slice: ring reduce-scatter moves ``(S-1) * output``
+    bytes per device — about half the psum path's all-reduce of the full
+    window, with an O(I_n * R / S) per-device *result* instead of the
+    replicated O(I_n * R) buffer.
+    """
+    if opart.n_shards <= 1:
+        return 0.0
+    return float(
+        (opart.n_shards - 1) * opart.own_rows * rank * itemsize
+    )
+
+
+def preferred_combine(slayout: ShardedBlockedLayout, rank: int,
+                      itemsize: int = 4) -> str:
+    """Wire-cheaper combine flavour for this layout's shard split.
+
+    The reduce-scatter operand's owner slots are padded to the *widest*
+    owner (``own_rows = n_rb_shard * block_rows``), so its ring wire is
+    ``(S-1) * own_rows * R`` against the psum's ``2 (S-1)/S * buf_rows
+    * R``.  Balanced splits pay about half the psum wire; a heavily
+    block-skewed split (one owner holding most row blocks) can pad the
+    slots past the all-reduce.  ``combine="auto"`` consults this per
+    mode; ties go to reduce-scatter — its per-device combine *output*
+    (the owned O(I_n * R / S) slice) always beats the replicated window,
+    and the factor gather amortizes to once per mode update.
+    """
+    s = slayout.n_shards
+    if s <= 1:
+        return "reduce_scatter"
+    opart = owner_partition(slayout)
+    rs_wire = owner_scatter_wire_bytes(opart, rank, itemsize)
+    psum_wire = 2.0 * (s - 1) / s * slayout.combine_bytes(rank, itemsize)
+    return "reduce_scatter" if rs_wire <= psum_wire else "psum"
+
+
+def _validate_owner(slayout: ShardedBlockedLayout, opart: OwnerPartition):
+    """An owner partition built from one shard assignment must never run
+    against another — its slices would silently cover the wrong rows."""
+    if opart.n_shards != slayout.n_shards:
+        raise ValueError(
+            f"owner partition has {opart.n_shards} shards but the layout "
+            f"has {slayout.n_shards}"
+        )
+    if opart.rb_start != tuple(int(x) for x in slayout.rb_start):
+        raise ValueError(
+            "owner partition was built from a different shard assignment "
+            f"(rb_start {opart.rb_start} vs "
+            f"{tuple(int(x) for x in slayout.rb_start)}); rebuild it with "
+            "owner_partition() after rebalancing"
+        )
+
+
+def _linear_axis_index(mesh: Mesh, axes: tuple):
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("slayout", "opart", "pig", "eps", "tol", "mesh",
+                     "local_strategy", "fused", "plain"),
+)
+def _owner_combined(slayout: ShardedBlockedLayout, opart: OwnerPartition,
+                    vals_es, pi_es, fgs, b_own, eps: float, tol: float,
+                    mesh: Mesh | None, local_strategy: str,
+                    fused: bool, plain: bool,
+                    pig: ShardedPiGather | None = None):
+    """Reduce-scatter combine core: owner-stacked results, no replication.
+
+    Each shard's local window *is* its contribution to its own owner
+    slot (windows only overlap on padding rows, which are exactly zero),
+    so the combine is one ``psum_scatter`` of the (S * own_rows, R)
+    owner-slot operand: device ``s`` writes its masked window at slot
+    ``s`` and receives only its owned O(I_n * R / S) slice.
+
+    * ``fused=False`` — returns the owner-stacked combined window
+      (S, own_rows, R); ``b_own`` supplies the Phi model weighting
+      (None together with ``plain=True`` for the MTTKRP reduction).
+    * ``fused=True`` — the full owner-local MU step: KKT violation via a
+      scalar ``pmax`` and the multiplicative update on owned rows only;
+      returns ``(b_own', viol)`` with the loop-carry kept owner-stacked.
+
+    Without a mesh the same schedule runs unrolled on one device —
+    bitwise-matching the scattered combine (each owner slot receives
+    exactly one nonzero contribution, so both paths add exact zeros).
+    With ``pig`` the Pi rows are computed shard-locally from ``fgs``
+    (``pi_es`` unused).
+    """
+    lrows = jnp.asarray(slayout.local_rows)
+    grbs = jnp.asarray(slayout.grid_rb)
+    mask = jnp.asarray(opart.masks())
+    s_count, own_rows = opart.n_shards, opart.own_rows
+    n_pig = len(pig.local_idx) if pig is not None else 0
+    valid = jnp.asarray(slayout.valid) if pig is not None else None
+    lidx = (tuple(jnp.asarray(x) for x in pig.local_idx)
+            if pig is not None else ())
+
+    def window(vals_e, pi_e, lr, grb, b_win, vmask, li, fg):
+        if pig is not None:
+            pi_e = pi_rows_local(fg, li, vmask)
+        return _shard_window(slayout, eps, local_strategy,
+                             vals_e, pi_e, lr, grb, b_win)
+
+    if mesh is None:
+        wins = []
+        for s in range(s_count):
+            wins.append(window(
+                vals_es[s],
+                None if pig is not None else pi_es[s],
+                lrows[s], grbs[s],
+                None if plain else b_own[s],
+                valid[s] if pig is not None else None,
+                tuple(x[s] for x in lidx),
+                tuple(f[s] for f in fgs) if pig is not None else (),
+            ))
+        stacked = jnp.where(mask[:, :, None], jnp.stack(wins), 0.0)
+        if not fused:
+            return stacked
+        viol = jnp.max(jnp.abs(jnp.minimum(b_own, 1.0 - stacked)))
+        return jnp.where(viol > tol, b_own * stacked, b_own), viol
+
+    axes = tuple(mesh.axis_names)
+    name = axes[0] if len(axes) == 1 else axes
+
+    def local(*args):
+        i = 0
+        vals_e = args[i][0]; i += 1
+        lr = args[i][0]; i += 1
+        grb = args[i][0]; i += 1
+        if pig is not None:
+            vmask = args[i][0]; i += 1
+            li = tuple(args[i + j][0] for j in range(n_pig)); i += n_pig
+            fg = tuple(args[i + j][0] for j in range(n_pig)); i += n_pig
+            pi_e = None
+        else:
+            vmask, li, fg = None, (), ()
+            pi_e = args[i][0]; i += 1
+        b_w = None if plain else args[i][0]
+        i += 0 if plain else 1
+        mk = args[i][0]  # this owner's (own_rows,) real-row mask
+
+        win = window(vals_e, pi_e, lr, grb, b_w, vmask, li, fg)
+        win = jnp.where(mk[:, None], win, 0.0)
+        r = win.shape[-1]
+        idx = _linear_axis_index(mesh, axes)
+        op = jnp.zeros((s_count * own_rows, r), win.dtype)
+        op = jax.lax.dynamic_update_slice(op, win, (idx * own_rows, 0))
+        owned = jax.lax.psum_scatter(
+            op, name, scatter_dimension=0, tiled=True
+        )
+        if not fused:
+            return owned[None]
+        viol = jax.lax.pmax(
+            jnp.max(jnp.abs(jnp.minimum(b_w, 1.0 - owned))), name
+        )
+        return jnp.where(viol > tol, b_w * owned, b_w)[None], viol
+
+    sharded_args = [vals_es, lrows, grbs]
+    if pig is not None:
+        sharded_args += [valid, *lidx, *fgs]
+    else:
+        sharded_args += [pi_es]
+    if not plain:
+        sharded_args += [b_own]
+    sharded_args += [mask]
+    in_specs = tuple(
+        P(axes, *([None] * (a.ndim - 1))) for a in sharded_args
+    )
+    out_specs = (
+        (P(axes, None, None), P()) if fused else P(axes, None, None)
+    )
+    fn = _shard_map(local, mesh, in_specs=in_specs, out_specs=out_specs)
+    return fn(*sharded_args)
+
+
 def _gather_factor_shards(pig: ShardedPiGather, factors):
     """(S, U_m, R) gathered factor rows per gathered mode (the only factor
     bytes a shard receives under the local-Pi path)."""
@@ -317,14 +581,65 @@ def _validate_pig(slayout: ShardedBlockedLayout, pig: ShardedPiGather):
         )
 
 
+def _resolve_combine(combine: str) -> str:
+    if combine not in PHI_COMBINES:
+        raise ValueError(
+            f"unknown combine {combine!r}; expected one of {PHI_COMBINES}"
+        )
+    return combine
+
+
+def _resolve_owner(slayout: ShardedBlockedLayout,
+                   owner: OwnerPartition | None) -> OwnerPartition:
+    if owner is None:
+        return owner_partition(slayout)
+    _validate_owner(slayout, owner)
+    return owner
+
+
+def _owner_inputs(slayout: ShardedBlockedLayout,
+                  owner: OwnerPartition | None,
+                  pi_gather: ShardedPiGather | None, factors, pi_es):
+    """Shared reduce-scatter dispatch preamble.
+
+    Resolves (or validates) the owner partition, validates the
+    shard-local Pi gather and collects its factor-row shards, and picks
+    the pre-expanded-rows operand (``None`` when Pi is shard-local).
+    Returns ``(opart, fgs, pi_es)`` — the argument-selection rule every
+    reduce-scatter entry point must agree on.
+    """
+    opart = _resolve_owner(slayout, owner)
+    fgs = None
+    if pi_gather is not None:
+        _validate_pig(slayout, pi_gather)
+        fgs = _gather_factor_shards(pi_gather, factors)
+        pi_es = None
+    return opart, fgs, pi_es
+
+
 def phi_sharded(slayout: ShardedBlockedLayout, vals_es, pi_es, b,
                 eps: float = 1e-10, mesh: Mesh | None = None,
                 local_strategy: str = "blocked",
-                pi_gather: ShardedPiGather | None = None, factors=None):
+                pi_gather: ShardedPiGather | None = None, factors=None,
+                combine: str = "psum",
+                owner: OwnerPartition | None = None):
     """Phi^(n) over row-block shards.  Inputs from ``expand_to_shards``,
     or — with ``pi_gather``/``factors`` — shard-locally computed Pi rows
-    (``pi_es`` then unused; ``vals_es`` from ``expand_vals_to_shards``)."""
+    (``pi_es`` then unused; ``vals_es`` from ``expand_vals_to_shards``).
+    ``combine="reduce_scatter"`` scatters the combine over row-owner
+    slots (each device holds only its owned O(I_n*R/S) slice; the full
+    result is reassembled here) instead of the replicating psum —
+    bitwise-identical output.  ``owner`` (optional) pins the owner
+    partition; it must match the layout's shard assignment."""
     _validate_phi_mesh(slayout, mesh)
+    if _resolve_combine(combine) == "reduce_scatter":
+        opart, fgs, pi_es = _owner_inputs(slayout, owner, pi_gather,
+                                          factors, pi_es)
+        stacked = _owner_combined(
+            slayout, opart, vals_es, pi_es, fgs,
+            owner_stack(opart, b), float(eps), 0.0, mesh, local_strategy,
+            False, False, pig=pi_gather)
+        return owner_unstack(opart, stacked)
     if pi_gather is not None:
         _validate_pig(slayout, pi_gather)
         fgs = _gather_factor_shards(pi_gather, factors)
@@ -337,14 +652,26 @@ def phi_sharded(slayout: ShardedBlockedLayout, vals_es, pi_es, b,
 
 def krao_sharded(slayout: ShardedBlockedLayout, vals_es, kr_es,
                  mesh: Mesh | None = None, local_strategy: str = "blocked",
-                 pi_gather: ShardedPiGather | None = None, factors=None):
-    """Sharded plain Khatri-Rao reduction (MTTKRP) with one psum combine.
+                 pi_gather: ShardedPiGather | None = None, factors=None,
+                 combine: str = "psum",
+                 owner: OwnerPartition | None = None):
+    """Sharded plain Khatri-Rao reduction (MTTKRP) with one combine.
 
     Same shard machinery as :func:`phi_sharded` without the model
     weighting; with ``pi_gather``/``factors`` the Khatri-Rao rows are
-    computed shard-locally and ``kr_es`` is unused.
+    computed shard-locally and ``kr_es`` is unused.  ``combine`` picks
+    the psum (replicating all-reduce) or reduce-scatter (owner-sliced)
+    epilogue — bitwise-identical results.
     """
     _validate_phi_mesh(slayout, mesh)
+    if _resolve_combine(combine) == "reduce_scatter":
+        opart, fgs, kr_arg = _owner_inputs(slayout, owner, pi_gather,
+                                           factors, kr_es)
+        stacked = _owner_combined(
+            slayout, opart, vals_es, kr_arg, fgs,
+            None, 0.0, 0.0, mesh, local_strategy,
+            False, True, pig=pi_gather)
+        return owner_unstack(opart, stacked)
     if pi_gather is not None:
         _validate_pig(slayout, pi_gather)
         fgs = _gather_factor_shards(pi_gather, factors)
@@ -359,18 +686,31 @@ def phi_mu_sharded(slayout: ShardedBlockedLayout, vals_es, pi_es, b,
                    eps: float = 1e-10, tol: float = 1e-4,
                    mesh: Mesh | None = None,
                    local_strategy: str = "blocked",
-                   pi_gather: ShardedPiGather | None = None, factors=None):
-    """Fused sharded MU step: psum-combined Phi + replicated epilogue.
+                   pi_gather: ShardedPiGather | None = None, factors=None,
+                   combine: str = "psum",
+                   owner: OwnerPartition | None = None):
+    """Fused sharded MU step, psum or reduce-scatter combine.
 
-    The combine buffer's padding rows hold B = Phi = 0, contributing
-    ``|min(0, 1)| = 0`` to the KKT max and nothing to ``B * Phi`` — the
-    same invariant as the single-device padded windows.  With
-    ``pi_gather``/``factors`` the Pi rows are computed shard-locally
-    (``pi_es`` unused).
+    ``combine="psum"`` (PR-2): all-reduce the full window, replicated
+    epilogue.  ``combine="reduce_scatter"``: owner-sliced combine +
+    owner-local epilogue (the full updated B is reassembled here; the
+    solver's inner loop keeps the owner-stacked carry instead via
+    :func:`phi_mu_sharded_owner`).  The combine buffer's padding rows
+    hold B = Phi = 0, contributing ``|min(0, 1)| = 0`` to the KKT max
+    and nothing to ``B * Phi`` — the same invariant as the
+    single-device padded windows.  With ``pi_gather``/``factors`` the
+    Pi rows are computed shard-locally (``pi_es`` unused).
     """
     from .phi import _mu_epilogue  # deferred: phi lazily imports us
 
     _validate_phi_mesh(slayout, mesh)
+    if _resolve_combine(combine) == "reduce_scatter":
+        opart = _resolve_owner(slayout, owner)
+        b_own, viol = phi_mu_sharded_owner(
+            slayout, opart, vals_es, pi_es, owner_stack(opart, b),
+            eps=eps, tol=tol, mesh=mesh, local_strategy=local_strategy,
+            pi_gather=pi_gather, factors=factors)
+        return owner_unstack(opart, b_own), viol
     if pi_gather is not None:
         _validate_pig(slayout, pi_gather)
         fgs = _gather_factor_shards(pi_gather, factors)
@@ -383,6 +723,53 @@ def phi_mu_sharded(slayout: ShardedBlockedLayout, vals_es, pi_es, b,
     b_buf = _pad_b_buf(slayout, b)
     b_new, viol = _mu_epilogue(b_buf, phi_buf, tol)
     return b_new[: slayout.n_rows], viol
+
+
+def phi_sharded_owner(slayout: ShardedBlockedLayout, opart: OwnerPartition,
+                      vals_es, pi_es, b_own,
+                      eps: float = 1e-10, mesh: Mesh | None = None,
+                      local_strategy: str = "blocked",
+                      pi_gather: ShardedPiGather | None = None,
+                      factors=None):
+    """Owner-stacked combined Phi (S, own_rows, R) — reduce-scatter
+    combine, no reassembly.  ``b_own`` is the owner-stacked B
+    (:func:`owner_stack`); the solver's scooch step consumes this form
+    directly so the full window is never replicated."""
+    _validate_phi_mesh(slayout, mesh)
+    opart, fgs, pi_es = _owner_inputs(slayout, opart, pi_gather,
+                                      factors, pi_es)
+    return _owner_combined(
+        slayout, opart, vals_es, pi_es, fgs, b_own,
+        float(eps), 0.0, mesh, local_strategy, False, False,
+        pig=pi_gather)
+
+
+def phi_mu_sharded_owner(slayout: ShardedBlockedLayout,
+                         opart: OwnerPartition, vals_es, pi_es, b_own,
+                         eps: float = 1e-10, tol: float = 1e-4,
+                         mesh: Mesh | None = None,
+                         local_strategy: str = "blocked",
+                         pi_gather: ShardedPiGather | None = None,
+                         factors=None):
+    """Owner-partitioned fused MU step: ``(b_own', viol)``, no gather.
+
+    The loop-carry form of the reduce-scatter epilogue: ``b_own`` is the
+    owner-stacked (S, own_rows, R) B (:func:`owner_stack`), the combine
+    is one reduce-scatter over owner slots, and the MU/KKT epilogue runs
+    shard-locally on owned rows (the KKT max meets in a scalar pmax).
+    The solver's inner ``lax.while_loop`` carries ``b_own`` across
+    iterations and reassembles the full factor **once** per mode update
+    with :func:`owner_unstack` — per-inner-iteration combine traffic
+    drops from the psum path's all-reduce of the full O(I_n * R) window
+    to a reduce-scatter whose per-device output is O(I_n * R / S).
+    """
+    _validate_phi_mesh(slayout, mesh)
+    opart, fgs, pi_es = _owner_inputs(slayout, opart, pi_gather,
+                                      factors, pi_es)
+    return _owner_combined(
+        slayout, opart, vals_es, pi_es, fgs, b_own,
+        float(eps), float(tol), mesh, local_strategy, True, False,
+        pig=pi_gather)
 
 
 def _validate_phi_mesh(slayout: ShardedBlockedLayout, mesh: Mesh | None):

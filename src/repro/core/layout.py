@@ -31,11 +31,13 @@ import numpy as np
 __all__ = [
     "BlockedLayout",
     "ModeStats",
+    "OwnerPartition",
     "ShardedBlockedLayout",
     "ShardedPiGather",
     "build_blocked_layout",
     "build_shard_pi_gather",
     "mode_run_stats",
+    "owner_partition",
     "rebalance_shards",
     "shard_blocked_layout",
     "shard_row_ranges",
@@ -521,6 +523,143 @@ def shard_stream_cuts(
                                         int(slayout.rb_start[s]) * br)))
     cuts.append(int(rows_sorted.shape[0]))
     return cuts
+
+
+# ---------------------------------------------------------------------------
+# Owner partition: row ownership for the reduce-scatter Phi epilogue
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-static friendly
+class OwnerPartition:
+    """Row-owner partition of the combine window for reduce-scatter.
+
+    The psum combine replicates the whole ``(buf_rows, R)`` partial-Phi
+    window on every device — O(I_n * R) per device per inner iteration.
+    This structure assigns each device *ownership* of a contiguous slice
+    of the window, aligned with the shard's row-block cuts, so the
+    combine can be a **reduce-scatter**: each device keeps only its owned
+    O(I_n * R / S) slice, runs the MU/KKT epilogue shard-locally on owned
+    rows, and the updated factor rows are all-gathered once per mode
+    update instead of all-reduced once per inner iteration.
+
+    Owner slices are the shard windows themselves: owner ``s`` owns rows
+    ``[row_start[s], row_start[s] + row_count[s])`` with the trailing
+    window padding assigned to the last owner, so every row of the
+    ``buf_rows`` window has exactly one owner.  ``own_rows`` is the
+    uniform padded slice width (``n_rb_shard * block_rows``) required by
+    the tiled reduce-scatter; rows past ``row_count[s]`` inside a slice
+    are masked to zero (they belong to the *next* owner).
+
+    Attributes:
+      n_shards:  owner count S (== the layout's shard count).
+      own_rows:  uniform padded rows per owner slice.
+      buf_rows:  rows of the combine window (== n_shards-invariant layout
+                 buf_rows; always ``row_start[-1] + own_rows``).
+      n_rows:    true row count I_n.
+      row_start: (S,) int64 first owned row of each owner.
+      row_count: (S,) int64 really-owned rows (last owner absorbs the
+                 window's trailing padding, so the counts sum to
+                 buf_rows).
+      rb_start:  fingerprint of the owning layout's shard assignment
+                 (its ``rb_start`` as a tuple) — a partition built from
+                 one assignment must never run against another (the
+                 owner slices would silently cover the wrong rows), so
+                 consumers validate this before use.
+    """
+
+    n_shards: int
+    own_rows: int
+    buf_rows: int
+    n_rows: int
+    row_start: np.ndarray
+    row_count: np.ndarray
+    rb_start: tuple
+
+    @property
+    def fingerprint(self) -> str:
+        """crc32 of the shard assignment, matching the autotuner's
+        ``/assign=<crc32>`` fragment style (stable across processes)."""
+        import zlib
+
+        arr = np.asarray(self.rb_start, np.int64)
+        return format(zlib.crc32(arr.tobytes()) & 0xFFFFFFFF, "08x")
+
+    def masks(self) -> np.ndarray:
+        """(S, own_rows) bool: True on really-owned rows of each slice."""
+        return (
+            np.arange(self.own_rows)[None, :]
+            < self.row_count[:, None]
+        )
+
+    def owner_of_rows(self) -> np.ndarray:
+        """(buf_rows,) int32 owner of every combine-window row."""
+        return np.repeat(
+            np.arange(self.n_shards, dtype=np.int32), self.row_count
+        )
+
+    def scatter_bytes(self, rank: int, itemsize: int = 4) -> int:
+        """Bytes of one per-device reduce-scatter *output* (the owned
+        slice) — the O(I_n * R / S) footprint the epilogue works on."""
+        return self.own_rows * rank * itemsize
+
+
+# One partition per layout object: OwnerPartition is identity-hashed and
+# used as a jit-static argument, so handing back a fresh instance per
+# call would recompile the reduce-scatter programs on every eager public
+# API call.  Weak keys let rebalanced (abandoned) layouts free theirs.
+_OWNER_PARTITIONS: "weakref.WeakKeyDictionary" = None  # populated on import
+
+
+def owner_partition(slayout: ShardedBlockedLayout) -> OwnerPartition:
+    """The owner partition matching a sharded layout's row cuts.
+
+    Each owner's slice is its shard's padded row window, so the shard's
+    local partial-Phi window *is* its contribution to its own slot of the
+    reduce-scatter operand (contributions to other owners' slots are
+    exactly zero — shard windows only overlap on padding rows, which
+    carry no real nonzeros).  Runs on host numpy next to
+    :func:`shard_blocked_layout` / :func:`rebalance_shards` and is
+    memoized per layout object (the partition is a jit-static argument);
+    a rebalanced layout gets its own (consumers validate the
+    ``rb_start`` fingerprint).
+    """
+    global _OWNER_PARTITIONS
+    if _OWNER_PARTITIONS is None:
+        import weakref
+
+        _OWNER_PARTITIONS = weakref.WeakKeyDictionary()
+    cached = _OWNER_PARTITIONS.get(slayout)
+    if cached is not None:
+        return cached
+    opart = _build_owner_partition(slayout)
+    _OWNER_PARTITIONS[slayout] = opart
+    return opart
+
+
+def _build_owner_partition(slayout: ShardedBlockedLayout) -> OwnerPartition:
+    br = slayout.block_rows
+    own_rows = slayout.n_rb_shard * br
+    row_start = slayout.rb_start.astype(np.int64) * br
+    row_count = slayout.rb_count.astype(np.int64) * br
+    # trailing window padding belongs to the last owner: the buf_rows
+    # window always ends exactly one padded slice after the last cut
+    if int(row_start[-1]) + own_rows != slayout.buf_rows:
+        raise AssertionError(
+            f"combine window ends at {slayout.buf_rows}, expected "
+            f"{int(row_start[-1]) + own_rows} (layout invariant violated)"
+        )
+    row_count = row_count.copy()
+    row_count[-1] = slayout.buf_rows - int(row_start[-1])
+    return OwnerPartition(
+        n_shards=slayout.n_shards,
+        own_rows=own_rows,
+        buf_rows=slayout.buf_rows,
+        n_rows=slayout.n_rows,
+        row_start=row_start,
+        row_count=row_count,
+        rb_start=tuple(int(x) for x in slayout.rb_start),
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -339,6 +339,23 @@ def _resolve_sharded(rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e):
     return layout, vals_e, pi_e, mesh
 
 
+def _check_combine(strategy: str, combine: str) -> None:
+    """Validate the combine flavour; only the sharded strategy combines."""
+    if combine == "psum":
+        return
+    from .distributed import PHI_COMBINES  # deferred: avoids import cycle
+
+    if combine not in PHI_COMBINES:
+        raise ValueError(
+            f"unknown combine {combine!r}; expected one of {PHI_COMBINES}"
+        )
+    if strategy != "sharded":
+        raise ValueError(
+            f"combine={combine!r} only applies to strategy='sharded' "
+            f"(got strategy={strategy!r})"
+        )
+
+
 def _require_pig_layout(layout, pi_gather, factors) -> ShardedBlockedLayout:
     """Validate the shard-local-Pi argument triple (layout, pig, factors)."""
     if not isinstance(layout, ShardedBlockedLayout):
@@ -379,6 +396,7 @@ def phi_from_rows(
     local_strategy: str = "blocked",
     pi_gather=None,
     factors=None,
+    combine: str = "psum",
 ) -> jax.Array:
     """Phi^(n) from pre-gathered Pi rows.  ``rows`` sorted unless 'scatter'.
 
@@ -392,9 +410,13 @@ def phi_from_rows(
     :class:`repro.core.layout.ShardedPiGather`) plus the full ``factors``
     tuple, ``pi``/``pi_e`` may be ``None``: each shard computes its own Pi
     rows from the factor rows it touches (the shard-local Pi gather), so
-    no O(nnz, R) Pi array is ever materialized.
+    no O(nnz, R) Pi array is ever materialized.  ``combine`` picks the
+    sharded combine flavour (``"psum"`` all-reduce or
+    ``"reduce_scatter"`` owner-sliced epilogue — bitwise-identical; see
+    ``repro.core.distributed.PHI_COMBINES``).
     """
     eps = float(eps)
+    _check_combine(strategy, combine)
     if strategy == "scatter":
         return _phi_scatter(rows, vals, pi, b, n_rows, eps, perturb)
     if strategy == "segment":
@@ -422,7 +444,8 @@ def phi_from_rows(
                 vals_e = expand_vals_to_shards(slayout, vals)
             return phi_sharded(slayout, vals_e, None, b, eps, mesh=mesh,
                                local_strategy=local_strategy,
-                               pi_gather=pi_gather, factors=factors)
+                               pi_gather=pi_gather, factors=factors,
+                               combine=combine)
         slayout, vals_e, pi_e, mesh = _resolve_sharded(
             rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e
         )
@@ -434,7 +457,7 @@ def phi_from_rows(
                 strategy=local_strategy, layout=slayout,
             )
         return phi_sharded(slayout, vals_e, pi_e, b, eps, mesh=mesh,
-                           local_strategy=local_strategy)
+                           local_strategy=local_strategy, combine=combine)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
@@ -464,6 +487,7 @@ def phi_mu_step(
     local_strategy: str = "blocked",
     pi_gather=None,
     factors=None,
+    combine: str = "psum",
 ) -> tuple:
     """One fused CP-APR inner MU step: ``(B', viol)`` in a single pass.
 
@@ -475,10 +499,16 @@ def phi_mu_step(
     is one traced expression so XLA fuses the epilogue into the reduction.
     For ``sharded`` the per-device Phi partials meet in a single psum over
     the mesh and the epilogue runs on the replicated combined window — the
-    fused fast path survives sharding with exactly one collective.
+    fused fast path survives sharding with exactly one collective.  With
+    ``combine="reduce_scatter"`` the combine scatters over row-owner
+    slots instead and the epilogue runs shard-locally on owned rows
+    (bitwise-identical ``(B', viol)``); the solver's inner loop uses the
+    owner-stacked carry directly via
+    ``repro.core.distributed.phi_mu_sharded_owner``.
     This is the entry point ``cpapr_mu``'s inner ``lax.while_loop`` calls.
     """
     eps = float(eps)
+    _check_combine(strategy, combine)
     if strategy in ("scatter", "segment"):
         phi = (
             _phi_scatter(rows, vals, pi, b, n_rows, eps)
@@ -514,7 +544,8 @@ def phi_mu_step(
                 vals_e = expand_vals_to_shards(slayout, vals)
             return phi_mu_sharded(slayout, vals_e, None, b, eps, tol,
                                   mesh=mesh, local_strategy=local_strategy,
-                                  pi_gather=pi_gather, factors=factors)
+                                  pi_gather=pi_gather, factors=factors,
+                                  combine=combine)
         slayout, vals_e, pi_e, mesh = _resolve_sharded(
             rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e
         )
@@ -526,7 +557,7 @@ def phi_mu_step(
                 strategy=local_strategy, layout=slayout,
             )
         return phi_mu_sharded(slayout, vals_e, pi_e, b, eps, tol, mesh=mesh,
-                              local_strategy=local_strategy)
+                              local_strategy=local_strategy, combine=combine)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
@@ -544,6 +575,7 @@ def krao_reduce_rows(
     pi_gather=None,
     factors=None,
     sorted_rows: bool = True,
+    combine: str = "psum",
 ) -> jax.Array:
     """Shared segmented Khatri-Rao reduction: ``out[i] = sum x_j * kr_j``.
 
@@ -566,8 +598,10 @@ def krao_reduce_rows(
     ``indices_are_sorted`` promise so unsorted COO order stays correct
     (the :func:`repro.core.cpals.mttkrp` wrapper's default).
     ``vals_e``/``kr_e`` are pre-expanded layout arrays (hoisted by the
-    solver), mirroring :func:`phi_from_rows`.
+    solver), mirroring :func:`phi_from_rows` — as does ``combine`` (the
+    sharded psum vs reduce-scatter epilogue flavour).
     """
+    _check_combine(strategy, combine)
     if strategy in ("scatter", "segment"):
         return _krao_unblocked(rows, vals, kr, n_rows, strategy,
                                bool(sorted_rows))
@@ -602,7 +636,8 @@ def krao_reduce_rows(
                 vals_e = expand_vals_to_shards(slayout, vals)
             return krao_sharded(slayout, vals_e, None, mesh=mesh,
                                 local_strategy=local_strategy,
-                                pi_gather=pi_gather, factors=factors)
+                                pi_gather=pi_gather, factors=factors,
+                                combine=combine)
         slayout, vals_e, kr_e, mesh = _resolve_sharded(
             rows, n_rows, layout, mesh, vals, kr, vals_e, kr_e
         )
@@ -614,7 +649,7 @@ def krao_reduce_rows(
                 strategy=local_strategy, layout=slayout,
             )
         return krao_sharded(slayout, vals_e, kr_e, mesh=mesh,
-                            local_strategy=local_strategy)
+                            local_strategy=local_strategy, combine=combine)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 

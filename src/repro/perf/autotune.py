@@ -109,6 +109,7 @@ def policy_key(
     n_shards: int = 1,
     stats: ModeStats | None = None,
     assign: str | None = None,
+    combine: str | None = None,
 ) -> str:
     """Cache key for one tuning problem.
 
@@ -124,7 +125,11 @@ def policy_key(
     ``/assign=...`` dimension: the same shard *count* under a different
     block->shard assignment (e.g. after nnz-weighted rebalancing) is a
     different tuning problem, so rebalanced assignments never shadow the
-    static split's winners.
+    static split's winners.  ``combine`` appends a ``/combine=...``
+    dimension for the non-default sharded epilogue (reduce-scatter): its
+    communication/revisit profile differs from the psum path, so winners
+    tuned under one combine never silently serve the other (``"psum"``
+    and ``None`` keep the PR-2..4 keyspace — old entries stay valid).
     """
     base = f"{platform}/nnz={nnz}/rows={n_rows}/rank={rank}"
     if stats is not None:
@@ -134,6 +139,8 @@ def policy_key(
     key = f"{base}/shards={n_shards}"
     if assign is not None:
         key = f"{key}/assign={assign}"
+    if combine not in (None, "psum"):
+        key = f"{key}/combine={combine}"
     return key
 
 
@@ -762,6 +769,7 @@ class Autotuner:
         stats: ModeStats | None = None,
         cuts: "list | None" = None,
         assign: str | None = None,
+        combine: str | None = None,
     ) -> tuple:
         """Tuned policies for one mode split into ``n_shards`` row shards.
 
@@ -787,6 +795,10 @@ class Autotuner:
         a rebalanced assignment tunes separately from the static split.
         Without ``cuts`` the default nnz-balanced split keeps the PR-2
         keyspace (no assign dimension — old entries stay valid).
+        ``combine`` (``"reduce_scatter"``; ``"psum"``/None keep the old
+        keyspace) appends the sharded-epilogue dimension to each
+        per-shard key, so policies tuned under the two combine flavours
+        never collide.
         """
         platform = self.platform or jax.default_backend()
         if pi is None and self.measure:
@@ -837,7 +849,7 @@ class Autotuner:
             shard_stats = mode_run_stats(local_rows, row_hi - row_lo)
             key = policy_key(c1 - c0, row_hi - row_lo, rank, platform,
                              n_shards=n_shards, stats=shard_stats,
-                             assign=assign)
+                             assign=assign, combine=combine)
             v1_key = policy_key(c1 - c0, row_hi - row_lo, rank, platform,
                                 n_shards=n_shards)
             pol = self._tune_key(

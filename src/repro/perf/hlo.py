@@ -26,8 +26,10 @@ __all__ = [
     "collective_stats",
     "entry_parameter_bytes",
     "phi_combine_wire_bound",
+    "phi_reduce_scatter_wire_bound",
     "pi_gather_wire_bound",
     "pi_replicated_gather_bytes",
+    "reduce_scatter_wire_bytes",
     "shape_bytes",
 ]
 
@@ -119,6 +121,49 @@ def phi_combine_wire_bound(
     """
     n_rows_pad = -(-max(n_rows, block_rows) // block_rows) * block_rows
     return allreduce_wire_bytes(2 * n_rows_pad * rank * itemsize, n_shards)
+
+
+def reduce_scatter_wire_bytes(output_bytes: float, n_participants: int) -> float:
+    """Ring reduce-scatter per-chip wire traffic for one scattered combine
+    whose per-device *output* is ``output_bytes`` (input ~= output x N)."""
+    n = n_participants
+    if n <= 1:
+        return 0.0
+    return (n - 1) * output_bytes
+
+
+def phi_reduce_scatter_wire_bound(
+    n_rows: int,
+    rank: int,
+    n_shards: int,
+    block_rows: int = 256,
+    itemsize: int = 4,
+) -> float:
+    """Analytic bound on the reduce-scatter Phi combine's per-device wire.
+
+    The owner-partitioned combine scatters the (S * own_rows, R)
+    owner-slot operand; each device's output is its owned
+    ``own_rows * R`` slice — O(I_n * R / S) of result bytes instead of
+    the psum path's replicated O(I_n * R) window.  For a balanced
+    row-block split every owner window stays within 2x the mean
+    (``own_rows <= 2 * n_rows_pad / S``, the same factor-2 slack as
+    :func:`phi_combine_wire_bound`), so the ring wire is bounded by
+
+        (S - 1) * (2 * n_rows_pad / S) * R * itemsize
+          = 2 (S-1)/S * n_rows_pad * R * itemsize
+
+    — exactly **half** the psum bound, with the per-device combine
+    *output* further shrinking as 1/S.  Skewed (hub) splits can exceed
+    the factor-2 window slack; callers asserting compiled HLO against
+    this bound use balanced fixtures (see tests/test_conformance.py).
+    """
+    if n_shards <= 1:
+        return 0.0
+    n_rows_pad = -(-max(n_rows, block_rows) // block_rows) * block_rows
+    own_rows_bound = 2.0 * n_rows_pad / n_shards
+    return reduce_scatter_wire_bytes(
+        own_rows_bound * rank * itemsize, n_shards
+    )
 
 
 def pi_gather_wire_bound(

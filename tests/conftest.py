@@ -28,16 +28,38 @@ def dense_phi_reference(rows, vals, pi, b, n_rows, eps=1e-10):
     return phi
 
 
+def can_force_host_devices() -> bool:
+    """True when ``--xla_force_host_platform_device_count`` can yield
+    multiple devices in a fresh subprocess: the flag only works on the
+    CPU backend, so on a real accelerator (even a multi-device one) the
+    subprocess-forcing tests must *skip cleanly* rather than error on
+    their in-subprocess device assertion."""
+    return jax.default_backend() == "cpu"
+
+
 def pytest_collection_modifyitems(config, items):
-    """Auto-skip ``multidevice`` tests on single-device runs (tier-1 safe)."""
+    """Auto-skip ``multidevice`` tests on single-device runs (tier-1 safe).
+
+    Three cases, none of which may error at collection:
+      * >1 device visible — run everything;
+      * 1 device, no forcing requested — skip with the how-to hint;
+      * 1 device *despite* ``XLA_FLAGS`` forcing (the backend ignored the
+        flag, e.g. a non-CPU platform) — skip with the diagnosis instead
+        of letting the tests fail on their device-count asserts.
+    """
     if jax.device_count() > 1:
         return
     if "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""):
-        return  # the user explicitly forced a device count; let tests run
-    skip = pytest.mark.skip(
-        reason="needs >1 jax device; run with "
-               "XLA_FLAGS=--xla_force_host_platform_device_count=N"
-    )
+        skip = pytest.mark.skip(
+            reason="XLA_FLAGS forced a host device count but jax still "
+                   f"reports 1 device (backend: {jax.default_backend()}); "
+                   "host-device forcing is unavailable here"
+        )
+    else:
+        skip = pytest.mark.skip(
+            reason="needs >1 jax device; run with "
+                   "XLA_FLAGS=--xla_force_host_platform_device_count=N"
+        )
     for item in items:
         if "multidevice" in item.keywords:
             item.add_marker(skip)

@@ -1,8 +1,9 @@
-"""MTTKRP / CP-ALS routed through the full strategy stack: cross-strategy
-equivalence (scatter = segment = blocked = pallas = sharded = dense-f64
-oracle) in-process and on 1/2/4 forced host devices, CP-ALS solver
-equivalence across strategies + policy="auto", and the trace-count
-regression for the hoisted jitted mode update."""
+"""MTTKRP / CP-ALS routed through the full strategy stack: shard-local
+Khatri-Rao equivalence, CP-ALS solver equivalence across strategies +
+policy="auto", and the trace-count regression for the hoisted jitted
+mode update.  (The cross-strategy dense-f64 oracle matrix — in-process
+and on 1/2/4 forced host devices — lives in the registry-driven
+tests/test_conformance.py.)"""
 import os
 import subprocess
 import sys
@@ -24,7 +25,6 @@ from repro.core.layout import (
     build_shard_pi_gather,
     shard_blocked_layout,
 )
-from repro.core.phi import ALL_PHI_STRATEGIES
 from repro.core.pi import pi_rows
 from repro.core.sparse_tensor import random_ktensor
 
@@ -52,24 +52,6 @@ def _mode_problem(small_tensor, mode=0, bn=64, br=8):
 # ---------------------------------------------------------------------------
 # Cross-strategy equivalence (single process; sharded runs emulated)
 # ---------------------------------------------------------------------------
-
-
-@pytest.mark.parametrize("strategy", ALL_PHI_STRATEGIES)
-@pytest.mark.parametrize("mode", [0, 1, 2])
-def test_all_mttkrp_strategies_match_dense_reference(small_tensor, strategy,
-                                                     mode):
-    """Every MTTKRP path — unblocked, blocked, Pallas, sharded — pins to
-    the same f64 numerics."""
-    t, kt, mv, kr, base = _mode_problem(small_tensor, mode)
-    ref = dense_mttkrp_reference(mv.rows, mv.sorted_vals, kr, mv.n_rows)
-    layout = None
-    if strategy in ("blocked", "pallas"):
-        layout = base
-    elif strategy == "sharded":
-        layout = shard_blocked_layout(base, min(4, base.n_row_blocks))
-    out = krao_reduce_rows(mv.rows, mv.sorted_vals, kr, mv.n_rows,
-                           strategy=strategy, layout=layout)
-    np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("local_strategy", ["blocked", "pallas"])
@@ -196,58 +178,6 @@ def _run(script: str, devices: int, timeout: int = 560) -> str:
                          capture_output=True, text=True, timeout=timeout)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
-
-
-MTTKRP_EQUIV_SCRIPT = """
-import jax, numpy as np
-from repro.core.sparse_tensor import random_poisson_tensor, sort_mode
-from repro.core.pi import pi_rows
-from repro.core.layout import (build_blocked_layout, shard_blocked_layout,
-                               build_shard_pi_gather)
-from repro.core.phi import krao_reduce_rows
-from repro.core.distributed import make_phi_mesh
-
-n_dev = jax.device_count()
-assert n_dev == {devices}, n_dev
-t, kt = random_poisson_tensor(jax.random.PRNGKey(0), (40, 30, 25),
-                              nnz=1500, rank=4)
-for mode in range(t.ndim):
-    mv = sort_mode(t, mode)
-    kr = pi_rows(mv.sorted_idx, kt.factors, mode)
-    rows = np.asarray(mv.rows)
-    vals = np.asarray(mv.sorted_vals, np.float64)
-    dense = np.zeros((mv.n_rows, 4))
-    np.add.at(dense, rows, vals[:, None] * np.asarray(kr, np.float64))
-
-    base = build_blocked_layout(rows, mv.n_rows, 64, 8)
-    sl = shard_blocked_layout(base, n_dev)
-    pig = build_shard_pi_gather(sl, np.asarray(mv.sorted_idx), mode)
-    mesh = make_phi_mesh(n_dev) if n_dev > 1 else None
-    cases = [
-        ("scatter", None, None, False), ("segment", None, None, False),
-        ("blocked", base, None, False), ("pallas", base, None, False),
-        ("sharded", sl, mesh, False), ("sharded", sl, mesh, True),
-    ]
-    for strategy, layout, m, local_kr in cases:
-        out = krao_reduce_rows(
-            mv.rows, mv.sorted_vals, None if local_kr else kr, mv.n_rows,
-            strategy=strategy, layout=layout, mesh=m,
-            pi_gather=pig if local_kr else None,
-            factors=kt.factors if local_kr else None)
-        np.testing.assert_allclose(
-            np.asarray(out), dense, rtol=3e-5, atol=1e-5,
-            err_msg=f"{{strategy}} local_kr={{local_kr}} mode {{mode}}")
-print("MTTKRP_EQUIV_OK")
-"""
-
-
-@pytest.mark.parametrize("devices", [1, 2, 4])
-def test_mttkrp_cross_strategy_equivalence_forced_devices(devices):
-    """scatter = segment = blocked = pallas = sharded (replicated and
-    shard-local Khatri-Rao) = dense reference on 1/2/4 forced host devices
-    (real mesh + psum whenever devices > 1)."""
-    assert "MTTKRP_EQUIV_OK" in _run(
-        MTTKRP_EQUIV_SCRIPT.format(devices=devices), devices)
 
 
 CPALS_MESH_SCRIPT = """

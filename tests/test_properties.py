@@ -17,6 +17,7 @@ from repro.core.layout import (
     build_blocked_layout,
     build_shard_pi_gather,
     mode_run_stats,
+    owner_partition,
     rebalance_shards,
     round_up,
     shard_blocked_layout,
@@ -339,3 +340,94 @@ def test_collective_stats_parses_groups():
     np.testing.assert_allclose(cs.by_kind_wire["all-reduce"],
                                4096 * 2 * 15 / 16)
     np.testing.assert_allclose(cs.by_kind_wire["all-gather"], 8192 * 0.75)
+
+
+# ---------------------------------------------------------------------------
+# Owner partition (the reduce-scatter epilogue's row ownership)
+# ---------------------------------------------------------------------------
+
+
+@given(sharded_phi_problem())
+@settings(max_examples=25, deadline=None)
+def test_owner_partition_covers_every_row_exactly_once(problem):
+    """Every row of the combine window is owned by exactly one device,
+    owner slices are contiguous and cut-aligned, and the uniform padded
+    slice width covers every owner's real range."""
+    rows, n_rows, rank, n_shards, bn, br = problem
+    base = build_blocked_layout(rows, n_rows, bn, br)
+    n_shards = min(n_shards, base.n_row_blocks)
+    sl = shard_blocked_layout(base, n_shards)
+    op = owner_partition(sl)
+    owners = op.owner_of_rows()
+    # exactly-once cover of the whole buf_rows window
+    assert owners.shape == (sl.buf_rows,)
+    counts = np.bincount(owners, minlength=n_shards)
+    assert int(counts.sum()) == sl.buf_rows
+    np.testing.assert_array_equal(counts, op.row_count)
+    # slices are contiguous, aligned with the shard row cuts
+    np.testing.assert_array_equal(op.row_start,
+                                  sl.rb_start.astype(np.int64) * br)
+    np.testing.assert_array_equal(
+        op.row_start[1:], (op.row_start + op.row_count)[:-1]
+    )
+    assert int(op.row_start[-1] + op.row_count[-1]) == sl.buf_rows
+    # uniform padded width covers every real slice; masks match counts
+    assert np.all(op.row_count <= op.own_rows)
+    masks = op.masks()
+    np.testing.assert_array_equal(masks.sum(axis=1), op.row_count)
+    # every *real* row (< n_rows_pad) is owned by the shard whose row
+    # blocks cover it
+    rb_owner = np.repeat(np.arange(n_shards), sl.rb_count)
+    np.testing.assert_array_equal(
+        owners[: base.n_rows_pad], np.repeat(rb_owner, br)
+    )
+
+
+@given(sharded_phi_problem())
+@settings(max_examples=15, deadline=None)
+def test_owner_partition_consistent_after_rebalance(problem):
+    """Rebuilding the owner partition after rebalance_shards stays
+    consistent with the rebalanced cuts (and its fingerprint changes iff
+    the assignment changed)."""
+    rows, n_rows, rank, n_shards, bn, br = problem
+    base = build_blocked_layout(rows, n_rows, bn, br)
+    n_shards = min(n_shards, base.n_row_blocks)
+    sl = shard_blocked_layout(base, n_shards)
+    op = owner_partition(sl)
+    rb = rebalance_shards(sl)
+    op_rb = owner_partition(rb)
+    np.testing.assert_array_equal(op_rb.row_start,
+                                  rb.rb_start.astype(np.int64) * br)
+    assert int(op_rb.row_start[-1] + op_rb.row_count[-1]) == rb.buf_rows
+    assert op_rb.rb_start == tuple(int(x) for x in rb.rb_start)
+    moved = not np.array_equal(sl.rb_start, rb.rb_start)
+    assert (op.fingerprint != op_rb.fingerprint) == moved
+
+
+@given(sharded_phi_problem())
+@settings(max_examples=10, deadline=None)
+def test_stale_owner_partition_raises_not_misindexes(problem):
+    """A stale owner partition (built from a pre-rebalance assignment)
+    must raise on the reduce-scatter path, never silently mis-index."""
+    from repro.core.distributed import phi_sharded
+    from repro.core.phi import expand_to_shards
+
+    rows, n_rows, rank, n_shards, bn, br = problem
+    if len(rows) == 0:
+        return
+    base = build_blocked_layout(rows, n_rows, bn, br)
+    n_shards = min(n_shards, base.n_row_blocks)
+    sl = shard_blocked_layout(base, n_shards)
+    rb = rebalance_shards(sl)
+    if np.array_equal(sl.rb_start, rb.rb_start):
+        return  # nothing moved: the stale partition is not stale
+    stale = owner_partition(sl)
+    key = jax.random.PRNGKey(int(rows.sum()) % 997)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vals = jax.random.uniform(k1, (len(rows),), minval=0.5, maxval=2.0)
+    pi = jax.random.uniform(k2, (len(rows), rank), minval=0.1, maxval=1.0)
+    b = jax.random.uniform(k3, (n_rows, rank), minval=0.1, maxval=1.0)
+    vals_es, pi_es = expand_to_shards(rb, vals, pi)
+    with pytest.raises(ValueError, match="different shard assignment"):
+        phi_sharded(rb, vals_es, pi_es, b, combine="reduce_scatter",
+                    owner=stale)

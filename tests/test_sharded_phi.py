@@ -1,7 +1,8 @@
-"""Multi-device sharded Phi: layout invariants, cross-strategy equivalence
-(scatter = segment = blocked = pallas = sharded-blocked = dense reference)
-on 1/2/4 forced-host devices, collective-byte accounting vs the analytic
-O(I_n * R) bound, and the warned single-device fallbacks."""
+"""Multi-device sharded Phi: layout invariants, fused-step equivalence,
+collective-byte accounting vs the analytic O(I_n * R) bound, and the
+warned single-device fallbacks.  (Cross-strategy oracle conformance —
+including the reduce-scatter combine — lives in the registry-driven
+tests/test_conformance.py.)"""
 import os
 import subprocess
 import sys
@@ -19,7 +20,7 @@ from repro.core import (
     sort_mode,
 )
 from repro.core.layout import build_blocked_layout, shard_blocked_layout
-from repro.core.phi import ALL_PHI_STRATEGIES, expand_to_shards
+from repro.core.phi import expand_to_shards
 from repro.core.pi import pi_rows
 from repro.core.policy import PhiPolicy
 
@@ -92,24 +93,9 @@ def test_shard_layout_rejects_too_many_shards(small_tensor):
 
 
 # ---------------------------------------------------------------------------
-# Cross-strategy equivalence (single process; sharded runs emulated)
+# Fused-step equivalence (cross-strategy oracle conformance now lives in
+# tests/test_conformance.py — one registry table instead of per-file loops)
 # ---------------------------------------------------------------------------
-
-
-@pytest.mark.parametrize("strategy", ALL_PHI_STRATEGIES)
-@pytest.mark.parametrize("mode", [0, 1, 2])
-def test_all_strategies_match_dense_reference(small_tensor, strategy, mode):
-    """Every Phi path — current and sharded — pins to the same numerics."""
-    mv, pi, b, base = _mode_problem(small_tensor, mode)
-    ref = dense_phi_reference(mv.rows, mv.sorted_vals, pi, b, mv.n_rows)
-    layout = None
-    if strategy in ("blocked", "pallas"):
-        layout = base
-    elif strategy == "sharded":
-        layout = shard_blocked_layout(base, min(4, base.n_row_blocks))
-    out = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
-                        strategy=strategy, layout=layout)
-    np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("n_shards", [1, 2, 3, 4])
@@ -246,62 +232,6 @@ def _run(script: str, devices: int, timeout: int = 560) -> str:
                          capture_output=True, text=True, timeout=timeout)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
-
-
-EQUIV_SCRIPT = """
-import jax, numpy as np
-from repro.core.sparse_tensor import random_poisson_tensor, sort_mode
-from repro.core.pi import pi_rows
-from repro.core.layout import build_blocked_layout, shard_blocked_layout
-from repro.core.phi import phi_from_rows, phi_mu_step, expand_to_shards
-from repro.core.distributed import make_phi_mesh
-
-n_dev = jax.device_count()
-assert n_dev == {devices}, n_dev
-t, kt = random_poisson_tensor(jax.random.PRNGKey(0), (40, 30, 25),
-                              nnz=1500, rank=4)
-for mode in range(t.ndim):
-    mv = sort_mode(t, mode)
-    pi = pi_rows(mv.sorted_idx, kt.factors, mode)
-    b = kt.factors[mode] * kt.lam[None, :]
-    rows = np.asarray(mv.rows)
-    vals = np.asarray(mv.sorted_vals, np.float64)
-    pi64 = np.asarray(pi, np.float64)
-    b64 = np.asarray(b, np.float64)
-    s = np.sum(b64[rows] * pi64, axis=1)
-    w = vals / np.maximum(s, 1e-10)
-    dense = np.zeros((mv.n_rows, 4))
-    np.add.at(dense, rows, w[:, None] * pi64)
-
-    base = build_blocked_layout(rows, mv.n_rows, 64, 8)
-    sl = shard_blocked_layout(base, n_dev)
-    mesh = make_phi_mesh(n_dev) if n_dev > 1 else None
-    for strategy, layout, m in [
-        ("scatter", None, None), ("segment", None, None),
-        ("blocked", base, None), ("pallas", base, None),
-        ("sharded", sl, mesh),
-    ]:
-        out = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
-                            strategy=strategy, layout=layout, mesh=m)
-        np.testing.assert_allclose(np.asarray(out), dense,
-                                   rtol=3e-5, atol=1e-5,
-                                   err_msg=f"{{strategy}} mode {{mode}}")
-        bs, vs = phi_mu_step(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
-                             strategy=strategy, layout=layout, mesh=m)
-        viol = np.max(np.abs(np.minimum(b64, 1.0 - dense)))
-        bref = b64 * dense if viol > 1e-4 else b64
-        np.testing.assert_allclose(float(vs), viol, rtol=3e-5, atol=1e-5)
-        np.testing.assert_allclose(np.asarray(bs), bref, rtol=3e-5, atol=1e-5,
-                                   err_msg=f"fused {{strategy}} mode {{mode}}")
-print("EQUIV_OK")
-"""
-
-
-@pytest.mark.parametrize("devices", [1, 2, 4])
-def test_cross_strategy_equivalence_forced_devices(devices):
-    """scatter = segment = blocked = pallas = sharded = dense reference on
-    1/2/4 forced host devices (real mesh + psum whenever devices > 1)."""
-    assert "EQUIV_OK" in _run(EQUIV_SCRIPT.format(devices=devices), devices)
 
 
 HLO_SCRIPT = """
