@@ -1,0 +1,68 @@
+"""Numerical-guard overhead on the CP-APR solve (PR 6 receipt).
+
+The guard is a tiny jitted finite/positivity reduction dispatched
+*outside* each mode update's compiled program, whose boolean stays on
+device until the solver's single sweep-end read — so its cost should be
+noise.  (Fusing the guard into the update jit instead measurably
+perturbed XLA's CPU schedule; see ``_jit_guard_ok`` in ``cpapr``.)
+
+This bench times short warm CP-APR solves with ``guard=True`` vs
+``guard=False`` on the quick tier, *interleaving* the guard/no-guard
+runs pairwise so machine drift cancels, and reports the median-of-pairs
+``overhead_frac = guard_s / no_guard_s - 1`` per tensor plus the
+geomean; the acceptance bar is <= 2% on the quick tier.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.core import CPAPRConfig, cpapr_mu
+
+from .common import QUICK_TENSORS, RANK, Reporter, geomean, get_tensor
+
+SWEEPS = 4
+REPEATS = 7
+
+
+def _cfg(guard: bool) -> CPAPRConfig:
+    return CPAPRConfig(rank=RANK, max_outer=SWEEPS, tol=0.0, guard=guard,
+                       strategy="segment", track_loglik=False)
+
+
+def _paired_seconds(t) -> "tuple[float, float]":
+    """Median (guard_s, no_guard_s) over interleaved guard/no-guard pairs."""
+    cfg_g, cfg_n = _cfg(True), _cfg(False)
+    # warm: first solves pay the per-mode jit traces
+    cpapr_mu(t, RANK, config=cfg_g)
+    cpapr_mu(t, RANK, config=cfg_n)
+    gs, ns = [], []
+    for _ in range(REPEATS):
+        # no extra sync needed: the solver host-syncs on the KKT scalar
+        t0 = time.perf_counter()
+        cpapr_mu(t, RANK, config=cfg_g)
+        gs.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        cpapr_mu(t, RANK, config=cfg_n)
+        ns.append(time.perf_counter() - t0)
+    return statistics.median(gs), statistics.median(ns)
+
+
+def run(tensors=QUICK_TENSORS):
+    rep = Reporter("guard")
+    ratios = []
+    for name in tensors:
+        t, _ = get_tensor(name)
+        guard_s, no_guard_s = _paired_seconds(t)
+        frac = guard_s / no_guard_s - 1.0
+        ratios.append(guard_s / no_guard_s)
+        rep.row(tensor=name, sweeps=SWEEPS,
+                guard_s=round(guard_s, 6), no_guard_s=round(no_guard_s, 6),
+                overhead_frac=round(frac, 4))
+    rep.row(summary="geomean",
+            guard_overhead_frac=round(geomean(ratios) - 1.0, 4))
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -32,6 +32,7 @@ def _load_all():
     from . import (
         bench_breakdown,
         bench_fused,
+        bench_guard,
         bench_mttkrp,
         bench_modes,
         bench_policy,
@@ -50,6 +51,7 @@ def _load_all():
         "fused": bench_fused.run,          # PR 1: fused MU fast path
         "sharded": bench_sharded.run,      # PR 2: multi-device sharded Phi
         "rebalance": bench_rebalance.run,  # PR 4: rebalancing + sharded Pi
+        "guard": bench_guard.run,          # PR 6: numerical-guard overhead
         "modes": bench_modes.run,          # Exp. 6 / Figs. 14-15
         "stream": bench_stream.run,        # Exp. 7 / Figs. 16-17
         "mttkrp": bench_mttkrp.run,        # Exp. 8 / Figs. 18-19
@@ -110,10 +112,15 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
     ``psum_wire_bytes`` per device per inner iteration, and
     ``rs_owned_bytes`` (the owned O(I_n*R/S) slice each device keeps) vs
     ``combine_bytes`` (the full window the psum path replicates).
+    Schema 6 adds the ``guard`` section (see ``bench_guard``): warm
+    CP-APR solve seconds with the PR-6 numerical guard on vs off and the
+    per-tensor ``overhead_frac`` (guard_s/no_guard_s - 1), with the
+    geomean surfaced as ``summary.guard_overhead_frac`` — the acceptance
+    bar is <= 2% on the quick tier.
     """
-    out: dict = {"schema": 5, "generated_unix": time.time(),
+    out: dict = {"schema": 6, "generated_unix": time.time(),
                  "breakdown": {}, "policy": {}, "fused": {}, "sharded": {},
-                 "rebalance": {}, "summary": {}}
+                 "rebalance": {}, "guard": {}, "summary": {}}
     found = False
 
     rows = _load_rows("breakdown")
@@ -201,6 +208,17 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
                           "pi_wire_ratio"):
                     if k in r:
                         out["summary"][k] = r[k]
+
+    rows = _load_rows("guard")
+    if rows:
+        found = True
+        keep = ("sweeps", "guard_s", "no_guard_s", "overhead_frac")
+        for r in rows:
+            if "tensor" in r:
+                out["guard"][r["tensor"]] = {k: r[k] for k in keep if k in r}
+            elif r.get("summary") == "geomean":
+                out["summary"]["guard_overhead_frac"] = \
+                    r["guard_overhead_frac"]
 
     if not found:
         return None

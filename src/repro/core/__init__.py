@@ -9,6 +9,11 @@ Public API:
   PhiPolicy / heuristic_policy       — the parallel policy (Exps. 3-6);
                                        CPAPRConfig(policy="auto") engages the
                                        persistent autotuner (repro.perf.autotune)
+  RecoveryEvent / save_checkpoint /
+  load_checkpoint / classify_failure — the fault-tolerant runtime
+                                       (repro.core.resilience): numerical
+                                       guards, the degradation ladder, and
+                                       sweep checkpoint/resume
 """
 from .cpals import cp_als, fit_score, mttkrp, mttkrp_mode
 from .cpapr import CPAPRConfig, CPAPRResult, cpapr_mu, kkt_violation, poisson_loglik
@@ -40,6 +45,17 @@ from .phi import (
     phi_mu_step,
 )
 from .pi import pi_rows
+from .resilience import (
+    CheckpointError,
+    RecoveryEvent,
+    ShardAssignmentError,
+    classify_failure,
+    guard_ok,
+    load_checkpoint,
+    save_checkpoint,
+    state_ok,
+    validate_decomposition_inputs,
+)
 from .policy import (
     SEARCH_ERRORS,
     PhiPolicy,

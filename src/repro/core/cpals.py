@@ -21,6 +21,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from . import resilience
 from .phi import krao_reduce_rows
 from .pi import pi_rows
 from .sparse_tensor import KTensor, ModeView, SparseTensor, random_ktensor, sort_mode
@@ -143,6 +144,8 @@ def cp_als(
     shard_pi: bool = True,
     mode_views: Sequence[ModeView] | None = None,
     combine: str = "auto",
+    validate: bool = True,
+    recoveries: "list | None" = None,
 ) -> tuple:
     """Plain CP-ALS on a sparse tensor (least-squares, not Poisson).
 
@@ -158,6 +161,12 @@ def cp_als(
     shard touches.  ``combine`` picks the sharded combine flavour
     (``"auto"`` resolves to the reduce-scatter epilogue on sharded
     modes, mirroring CP-APR; bitwise-identical results).
+
+    Runtime kernel/compile/shard failures take the same degradation
+    ladder as ``cpapr_mu``: the failing mode falls back to the streaming
+    ``segment``/psum baseline and the sweep is retried instead of
+    crashing.  Pass a list as ``recoveries`` to collect the
+    :class:`repro.core.resilience.RecoveryEvent` records.
     """
     from .cpapr import (  # deferred: cpapr imports phi
         effective_mode_combine,
@@ -165,6 +174,8 @@ def cp_als(
         resolve_mode_policies,
     )
 
+    if validate:
+        resilience.validate_decomposition_inputs(t, rank, where="cp_als")
     if init is None:
         key = key if key is not None else jax.random.PRNGKey(0)
         init = random_ktensor(key, t.shape, rank)
@@ -191,11 +202,44 @@ def cp_als(
         for n in range(t.ndim)
     ]
 
+    def _demote_mode(n: int, it: int, exc: BaseException) -> None:
+        """Compact degradation ladder: any classified runtime failure
+        drops the mode straight to the always-available streaming
+        segment/psum baseline (CP-ALS sweeps are cheap relative to
+        re-jit, so the single-rung ladder keeps the solve moving)."""
+        kind = resilience.classify_failure(exc)
+        if kind is None or strategies[n] == "segment":
+            raise exc
+        detail = {
+            "error": f"{type(exc).__name__}: {exc}"[:200],
+            "action": f"{strategies[n]}->segment",
+        }
+        strategies[n], layouts[n], locals_[n] = "segment", None, "blocked"
+        pigs[n] = None
+        updates[n] = _make_als_mode_update(
+            mvs[n], rank, "segment", None, "blocked", None, None,
+            combine="psum",
+        )
+        if recoveries is not None:
+            recoveries.append(resilience.RecoveryEvent(
+                f"demote_{kind}", outer=it + 1, mode=n, detail=detail,
+            ))
+
     norm_x = jnp.sqrt(jnp.sum(t.values**2))
     fits = []
-    for _ in range(n_iters):
+    for it in range(n_iters):
         for n in range(t.ndim):
-            factors[n] = updates[n](tuple(factors))
+            try:
+                if resilience.have_hooks():
+                    resilience.fire_mode_hooks({
+                        "outer": it + 1, "mode": n,
+                        "strategy": strategies[n], "local": locals_[n],
+                        "combine": combine, "n_shards": 1,
+                    })
+                factors[n] = updates[n](tuple(factors))
+            except Exception as e:
+                _demote_mode(n, it, e)
+                factors[n] = updates[n](tuple(factors))
         fits.append(float(fit_score(t, factors, norm_x)))
     lam = jnp.ones((rank,), factors[0].dtype)
     kt = KTensor(lam=lam, factors=tuple(factors)).normalize()

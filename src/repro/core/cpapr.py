@@ -35,6 +35,7 @@ Strategy + blocking policy is the paper's "parallel policy".  It can be:
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from functools import partial
 from typing import Sequence
@@ -43,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import resilience
 from .layout import (
     BlockedLayout,
     ShardedBlockedLayout,
@@ -65,6 +67,7 @@ from .phi import (
 )
 from .pi import pi_rows
 from .policy import PhiPolicy, default_policy
+from .resilience import STRATEGY_DEMOTION, RecoveryEvent
 from .sparse_tensor import KTensor, ModeView, SparseTensor, random_ktensor, sort_mode
 
 __all__ = ["CPAPRConfig", "CPAPRResult", "cpapr_mu", "poisson_loglik", "kkt_violation"]
@@ -114,6 +117,32 @@ class CPAPRConfig:
     # gather overlaps the next mode's Phi prologue), or "auto" (default:
     # reduce_scatter whenever the mode is actually sharded).
     combine: str = "auto"
+    # Reject NaN/negative values, out-of-range indices, and rank <= 0 at
+    # the solve boundary (one host pass over the nonzeros).
+    validate: bool = True
+    # Numerical guard: a fused finite/positivity reduction on (A_n', lam)
+    # inside each mode update's jit (no host sync beyond the one the
+    # solver already does on the KKT scalar).  On violation the last-good
+    # state is restored and the mode retried — once as-is (transient
+    # fault), then with the scooch kappa escalated 10x per further retry
+    # (the kappa ladder) — before giving up after guard_retries.
+    guard: bool = True
+    guard_retries: int = 3
+    # Degradation ladder: runtime failures classified by
+    # repro.core.resilience.classify_failure demote the failing mode
+    # (pallas->blocked->segment, combine reduce_scatter->psum, shard
+    # halving + rebalance on OOM), each retried after bounded exponential
+    # backoff (demote_backoff * 2^attempt, capped), at most max_demotions
+    # rungs per mode invocation.
+    demote_backoff: float = 0.05
+    max_demotions: int = 4
+    # Sweep-level checkpointing: every checkpoint_every outer sweeps the
+    # solver state (factors, lam, outer index, histories, per-mode
+    # policies + rebalanced shard cuts) is written atomically to
+    # checkpoint_path; cpapr_mu(resume_from=...) continues bitwise-
+    # identically to an uninterrupted solve.  0 / None disables.
+    checkpoint_every: int = 0
+    checkpoint_path: "str | None" = None
 
 
 @dataclasses.dataclass
@@ -129,6 +158,10 @@ class CPAPRResult:
     # per rebalance event: {"outer", "mode", "rb_start_old", "rb_start_new",
     # "imbalance_old", "imbalance_new"} (nnz max/mean over shards)
     rebalances: list | None = None
+    # RecoveryEvents (numerical-guard restores, degradation-ladder
+    # demotions, checkpoint quarantine/resume) — every fault the solver
+    # absorbed instead of crashing, in order.
+    recoveries: list | None = None
 
 
 def mode_pi_gather(
@@ -224,6 +257,14 @@ def effective_mode_combine(combine: str, strategy: str, layout,
     return eff
 
 
+# The numerical guard runs as its own jitted dispatch, deliberately kept
+# out of the per-mode update programs: fusing the guard reductions into
+# the update jit measurably perturbed XLA's CPU schedule (~10% on the
+# quick tier), while a separate async dispatch whose boolean is only
+# read at sweep end is noise-level.
+_jit_guard_ok = jax.jit(resilience.guard_ok)
+
+
 def _make_owner_mode_update(
     mv: ModeView,
     cfg: CPAPRConfig,
@@ -303,7 +344,8 @@ def _make_owner_mode_update(
         b = owner_unstack(opart, b_own)
         lam_new = jnp.sum(b, axis=0)
         safe = jnp.maximum(lam_new, cfg.eps)
-        return b / safe, lam_new
+        a_new = b / safe
+        return a_new, lam_new
 
     return update, gather
 
@@ -572,6 +614,47 @@ def _resolve_mode_policies(
     )
 
 
+def _ckpt_fingerprint(t: SparseTensor, cfg: CPAPRConfig) -> str:
+    """Problem/config fingerprint a checkpoint must match to be resumed
+    (the fields that change the iteration trajectory)."""
+    return resilience.config_fingerprint({
+        "shape": [int(s) for s in t.shape],
+        "nnz": int(np.asarray(t.values).shape[0]),
+        "rank": int(cfg.rank),
+        "max_inner": int(cfg.max_inner),
+        "tol": float(cfg.tol),
+        "eps": float(cfg.eps),
+        "kappa": float(cfg.kappa),
+        "kappa_tol": float(cfg.kappa_tol),
+        "strategy": cfg.strategy,
+        "combine": cfg.combine,
+        "shard_pi": bool(cfg.shard_pi),
+    })
+
+
+def _restore_mode_layouts(mvs, strategies, policies, mode_shards, rb_bounds):
+    """Rebuild per-mode layouts exactly as checkpointed: tuned block
+    sizes from the saved policies, rebalanced shard assignments from the
+    saved row-block cuts (``shard_blocked_layout(bounds=...)``) — the
+    resumed schedule is identical to the killed run's, so the solve
+    continues bitwise."""
+    layouts: list = [None] * len(mvs)
+    for n, mv in enumerate(mvs):
+        pol = policies[n]
+        if strategies[n] == "sharded":
+            base = build_blocked_layout(
+                np.asarray(mv.rows), mv.n_rows, pol.block_nnz, pol.block_rows
+            )
+            layouts[n] = shard_blocked_layout(
+                base, mode_shards[n], bounds=rb_bounds.get(n)
+            )
+        elif strategies[n] in ("blocked", "pallas") and pol is not None:
+            layouts[n] = build_blocked_layout(
+                np.asarray(mv.rows), mv.n_rows, pol.block_nnz, pol.block_rows
+            )
+    return layouts
+
+
 def cpapr_mu(
     t: SparseTensor,
     rank: int,
@@ -579,10 +662,20 @@ def cpapr_mu(
     init: KTensor | None = None,
     config: CPAPRConfig | None = None,
     mode_views: Sequence[ModeView] | None = None,
+    resume_from: str | None = None,
 ) -> CPAPRResult:
-    """Run CP-APR MU.  Returns the fitted KTensor + convergence stats."""
+    """Run CP-APR MU.  Returns the fitted KTensor + convergence stats.
+
+    ``resume_from`` continues a checkpointed solve (see
+    ``CPAPRConfig.checkpoint_every`` / ``checkpoint_path``) bitwise-
+    identically to the uninterrupted run; a corrupt or mismatched
+    checkpoint is quarantined (recorded in ``result.recoveries``) and the
+    solve starts fresh instead of dying.
+    """
     cfg = config or CPAPRConfig(rank=rank)
     assert cfg.rank == rank
+    if cfg.validate:
+        resilience.validate_decomposition_inputs(t, rank, where="cpapr_mu")
     n_modes = t.ndim
     if init is None:
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -594,18 +687,215 @@ def cpapr_mu(
     mvs = list(mode_views) if mode_views is not None else [
         sort_mode(t, n) for n in range(n_modes)
     ]
-    strategies, layouts, policies, locals_ = _resolve_mode_policies(
-        cfg, mvs, factors, lam
-    )
+
+    recoveries: list = []
+    fp = _ckpt_fingerprint(t, cfg)
+    resume_state = None
+    if resume_from is not None:
+        try:
+            resume_state = resilience.load_checkpoint(resume_from)
+            if resume_state.get("fingerprint") != fp:
+                raise resilience.CheckpointError(
+                    f"{resume_from}: checkpoint fingerprint "
+                    f"{resume_state.get('fingerprint')!r} does not match "
+                    f"this problem/config ({fp!r})"
+                )
+        except resilience.CheckpointError as e:
+            qpath = resilience.quarantine_checkpoint(resume_from)
+            recoveries.append(RecoveryEvent(
+                "checkpoint_corrupt", outer=0,
+                detail={"error": str(e), "quarantined": qpath},
+            ))
+            resume_state = None
+
+    start_outer = 0
+    kkt_hist: list = []
+    ll_hist: list = []
+    inner_hist: list = []
+    rebalances: list = []
+    if resume_state is None:
+        strategies, layouts, policies, locals_ = _resolve_mode_policies(
+            cfg, mvs, factors, lam
+        )
+        # per-mode effective config: the kappa ladder and the combine
+        # demotion mutate these without touching the caller's cfg
+        mode_cfgs = [cfg] * n_modes
+    else:
+        start_outer = int(resume_state["outer"])
+        factors = [jnp.asarray(f) for f in resume_state["factors"]]
+        lam = jnp.asarray(resume_state["lam"])
+        strategies = list(resume_state["strategies"])
+        locals_ = list(resume_state["locals"])
+        policies = [PhiPolicy(**p) if p else None
+                    for p in resume_state["policies"]]
+        rb_bounds = {int(k): v
+                     for k, v in resume_state.get("rb_bounds", {}).items()}
+        layouts = _restore_mode_layouts(
+            mvs, strategies, policies, list(resume_state["mode_shards"]),
+            rb_bounds,
+        )
+        # restore the per-mode kappa ladder + combine demotions, so the
+        # resumed trajectory matches the killed run even mid-recovery
+        mode_cfgs = [
+            dataclasses.replace(cfg, kappa=kap, combine=comb)
+            for kap, comb in zip(resume_state["kappas"],
+                                 resume_state["combines"])
+        ]
+        kkt_hist = list(resume_state["kkt_history"])
+        ll_hist = list(resume_state["loglik_history"])
+        inner_hist = list(resume_state["inner_iters"])
+        rebalances = list(resume_state.get("rebalances") or [])
+        recoveries.extend(RecoveryEvent(**r)
+                          for r in resume_state.get("recoveries", []))
+        recoveries.append(RecoveryEvent(
+            "resume", outer=start_outer, detail={"path": resume_from},
+        ))
 
     pigs = [mode_pi_gather(mvs[n], layouts[n], cfg.shard_pi)
             for n in range(n_modes)]
     updates, gathers = [], []
     for n in range(n_modes):
-        upd, gat = _make_mode_update(mvs[n], cfg, strategies[n], layouts[n],
-                                     locals_[n], pig=pigs[n])
+        upd, gat = _make_mode_update(mvs[n], mode_cfgs[n], strategies[n],
+                                     layouts[n], locals_[n], pig=pigs[n])
         updates.append(upd)
         gathers.append(gat)
+
+    def _rebuild(n: int) -> None:
+        """Re-derive mode ``n``'s gather maps + jitted update from its
+        current (layout, strategy, per-mode config)."""
+        pigs[n] = mode_pi_gather(mvs[n], layouts[n], cfg.shard_pi)
+        updates[n], gathers[n] = _make_mode_update(
+            mvs[n], mode_cfgs[n], strategies[n], layouts[n], locals_[n],
+            pig=pigs[n],
+        )
+
+    def _ctx(outer: int, n: int) -> dict:
+        sl = layouts[n]
+        return {
+            "outer": outer,
+            "mode": n,
+            "strategy": strategies[n],
+            "local": locals_[n],
+            "combine": mode_cfgs[n].combine,
+            "n_shards": int(sl.n_shards)
+            if isinstance(sl, ShardedBlockedLayout) else 1,
+        }
+
+    def _invoke(outer: int, n: int, factors, lam):
+        """One raw mode-update attempt (fault hooks + update + gather)."""
+        ctx = _ctx(outer, n)
+        if resilience.have_hooks():
+            resilience.fire_mode_hooks(ctx)
+        if gathers[n] is None:
+            a_new, lam_new, viol, n_inner = updates[n](tuple(factors), lam)
+        else:
+            # Owner-partitioned mode: the inner loop returns the
+            # owner-stacked carry; the factor-row gather is its own
+            # async dispatch, so it overlaps the host-side dispatch
+            # (and factor-independent prologue) of the next mode.
+            b_own, viol, n_inner = updates[n](tuple(factors), lam)
+            a_new, lam_new = gathers[n](b_own)
+        if resilience.have_post_update_hooks():
+            a_new, lam_new = resilience.apply_post_update_hooks(
+                ctx, a_new, lam_new
+            )
+        ok = None
+        if cfg.guard:
+            # The guard is its own tiny async dispatch *outside* the
+            # update program (embedding it in the update's jit measurably
+            # perturbs XLA's schedule): the compiled update is identical
+            # with the guard on or off, the boolean stays on device until
+            # the sweep-end read, and — running after the hooks — it also
+            # sees injected host-level corruption.
+            ok = _jit_guard_ok(jnp.asarray(a_new), jnp.asarray(lam_new))
+        return a_new, lam_new, viol, n_inner, ok
+
+    def _demote(n: int, kind: str, exc: BaseException) -> "dict | None":
+        """Take one degradation-ladder rung for mode ``n``; returns the
+        recovery detail, or None when the ladder is exhausted (the error
+        then propagates)."""
+        detail = {"error": f"{type(exc).__name__}: {exc}"[:200]}
+        if kind in ("kernel", "policy"):
+            if strategies[n] == "sharded":
+                if locals_[n] == "pallas":
+                    locals_[n] = "blocked"
+                    detail["action"] = "local pallas->blocked"
+                else:
+                    # the shard-local blocked kernel failed too: leave
+                    # the sharded family for the streaming segment path
+                    strategies[n], layouts[n] = "segment", None
+                    locals_[n] = "blocked"
+                    detail["action"] = "sharded->segment"
+            elif strategies[n] in STRATEGY_DEMOTION:
+                new = STRATEGY_DEMOTION[strategies[n]]
+                detail["action"] = f"{strategies[n]}->{new}"
+                strategies[n] = new
+                if new not in ("blocked", "pallas"):
+                    layouts[n] = None
+            elif kind == "policy" and strategies[n] != "segment":
+                # e.g. a poisoned autotune entry naming a strategy that
+                # does not exist: fall to the always-available baseline
+                detail["action"] = f"{strategies[n]}->segment"
+                strategies[n], layouts[n] = "segment", None
+            else:
+                return None
+        elif kind == "fingerprint":
+            if strategies[n] != "sharded" or mode_cfgs[n].combine == "psum":
+                return None
+            detail["action"] = f"combine {mode_cfgs[n].combine}->psum"
+            mode_cfgs[n] = dataclasses.replace(mode_cfgs[n], combine="psum")
+        elif kind == "oom":
+            sl = layouts[n]
+            if not isinstance(sl, ShardedBlockedLayout):
+                return None
+            new_s = sl.n_shards // 2
+            if new_s <= 1:
+                local = locals_[n] if locals_[n] in ("blocked", "pallas") \
+                    else "blocked"
+                detail["action"] = (
+                    f"sharded@{sl.n_shards}->single-device {local}"
+                )
+                strategies[n], layouts[n] = local, sl.base
+            else:
+                detail["action"] = f"shards {sl.n_shards}->{new_s}"
+                layouts[n] = rebalance_shards(
+                    shard_blocked_layout(sl.base, new_s)
+                )
+                if mode_cfgs[n].mesh is not None:
+                    from .distributed import make_phi_mesh  # deferred
+
+                    mode_cfgs[n] = dataclasses.replace(
+                        mode_cfgs[n], mesh=make_phi_mesh(new_s)
+                    )
+        else:
+            return None
+        return detail
+
+    def _run_mode(outer: int, n: int, factors, lam):
+        """Mode update under the degradation ladder: classified runtime
+        failures demote one rung and retry with bounded backoff."""
+        for attempt in range(cfg.max_demotions + 1):
+            try:
+                return _invoke(outer, n, factors, lam)
+            except Exception as e:
+                kind = resilience.classify_failure(e)
+                if kind is None or attempt >= cfg.max_demotions:
+                    raise
+                detail = _demote(n, kind, e)
+                if detail is None:
+                    raise
+                recoveries.append(RecoveryEvent(
+                    f"demote_{kind}", outer=outer, mode=n, attempt=attempt,
+                    detail=detail,
+                ))
+                resilience.backoff_sleep(attempt, cfg.demote_backoff)
+                _rebuild(n)
+        raise AssertionError("unreachable")  # pragma: no cover
+
+    def _escalate_kappa(n: int) -> None:
+        mode_cfgs[n] = dataclasses.replace(
+            mode_cfgs[n], kappa=min(mode_cfgs[n].kappa * 10.0, 1.0)
+        )
 
     def _nnz_imbalance(sl: ShardedBlockedLayout) -> float:
         mean = float(sl.shard_nnz.mean())
@@ -656,39 +946,135 @@ def cpapr_mu(
                 "imbalance_new": round(_nnz_imbalance(new_sl), 4),
             })
             layouts[n] = new_sl
-            pigs[n] = mode_pi_gather(mvs[n], new_sl, cfg.shard_pi)
-            updates[n], gathers[n] = _make_mode_update(
-                mvs[n], cfg, strategies[n], new_sl, locals_[n], pig=pigs[n]
-            )
+            _rebuild(n)
 
-    kkt_hist, ll_hist, inner_hist = [], [], []
-    rebalances: list = []
+    def _write_checkpoint(n_outer: int) -> None:
+        rb_bounds: dict = {}
+        shards = []
+        for n in range(n_modes):
+            sl = layouts[n]
+            if isinstance(sl, ShardedBlockedLayout):
+                rb_bounds[str(n)] = (
+                    [int(x) for x in sl.rb_start]
+                    + [int(sl.base.n_row_blocks)]
+                )
+                shards.append(int(sl.n_shards))
+            else:
+                shards.append(1)
+        resilience.save_checkpoint(cfg.checkpoint_path, {
+            "fingerprint": fp,
+            "outer": int(n_outer),
+            "kkt_history": kkt_hist,
+            "loglik_history": ll_hist,
+            "inner_iters": inner_hist,
+            "rebalances": rebalances,
+            "recoveries": [dataclasses.asdict(r) for r in recoveries],
+            "policies": [dataclasses.asdict(p) if p is not None else None
+                         for p in policies],
+            "strategies": list(strategies),
+            "locals": list(locals_),
+            "combines": [mc.combine for mc in mode_cfgs],
+            "kappas": [float(mc.kappa) for mc in mode_cfgs],
+            "mode_shards": shards,
+            "rb_bounds": rb_bounds,
+            "lam": lam,
+            "factors": factors,
+        })
+
     converged = False
     t0 = time.perf_counter()
-    n_outer = 0
-    for k in range(cfg.max_outer):
+    n_outer = start_outer
+    k = start_outer
+    while k < cfg.max_outer:
         n_outer = k + 1
-        worst = 0.0
-        inner_total = 0
-        for n in range(n_modes):
-            if gathers[n] is None:
-                a_new, lam, viol, n_inner = updates[n](tuple(factors), lam)
+        # sweep-start snapshot: the guards restore it (and redo the whole
+        # sweep) when any mode's state went numerically bad — mode
+        # updates are deterministic in (factors, lam), so a redone sweep
+        # is bitwise the sweep an uninterrupted run would have produced
+        snap_factors, snap_lam = list(factors), lam
+        ll = None
+        for sweep_attempt in range(cfg.guard_retries + 1):
+            worst = 0.0
+            inner_total = 0
+            # per-mode guard booleans stay ON DEVICE during the sweep:
+            # syncing them per mode would serialize the async factor
+            # epilogues / owner gathers the solver pipelines, so they are
+            # read once at sweep end when those buffers are complete
+            # anyway (the read is then ~free)
+            ok_flags: list = [None] * n_modes
+            bad: list = []
+            for n in range(n_modes):
+                a_new, lam_new, viol, n_inner, ok = _run_mode(
+                    n_outer, n, factors, lam
+                )
+                violf = float(viol)
+                if cfg.guard and not math.isfinite(violf):
+                    # poisoned KKT scalar: no point finishing the sweep,
+                    # the remaining modes would consume NaN factors.
+                    # Blame an earlier mode whose (complete) guard flag
+                    # tripped — its bad factors poisoned this one.
+                    bad = [m for m in range(n)
+                           if ok_flags[m] is not None
+                           and not bool(ok_flags[m])] or [n]
+                    break
+                factors[n] = a_new
+                lam = lam_new
+                ok_flags[n] = ok
+                worst = max(worst, violf)
+                inner_total += int(n_inner)
+            if cfg.guard and not bad:
+                bad = [n for n in range(n_modes)
+                       if ok_flags[n] is not None and not bool(ok_flags[n])]
+            if not bad:
+                if cfg.track_loglik:
+                    ll = float(poisson_loglik(
+                        t, KTensor(lam, tuple(factors)), cfg.eps
+                    ))
+                if not cfg.guard or ll is None or math.isfinite(ll):
+                    break
+                # whole-sweep guard: per-mode states passed but the joint
+                # model mass went non-finite — escalate every mode
+                recoveries.append(RecoveryEvent(
+                    "loglik_guard", outer=n_outer, attempt=sweep_attempt,
+                    detail={"loglik": ll},
+                ))
+                bad = list(range(n_modes))
             else:
-                # Owner-partitioned mode: the inner loop returns the
-                # owner-stacked carry; the factor-row gather is its own
-                # async dispatch, so it overlaps the host-side dispatch
-                # (and factor-independent prologue) of the next mode.
-                b_own, viol, n_inner = updates[n](tuple(factors), lam)
-                a_new, lam = gathers[n](b_own)
-            factors[n] = a_new
-            worst = max(worst, float(viol))
-            inner_total += int(n_inner)
+                for n in bad:
+                    recoveries.append(RecoveryEvent(
+                        "nan_guard", outer=n_outer, mode=n,
+                        attempt=sweep_attempt,
+                        detail={"kappa": float(mode_cfgs[n].kappa)},
+                    ))
+            # restore last-good state and redo the sweep.  The first
+            # retry reruns as-is (transient fault); later retries climb
+            # the kappa ladder on the offending modes.
+            factors[:] = snap_factors
+            lam = snap_lam
+            if sweep_attempt >= 1:
+                for n in bad:
+                    _escalate_kappa(n)
+                    _rebuild(n)
+        else:
+            raise FloatingPointError(
+                f"CP-APR sweep {n_outer}: non-finite or negative state "
+                f"persisted through {cfg.guard_retries} guarded sweep "
+                f"retries (mode(s) {bad})"
+            )
+        if cfg.guard and sweep_attempt > 0:
+            # recovery done: drop any escalated scooch back to the
+            # configured kappa so the lift does not keep distorting
+            # every subsequent sweep
+            for n in range(n_modes):
+                if mode_cfgs[n].kappa != cfg.kappa:
+                    mode_cfgs[n] = dataclasses.replace(
+                        mode_cfgs[n], kappa=cfg.kappa
+                    )
+                    _rebuild(n)
         kkt_hist.append(worst)
         inner_hist.append(inner_total)
-        if cfg.track_loglik:
-            ll_hist.append(
-                float(poisson_loglik(t, KTensor(lam, tuple(factors)), cfg.eps))
-            )
+        if ll is not None:
+            ll_hist.append(ll)
         if worst <= cfg.tol:
             converged = True
             break
@@ -698,6 +1084,13 @@ def cpapr_mu(
             and n_outer < cfg.max_outer
         ):
             _rebalance_modes(n_outer, rebalances)
+        if (
+            cfg.checkpoint_every > 0
+            and cfg.checkpoint_path
+            and n_outer % cfg.checkpoint_every == 0
+        ):
+            _write_checkpoint(n_outer)
+        k += 1
     seconds = time.perf_counter() - t0
     return CPAPRResult(
         ktensor=KTensor(lam=lam, factors=tuple(factors)),
@@ -709,4 +1102,5 @@ def cpapr_mu(
         seconds=seconds,
         policies=policies if cfg.policy == "auto" else None,
         rebalances=rebalances or None,
+        recoveries=recoveries or None,
     )

@@ -35,6 +35,7 @@ from .layout import (
     owner_partition,
 )
 from .pi import pi_rows_local
+from .resilience import ShardAssignmentError
 from .sparse_tensor import KTensor, SparseTensor, random_ktensor, sort_mode
 
 __all__ = [
@@ -427,7 +428,7 @@ def _validate_owner(slayout: ShardedBlockedLayout, opart: OwnerPartition):
             f"has {slayout.n_shards}"
         )
     if opart.rb_start != tuple(int(x) for x in slayout.rb_start):
-        raise ValueError(
+        raise ShardAssignmentError(
             "owner partition was built from a different shard assignment "
             f"(rb_start {opart.rb_start} vs "
             f"{tuple(int(x) for x in slayout.rb_start)}); rebuild it with "
@@ -573,7 +574,7 @@ def _validate_pig(slayout: ShardedBlockedLayout, pig: ShardedPiGather):
     """A gather built from one shard assignment must never run against
     another — its index maps would silently point at the wrong rows."""
     if pig.rb_start != tuple(int(x) for x in slayout.rb_start):
-        raise ValueError(
+        raise ShardAssignmentError(
             "pi_gather was built from a different shard assignment "
             f"(rb_start {pig.rb_start} vs "
             f"{tuple(int(x) for x in slayout.rb_start)}); rebuild it with "

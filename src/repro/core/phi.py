@@ -57,6 +57,7 @@ from .layout import (
 )
 from .pi import pi_rows
 from .policy import heuristic_policy
+from .resilience import ShardAssignmentError
 from .sparse_tensor import ModeView
 
 __all__ = [
@@ -371,7 +372,7 @@ def _require_pig_layout(layout, pi_gather, factors) -> ShardedBlockedLayout:
             f"{layout.n_shards}"
         )
     if pi_gather.rb_start != tuple(int(x) for x in layout.rb_start):
-        raise ValueError(
+        raise ShardAssignmentError(
             "pi_gather was built from a different shard assignment "
             f"(rb_start {pi_gather.rb_start} vs "
             f"{tuple(int(x) for x in layout.rb_start)}); rebuild it with "

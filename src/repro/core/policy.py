@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Callable, Iterable, Sequence
 
 import numpy as np
@@ -31,6 +32,7 @@ __all__ = [
     "default_policy",
     "policy_grid",
     "grid_search",
+    "probe_error_is_retryable",
     "heuristic_policy",
     "vmem_footprint_bytes",
     "SEARCH_ERRORS",
@@ -106,9 +108,19 @@ def _expected_search_errors() -> tuple:
 SEARCH_ERRORS = _expected_search_errors()
 
 
+def probe_error_is_retryable(e: BaseException) -> bool:
+    """Transient probe failures (XLA runtime/compile hiccups, allocation
+    pressure) are worth one retry; deterministic config rejections
+    (``ValueError`` / ``NotImplementedError``) are not — retrying them
+    only slows the search down."""
+    return not isinstance(e, (ValueError, NotImplementedError))
+
+
 def grid_search(
     time_fn: Callable[[PhiPolicy], float],
     policies: Iterable[PhiPolicy],
+    retries: int = 1,
+    backoff: float = 0.05,
 ) -> list:
     """Time every policy; returns [(policy, seconds, error)] fastest-first.
 
@@ -116,13 +128,31 @@ def grid_search(
     with an expected error (invalid configs are part of the search space —
     see :data:`SEARCH_ERRORS`) the entry records ``float('inf')`` seconds
     plus the failure reason so callers can report *why* a point was pruned.
+
+    Probes whose failure class is *retryable* (see
+    :func:`probe_error_is_retryable`) get up to ``retries`` extra
+    attempts with exponential backoff before ``inf`` is recorded, and
+    their error string is tagged ``(retryable)`` — a transiently failing
+    probe no longer poisons the search permanently, and a probe that
+    recovers on retry records its measured time like any other.
     """
     results = []
     for p in policies:
-        try:
-            secs, err = time_fn(p), None
-        except SEARCH_ERRORS as e:
-            secs, err = float("inf"), f"{type(e).__name__}: {e}"
+        secs, err = float("inf"), None
+        for attempt in range(retries + 1):
+            try:
+                secs, err = time_fn(p), None
+                break
+            except SEARCH_ERRORS as e:
+                retryable = probe_error_is_retryable(e)
+                secs = float("inf")
+                err = f"{type(e).__name__}: {e}" + (
+                    " (retryable)" if retryable else ""
+                )
+                if not retryable or attempt >= retries:
+                    break
+                if backoff > 0:
+                    time.sleep(min(backoff * (2.0 ** attempt), 2.0))
         results.append((p, secs, err))
     results.sort(key=lambda x: x[1])
     return results

@@ -1,0 +1,415 @@
+"""Fault tolerance for the CP-APR/CP-ALS runtime.
+
+Three layers, consumed by :mod:`repro.core.cpapr` (and, lighter,
+:mod:`repro.core.cpals`):
+
+* **Numerical guards** — :func:`guard_ok` is a fused ``jnp`` reduction
+  (finite + nonnegative factors and λ, finite KKT violation) traced
+  *inside* each mode update's jit, so the check costs one reduction and
+  no extra host sync: the solver already synchronizes on the violation
+  scalar after every mode.  On a violation the solver restores the
+  last-good factor state and retries the mode, escalating the scooch
+  ``kappa`` (the damping ladder) on repeated failures; every retry is
+  recorded as a :class:`RecoveryEvent` in ``CPAPRResult.recoveries``.
+
+* **Degradation ladder** — :func:`classify_failure` maps runtime
+  exceptions to a failure kind and the solver demotes the failing mode
+  one rung (``pallas → blocked → segment`` on kernel/compile errors,
+  combine ``reduce_scatter → psum`` on an owner-partition fingerprint
+  mismatch, shard-count halving + rebalance on ``RESOURCE_EXHAUSTED``),
+  retrying with bounded exponential backoff (:func:`backoff_sleep`)
+  instead of crashing the solve.
+
+* **Sweep checkpoint/resume** — :func:`save_checkpoint` /
+  :func:`load_checkpoint` serialize the solver state (factors, λ, outer
+  index, histories, per-mode policies and rebalanced shard cuts) as a
+  single file: magic + JSON header (schema version + crc32 of the array
+  payload) + ``npz`` payload, written atomically (tmp + ``os.replace``)
+  with the same quarantine-don't-crash discipline as the autotune v2
+  store — a corrupt or truncated file raises :class:`CheckpointError`
+  and the solver quarantines it and starts fresh rather than dying.
+
+The fault-injection harness (:mod:`repro.testing.faults`) plugs into the
+hook registries at the bottom of this module; the core never imports the
+testing package.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+import tempfile
+import time
+import zlib
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CHECKPOINT_SCHEMA",
+    "CheckpointError",
+    "RecoveryEvent",
+    "ShardAssignmentError",
+    "STRATEGY_DEMOTION",
+    "backoff_sleep",
+    "classify_failure",
+    "guard_ok",
+    "load_checkpoint",
+    "quarantine_checkpoint",
+    "save_checkpoint",
+    "state_ok",
+    "validate_decomposition_inputs",
+]
+
+
+class ShardAssignmentError(ValueError):
+    """An owner partition / Pi gather was built from a *different* shard
+    assignment than the layout it is being used with (stale ``rb_start``
+    fingerprint).  Subclasses ``ValueError`` so pre-existing callers that
+    catch the generic error keep working; the degradation ladder uses the
+    type to demote the combine flavour instead of crashing."""
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file could not be read, parsed, or verified."""
+
+
+@dataclasses.dataclass
+class RecoveryEvent:
+    """One recovery action taken by the solver, surfaced in
+    ``CPAPRResult.recoveries`` instead of a crash.
+
+    ``kind`` is one of ``nan_guard`` (numerical guard tripped, last-good
+    state restored), ``loglik_guard`` (non-finite sweep log-likelihood,
+    sweep redone), ``demote_kernel`` / ``demote_policy`` /
+    ``demote_fingerprint`` / ``demote_oom`` (degradation-ladder rungs),
+    ``checkpoint_corrupt`` (resume file failed verification and was
+    quarantined) or ``resume`` (solve continued from a checkpoint).
+    ``outer`` is the 1-based sweep, ``mode`` the mode index (-1 for
+    solve-level events), ``attempt`` the retry count at that point.
+    """
+
+    kind: str
+    outer: int
+    mode: int = -1
+    attempt: int = 0
+    detail: dict = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Numerical guards
+# ---------------------------------------------------------------------------
+
+
+def guard_ok(a, lam, viol=None):
+    """Fused finite/positivity reduction, traced inside the update jit.
+
+    True iff the factor ``a`` and weights ``lam`` are finite and
+    nonnegative and the KKT violation is finite.  One reduction per mode
+    update — never inside the inner ``while_loop`` — and its boolean
+    rides the host sync the solver already performs on ``viol``.
+    """
+    ok = (
+        jnp.all(jnp.isfinite(a))
+        & jnp.all(a >= 0)
+        & jnp.all(jnp.isfinite(lam))
+        & jnp.all(lam >= 0)
+    )
+    if viol is not None:
+        ok = ok & jnp.isfinite(viol)
+    return ok
+
+
+def state_ok(a, lam, viol=None) -> bool:
+    """Host-level guard over concrete arrays (used to re-verify state the
+    in-jit guard cannot see, e.g. after fault-injection hooks)."""
+    return bool(guard_ok(jnp.asarray(a), jnp.asarray(lam),
+                         None if viol is None else jnp.asarray(viol)))
+
+
+# ---------------------------------------------------------------------------
+# Failure classification + demotion ladder
+# ---------------------------------------------------------------------------
+
+# kernel/compile demotion chain: each rung is strictly more portable
+STRATEGY_DEMOTION = {"pallas": "blocked", "blocked": "segment"}
+
+_OOM_MARKERS = ("resource_exhausted", "out of memory", "allocation failure")
+_KERNEL_MARKERS = ("mosaic", "pallas", "simulated kernel", "lowering",
+                   "triton", "internal:")
+
+
+def _xla_error_types() -> tuple:
+    errs: list = []
+    try:
+        from jax._src.lib import xla_client
+
+        errs.append(xla_client.XlaRuntimeError)
+    except Exception:  # pragma: no cover - jax internals moved
+        pass
+    try:
+        from jax.errors import JaxRuntimeError
+
+        errs.append(JaxRuntimeError)
+    except Exception:
+        pass
+    return tuple(errs)
+
+
+XLA_ERRORS = _xla_error_types()
+
+
+def classify_failure(exc: BaseException) -> "str | None":
+    """Map a runtime exception to a degradation-ladder kind.
+
+    Returns ``"oom"`` (shard-count halving), ``"fingerprint"`` (combine
+    ``reduce_scatter → psum`` + gather-map rebuild), ``"kernel"``
+    (``pallas → blocked → segment``), ``"policy"`` (a served policy names
+    an unknown strategy/combine: drop to ``segment``) or ``None`` for
+    anything the ladder must not swallow (asserts, keyboard interrupts,
+    genuine bugs) — the solver re-raises those.
+    """
+    msg = str(exc)
+    low = msg.lower()
+    if isinstance(exc, MemoryError) or any(m in low for m in _OOM_MARKERS):
+        return "oom"
+    if isinstance(exc, ShardAssignmentError) or \
+            "different shard assignment" in msg:
+        return "fingerprint"
+    if isinstance(exc, ValueError) and (
+        "unknown strategy" in msg or "unknown combine" in msg
+    ):
+        return "policy"
+    if isinstance(exc, XLA_ERRORS) or isinstance(exc, NotImplementedError) \
+            or any(m in low for m in _KERNEL_MARKERS):
+        return "kernel"
+    return None
+
+
+def backoff_sleep(attempt: int, base: float, cap: float = 2.0) -> float:
+    """Bounded exponential backoff before a demoted retry; returns the
+    seconds slept so tests can assert the schedule with ``base=0``."""
+    secs = min(base * (2.0 ** attempt), cap) if base > 0 else 0.0
+    if secs > 0:
+        time.sleep(secs)
+    return secs
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume
+# ---------------------------------------------------------------------------
+
+CHECKPOINT_SCHEMA = 1
+_MAGIC = b"REPRO-CKPT\x00"
+
+
+def _crc_hex(blob: bytes) -> str:
+    return format(zlib.crc32(blob) & 0xFFFFFFFF, "08x")
+
+
+def config_fingerprint(fields: dict) -> str:
+    """crc32 over a canonical JSON dump of the problem/config fields that
+    must match for a checkpoint to be resumable."""
+    blob = json.dumps(fields, sort_keys=True, separators=(",", ":"))
+    return _crc_hex(blob.encode())
+
+
+def save_checkpoint(path: str, state: dict) -> None:
+    """Atomically write solver state to ``path``.
+
+    ``state`` must contain ``lam`` and ``factors`` (arrays — stored in an
+    ``npz`` payload, dtypes preserved so resume is bitwise) plus any
+    JSON-serializable header fields (outer index, histories, policies,
+    shard cuts...).  Layout: magic, 8-byte header length, JSON header
+    (schema version + crc32 of the payload), payload bytes.  The write
+    goes to a same-directory temp file and is published with
+    ``os.replace`` — a concurrent reader sees the old file or the new
+    one, never a torn mix.
+    """
+    arrays = {"lam": np.asarray(state["lam"])}
+    for i, f in enumerate(state["factors"]):
+        arrays[f"factor_{i}"] = np.asarray(f)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    payload = buf.getvalue()
+    header = {k: v for k, v in state.items() if k not in ("lam", "factors")}
+    header["schema"] = CHECKPOINT_SCHEMA
+    header["n_factors"] = len(state["factors"])
+    header["crc32"] = _crc_hex(payload)
+    hb = json.dumps(header, sort_keys=True).encode()
+    blob = _MAGIC + len(hb).to_bytes(8, "big") + hb + payload
+
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".ckpt.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def load_checkpoint(path: str) -> dict:
+    """Read + verify a checkpoint; raises :class:`CheckpointError` on any
+    failure (missing file, bad magic, truncation, schema mismatch, crc
+    mismatch, unparseable payload) — never returns partial state."""
+    try:
+        with open(path, "rb") as f:
+            blob = f.read()
+    except OSError as e:
+        raise CheckpointError(f"cannot read checkpoint {path}: {e}") from e
+    if not blob.startswith(_MAGIC):
+        raise CheckpointError(f"{path}: not a repro checkpoint (bad magic)")
+    off = len(_MAGIC)
+    if len(blob) < off + 8:
+        raise CheckpointError(f"{path}: truncated header length")
+    hlen = int.from_bytes(blob[off:off + 8], "big")
+    hb = blob[off + 8:off + 8 + hlen]
+    if len(hb) != hlen:
+        raise CheckpointError(f"{path}: truncated header")
+    try:
+        header = json.loads(hb.decode())
+    except (UnicodeDecodeError, ValueError) as e:
+        raise CheckpointError(f"{path}: unparseable header: {e}") from e
+    if header.get("schema") != CHECKPOINT_SCHEMA:
+        raise CheckpointError(
+            f"{path}: checkpoint schema {header.get('schema')!r} != "
+            f"supported {CHECKPOINT_SCHEMA}"
+        )
+    payload = blob[off + 8 + hlen:]
+    if _crc_hex(payload) != header.get("crc32"):
+        raise CheckpointError(f"{path}: payload crc mismatch (corrupt file)")
+    try:
+        npz = np.load(io.BytesIO(payload))
+        lam = npz["lam"]
+        factors = [npz[f"factor_{i}"] for i in range(header["n_factors"])]
+    except Exception as e:
+        raise CheckpointError(f"{path}: unparseable payload: {e}") from e
+    state = dict(header)
+    state["lam"] = lam
+    state["factors"] = factors
+    return state
+
+
+def quarantine_checkpoint(path: str) -> str:
+    """Move a failed checkpoint aside (``<path>.corrupt``) so the solver
+    can write fresh checkpoints at the original path; returns the new
+    location (or ``path`` unchanged when the move itself fails)."""
+    qpath = path + ".corrupt"
+    try:
+        os.replace(path, qpath)
+        return qpath
+    except OSError:
+        return path
+
+
+# ---------------------------------------------------------------------------
+# Input validation (the cpapr_mu / cp_als boundary)
+# ---------------------------------------------------------------------------
+
+
+def validate_decomposition_inputs(t, rank: int, where: str = "cpapr_mu",
+                                  nonneg: bool = True) -> None:
+    """Reject garbage inputs with a clear error *naming the offending
+    mode/position* instead of producing silent NaN factors.
+
+    Checks: ``rank`` positive; indices shaped (nnz, ndim) and in-range
+    per mode; values finite; values nonnegative (Poisson count data) when
+    ``nonneg``.  One host pass over the nonzeros, once per solve.
+    """
+    if not isinstance(rank, (int, np.integer)) or rank <= 0:
+        raise ValueError(f"{where}: rank must be a positive integer, "
+                         f"got {rank!r}")
+    idx = np.asarray(t.indices)
+    vals = np.asarray(t.values)
+    ndim = len(t.shape)
+    if idx.ndim != 2 or idx.shape[1] != ndim:
+        raise ValueError(
+            f"{where}: indices must have shape (nnz, {ndim}) for a "
+            f"{ndim}-mode tensor, got {idx.shape}"
+        )
+    if vals.shape != (idx.shape[0],):
+        raise ValueError(
+            f"{where}: values must have shape ({idx.shape[0]},) to match "
+            f"indices, got {vals.shape}"
+        )
+    for n, dim in enumerate(t.shape):
+        col = idx[:, n]
+        bad = (col < 0) | (col >= dim)
+        if bad.any():
+            j = int(np.argmax(bad))
+            raise ValueError(
+                f"{where}: mode {n} has out-of-range index {int(col[j])} at "
+                f"nonzero {j} (valid range [0, {int(dim)}))"
+            )
+    finite = np.isfinite(vals)
+    if not finite.all():
+        j = int(np.argmax(~finite))
+        raise ValueError(
+            f"{where}: non-finite nonzero value {vals[j]!r} at position {j}"
+        )
+    if nonneg:
+        neg = vals < 0
+        if neg.any():
+            j = int(np.argmax(neg))
+            raise ValueError(
+                f"{where}: negative nonzero value {vals[j]!r} at position "
+                f"{j}; the solvers assume nonnegative (Poisson count) data"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection hook registries (populated only by repro.testing.faults)
+# ---------------------------------------------------------------------------
+
+_mode_hooks: list = []  # fn(ctx) -> None; may raise to simulate a fault
+_post_update_hooks: list = []  # fn(ctx, a_new, lam) -> (a_new, lam)
+
+
+def register_mode_hook(fn: Callable) -> None:
+    _mode_hooks.append(fn)
+
+
+def unregister_mode_hook(fn: Callable) -> None:
+    if fn in _mode_hooks:
+        _mode_hooks.remove(fn)
+
+
+def register_post_update_hook(fn: Callable) -> None:
+    _post_update_hooks.append(fn)
+
+
+def unregister_post_update_hook(fn: Callable) -> None:
+    if fn in _post_update_hooks:
+        _post_update_hooks.remove(fn)
+
+
+def have_hooks() -> bool:
+    return bool(_mode_hooks or _post_update_hooks)
+
+
+def have_post_update_hooks() -> bool:
+    return bool(_post_update_hooks)
+
+
+def fire_mode_hooks(ctx: dict) -> None:
+    """Called by the solver right before invoking a mode update, inside
+    the degradation-ladder try block — a hook that raises exercises the
+    exact recovery path a real runtime failure would."""
+    for fn in list(_mode_hooks):
+        fn(ctx)
+
+
+def apply_post_update_hooks(ctx: dict, a_new, lam):
+    """Called on a mode update's outputs (host level); hooks may corrupt
+    them (e.g. inject NaNs) to exercise the numerical guard."""
+    for fn in list(_post_update_hooks):
+        a_new, lam = fn(ctx, a_new, lam)
+    return a_new, lam

@@ -203,8 +203,11 @@ class AutotuneCache:
     holds entries that could not be served — v1-schema records awaiting
     migration and corrupt v2 records — keyed by their original key with
     the quarantine reason attached.  Corrupt or missing *files* load as
-    empty; all writes are atomic so concurrent processes at worst lose a
-    race, never the file.
+    empty; all writes are atomic (tmp + ``os.replace``) and crc-stamped
+    (``crc32`` over the canonical body dump, verified at load), so
+    concurrent processes at worst lose a race, never the file — and a
+    store that somehow carries interleaved writer output is detected and
+    dropped instead of served.
 
     Long-lived fleets accumulate entries without bound (every tensor
     shape x distribution bin x shard assignment is a key), so the store
@@ -230,6 +233,16 @@ class AutotuneCache:
 
     VERSION = 2
 
+    @staticmethod
+    def _body_crc(body: dict) -> str:
+        """crc32 over the canonical dump of the store body.  Computed on
+        *parsed* values, so it is stable across the JSON round trip and a
+        reader can verify whatever bytes it managed to read."""
+        import zlib
+
+        blob = json.dumps(body, sort_keys=True, separators=(",", ":"))
+        return format(zlib.crc32(blob.encode()) & 0xFFFFFFFF, "08x")
+
     def __init__(
         self,
         path: str | None = None,
@@ -249,6 +262,7 @@ class AutotuneCache:
         self.max_age_days = max_age_days
         self.n_expired = 0  # TTL drops at the last load
         self.n_evicted = 0  # LRU drops over this instance's lifetime
+        self.n_crc_failures = 0  # stores rejected by the crc stamp
         self.entries: dict = {}
         self.quarantined: dict = {}
         self.load()
@@ -264,6 +278,17 @@ class AutotuneCache:
             return
         if not isinstance(data, dict):
             return
+        crc = data.get("crc32")
+        if isinstance(crc, str):
+            # crc-stamped store (this schema's writers): verify before
+            # serving anything.  A mismatch means interleaved/partial
+            # writer output — quarantine-don't-crash: load as empty, the
+            # next atomic save rewrites a consistent file.
+            body = {k: data[k] for k in ("entries", "quarantined")
+                    if k in data}
+            if self._body_crc(body) != crc:
+                self.n_crc_failures += 1
+                return
         version = data.get("version")
         raw_q = data.get("quarantined")
         if isinstance(raw_q, dict):
@@ -319,9 +344,11 @@ class AutotuneCache:
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
-        payload = {"version": self.VERSION, "entries": self.entries}
+        body: dict = {"entries": self.entries}
         if self.quarantined:
-            payload["quarantined"] = self.quarantined
+            body["quarantined"] = self.quarantined
+        payload = {"version": self.VERSION, "crc32": self._body_crc(body),
+                   **body}
         fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:

@@ -1,0 +1,4 @@
+"""Test-support utilities shipped with the library (fault injection)."""
+from . import faults  # noqa: F401
+
+__all__ = ["faults"]

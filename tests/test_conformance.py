@@ -461,3 +461,101 @@ def test_owner_update_bitwise_vs_psum_solver():
     np.testing.assert_array_equal(ref.kkt_history, rs.kkt_history)
     for a, b in zip(ref.ktensor.factors, rs.ktensor.factors):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Recovery-path rows: solves that took a resilience path (NaN restore,
+# strategy demotion, checkpoint resume) are held to the same dense f64
+# oracle as the clean strategies above
+# ---------------------------------------------------------------------------
+
+# Each row: the CPAPRConfig kwargs for the solve and a (context-manager
+# factory, expected RecoveryEvent kind) pair from repro.testing.faults.
+# PB is the conformance blocking policy so sharded fixtures really shard.
+from repro.core.policy import PhiPolicy as _PhiPolicy
+
+PB = _PhiPolicy(strategy="blocked", block_nnz=BN, block_rows=BR)
+
+RECOVERY_PATHS = {
+    "nan-restore-segment": dict(
+        cfg=dict(strategy="segment"),
+        fault=lambda faults: faults.inject_nan(mode=1, outer=2),
+        kind="nan_guard"),
+    "nan-restore-sharded-rs": dict(
+        cfg=dict(strategy="sharded", n_shards=3, combine="reduce_scatter",
+                 policy=PB),
+        fault=lambda faults: faults.inject_nan(mode=0, outer=1),
+        kind="nan_guard"),
+    "kernel-demote-pallas": dict(
+        cfg=dict(strategy="pallas", policy=PB),
+        fault=lambda faults: faults.fail_strategy(strategy="pallas"),
+        kind="demote_kernel"),
+    "oom-demote-sharded": dict(
+        cfg=dict(strategy="sharded", n_shards=4, policy=PB),
+        fault=lambda faults: faults.fail_oom(min_shards=3),
+        kind="demote_oom"),
+    "fingerprint-demote-rs": dict(
+        cfg=dict(strategy="sharded", n_shards=3, combine="reduce_scatter",
+                 policy=PB),
+        fault=lambda faults: faults.fail_fingerprint(),
+        kind="demote_fingerprint"),
+}
+
+
+def _dense_kkt(t, kt):
+    """Worst per-mode KKT violation of a KTensor, dense f64 oracle."""
+    worst = 0.0
+    for n in range(t.ndim):
+        mv = sort_mode(t, n)
+        pi = pi_rows(mv.sorted_idx, kt.factors, n)
+        b = np.asarray(kt.factors[n] * kt.lam[None, :], np.float64)
+        phi = dense_phi_reference(mv.rows, mv.sorted_vals, pi, b, mv.n_rows)
+        worst = max(worst, float(np.max(np.abs(np.minimum(b, 1.0 - phi)))))
+    return worst
+
+
+@pytest.mark.parametrize("name", sorted(RECOVERY_PATHS))
+def test_recovery_paths_meet_dense_oracle(name):
+    """A solve that recovered from an injected fault must land where a
+    clean solve lands: same recorded recovery kind, and a final dense-f64
+    KKT violation no worse than the clean run's (small slack for the
+    demoted strategies' different summation order)."""
+    from repro.core import CPAPRConfig, cpapr_mu
+    from repro.testing import faults
+
+    row = RECOVERY_PATHS[name]
+    t, _ = make_fixture("uniform")
+    base = dict(rank=RANK, max_outer=5, track_loglik=False, **row["cfg"])
+    clean = cpapr_mu(t, RANK, config=CPAPRConfig(**base))
+    with row["fault"](faults):
+        rec = cpapr_mu(t, RANK, config=CPAPRConfig(**base))
+    kinds = [e.kind for e in (rec.recoveries or [])]
+    assert row["kind"] in kinds, (name, kinds)
+    clean_kkt = _dense_kkt(t, clean.ktensor)
+    rec_kkt = _dense_kkt(t, rec.ktensor)
+    assert rec_kkt <= clean_kkt * 1.05 + 1e-4, (name, rec_kkt, clean_kkt)
+
+
+def test_resume_path_meets_dense_oracle(tmp_path):
+    """The checkpoint/resume row: a killed-and-resumed solve is bitwise
+    the uninterrupted solve, so it trivially meets the oracle — assert
+    both the bitwise identity and the oracle anyway (belt and braces)."""
+    from repro.core import CPAPRConfig, cpapr_mu
+    from repro.testing import faults
+
+    t, _ = make_fixture("hub")
+    ck = str(tmp_path / "ck.npz")
+    base = dict(rank=RANK, max_outer=5, tol=0.0, strategy="sharded",
+                n_shards=3, combine="reduce_scatter", policy=PB,
+                track_loglik=False)
+    ref = cpapr_mu(t, RANK, config=CPAPRConfig(**base))
+    cfg = CPAPRConfig(checkpoint_every=2, checkpoint_path=ck, **base)
+    with pytest.raises(faults.KilledError):
+        with faults.kill_at_sweep(4):
+            cpapr_mu(t, RANK, config=cfg)
+    res = cpapr_mu(t, RANK, config=cfg, resume_from=ck)
+    assert any(e.kind == "resume" for e in res.recoveries)
+    for a, b in zip(ref.ktensor.factors, res.ktensor.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ref.kkt_history == res.kkt_history
+    assert _dense_kkt(t, res.ktensor) <= _dense_kkt(t, ref.ktensor) + 1e-12

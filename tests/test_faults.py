@@ -1,0 +1,302 @@
+"""Fault-injection recovery matrix (PR 6 tentpole receipt).
+
+Every injected fault — NaN factors, kernel/compile failures, simulated
+OOM, shard-assignment fingerprint mismatches, corrupted checkpoints,
+poisoned autotune caches — must still end in a *converged* CP-APR solve
+whose factors satisfy the dense f64 KKT oracle, with the recovery path
+recorded in ``CPAPRResult.recoveries`` instead of a crash.
+
+The CI leg runs this file at 1 and 2 forced host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``); the sharded
+rows use a real mesh when multiple devices exist and the emulated
+sharded path otherwise, so the matrix is device-count portable.
+"""
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import CPAPRConfig, cpapr_mu, cp_als
+from repro.core.policy import PhiPolicy
+from repro.core.pi import pi_rows
+from repro.core.sparse_tensor import random_poisson_tensor, sort_mode
+from repro.perf.autotune import Autotuner
+from repro.testing import faults
+
+from conftest import dense_phi_reference
+
+RANK = 4
+TOL = 5e-2  # loose outer tolerance: every matrix row must *converge*
+SWEEPS = 60  # the clean fixture solve converges in ~35 sweeps at TOL
+# small blocks so the fixture modes really shard (>= 4 row blocks)
+PB = PhiPolicy(strategy="blocked", block_nnz=64, block_rows=4)
+
+
+@functools.lru_cache(maxsize=None)
+def fixture():
+    t, _ = random_poisson_tensor(jax.random.PRNGKey(0), (40, 30, 25),
+                                 nnz=1500, rank=RANK)
+    return t
+
+
+def _mesh_or_none(n_shards: int):
+    if jax.device_count() >= n_shards:
+        from repro.core.distributed import make_phi_mesh
+
+        return make_phi_mesh(n_shards)
+    return None
+
+
+def dense_kkt(t, kt):
+    """Worst per-mode KKT violation, dense f64 oracle."""
+    worst = 0.0
+    for n in range(t.ndim):
+        mv = sort_mode(t, n)
+        pi = pi_rows(mv.sorted_idx, kt.factors, n)
+        b = np.asarray(kt.factors[n] * kt.lam[None, :], np.float64)
+        phi = dense_phi_reference(mv.rows, mv.sorted_vals, pi, b, mv.n_rows)
+        worst = max(worst, float(np.max(np.abs(np.minimum(b, 1.0 - phi)))))
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# The fault x strategy registry.  Each row: solver config, a fault
+# context-manager factory, and the RecoveryEvent kind the run must record.
+# ---------------------------------------------------------------------------
+
+MATRIX = {
+    "nan-segment": dict(
+        cfg=dict(strategy="segment"),
+        fault=lambda: faults.inject_nan(mode=1, outer=2),
+        kind="nan_guard"),
+    "nan-pallas": dict(
+        cfg=dict(strategy="pallas", policy=PB),
+        fault=lambda: faults.inject_nan(mode=0, outer=1),
+        kind="nan_guard"),
+    "nan-sharded-rs": dict(
+        cfg=dict(strategy="sharded", n_shards=2, combine="reduce_scatter",
+                 policy=PB),
+        fault=lambda: faults.inject_nan(mode=0, outer=1),
+        kind="nan_guard"),
+    "nan-repeated": dict(
+        # three consecutive hits on the same mode: the kappa ladder must
+        # escalate past the plain-retry rung and still converge
+        cfg=dict(strategy="segment"),
+        fault=lambda: faults.inject_nan(mode=0, outer=None, times=3),
+        kind="nan_guard"),
+    "kernel-pallas": dict(
+        cfg=dict(strategy="pallas", policy=PB),
+        fault=lambda: faults.fail_strategy(strategy="pallas"),
+        kind="demote_kernel"),
+    "kernel-sharded-local-pallas": dict(
+        cfg=dict(strategy="sharded", n_shards=2, policy=PB),
+        fault=lambda: faults.fail_strategy(strategy="sharded"),
+        kind="demote_kernel"),
+    "oom-sharded": dict(
+        cfg=dict(strategy="sharded", n_shards=4, policy=PB),
+        fault=lambda: faults.fail_oom(min_shards=3),
+        kind="demote_oom"),
+    "oom-to-single-device": dict(
+        # unbounded OOM: the ladder must walk 4 -> 2 -> single-device
+        cfg=dict(strategy="sharded", n_shards=4, policy=PB),
+        fault=lambda: faults.fail_oom(min_shards=2),
+        kind="demote_oom"),
+    "fingerprint-rs": dict(
+        cfg=dict(strategy="sharded", n_shards=2, combine="reduce_scatter",
+                 policy=PB),
+        fault=lambda: faults.fail_fingerprint(),
+        kind="demote_fingerprint"),
+}
+
+
+@pytest.mark.parametrize("name", sorted(MATRIX))
+def test_fault_matrix_converges_to_oracle(name):
+    row = MATRIX[name]
+    t = fixture()
+    cfg = CPAPRConfig(rank=RANK, max_outer=SWEEPS, tol=TOL, track_loglik=True,
+                      **row["cfg"])
+    with row["fault"]():
+        res = cpapr_mu(t, RANK, config=cfg)
+    assert res.converged, (name, res.kkt_history[-5:])
+    kinds = [e.kind for e in (res.recoveries or [])]
+    assert row["kind"] in kinds, (name, kinds)
+    # float32 strategies stop at the first sweep whose f32 KKT <= TOL;
+    # the f64 oracle on the same factors can sit slightly above it
+    assert dense_kkt(t, res.ktensor) <= TOL * 1.5, name
+    assert all(np.isfinite(res.loglik_history))
+
+
+def test_fault_matrix_on_real_mesh():
+    """Sharded rows again, on an actual jax mesh when the process has
+    more than one device (the CI 2-device leg); skipped at 1 device."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices")
+    t = fixture()
+    mesh = _mesh_or_none(2)
+    for fault, kind in [
+        (faults.inject_nan(mode=0, outer=1), "nan_guard"),
+        (faults.fail_fingerprint(), "demote_fingerprint"),
+    ]:
+        cfg = CPAPRConfig(rank=RANK, max_outer=SWEEPS, tol=TOL,
+                          strategy="sharded", n_shards=2, mesh=mesh,
+                          combine="reduce_scatter", policy=PB)
+        with fault:
+            res = cpapr_mu(t, RANK, config=cfg)
+        assert res.converged
+        assert kind in [e.kind for e in res.recoveries]
+        assert dense_kkt(t, res.ktensor) <= TOL * 1.5
+
+
+def test_unclassifiable_fault_propagates():
+    """The ladder only eats failures it can classify — anything else
+    (here a KilledError) must surface to the caller unchanged."""
+    t = fixture()
+    with pytest.raises(faults.KilledError):
+        with faults.kill_at_sweep(2):
+            cpapr_mu(t, RANK, config=CPAPRConfig(rank=RANK, max_outer=5,
+                                                 strategy="segment"))
+
+
+def test_guard_exhaustion_raises():
+    """A fault that reinjects NaN on every retry must exhaust the kappa
+    ladder and raise FloatingPointError, not loop forever."""
+    t = fixture()
+    cfg = CPAPRConfig(rank=RANK, max_outer=5, strategy="segment",
+                      guard_retries=2)
+    with pytest.raises(FloatingPointError, match=r"mode\(s\) \[0\]"):
+        with faults.inject_nan(mode=0, outer=None, times=None):
+            cpapr_mu(t, RANK, config=cfg)
+
+
+def test_guard_off_lets_nan_through():
+    """guard=False restores the old behaviour (receipt that the guard is
+    doing the work, not some other path)."""
+    t = fixture()
+    cfg = CPAPRConfig(rank=RANK, max_outer=3, strategy="segment",
+                      guard=False, track_loglik=False)
+    with faults.inject_nan(mode=0, outer=1):
+        res = cpapr_mu(t, RANK, config=cfg)
+    assert not bool(jnp.all(jnp.isfinite(res.ktensor.factors[0])))
+    assert res.recoveries is None
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+def _ck_cfg(ck, **kw):
+    base = dict(rank=RANK, max_outer=6, tol=0.0, strategy="sharded",
+                n_shards=2, combine="reduce_scatter", policy=PB,
+                rebalance_every=2, checkpoint_every=2, checkpoint_path=ck)
+    base.update(kw)
+    return CPAPRConfig(**base)
+
+
+def test_kill_and_resume_is_bitwise(tmp_path):
+    """Kill at sweep 5, resume from the sweep-4 checkpoint: factors,
+    lambda and every history are bitwise the uninterrupted run's."""
+    t = fixture()
+    ck = str(tmp_path / "ck.npz")
+    ref = cpapr_mu(t, RANK, config=_ck_cfg(None, checkpoint_every=0,
+                                           checkpoint_path=None))
+    with pytest.raises(faults.KilledError):
+        with faults.kill_at_sweep(5):
+            cpapr_mu(t, RANK, config=_ck_cfg(ck))
+    res = cpapr_mu(t, RANK, config=_ck_cfg(ck), resume_from=ck)
+    assert res.n_outer == ref.n_outer
+    for a, b in zip(ref.ktensor.factors, res.ktensor.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ref.ktensor.lam),
+                                  np.asarray(res.ktensor.lam))
+    assert ref.kkt_history == res.kkt_history
+    assert ref.loglik_history == res.loglik_history
+    assert ref.inner_iters == res.inner_iters
+    assert [e.kind for e in res.recoveries] == ["resume"]
+
+
+@pytest.mark.parametrize("kind", ["flip", "truncate", "magic"])
+def test_corrupt_checkpoint_quarantined_and_solve_restarts(tmp_path, kind):
+    t = fixture()
+    ck = str(tmp_path / "ck.npz")
+    cfg = _ck_cfg(ck, max_outer=4)
+    cpapr_mu(t, RANK, config=cfg)
+    faults.corrupt_checkpoint(ck, kind=kind)
+    res = cpapr_mu(t, RANK, config=cfg, resume_from=ck)
+    kinds = [e.kind for e in res.recoveries]
+    assert kinds[0] == "checkpoint_corrupt" and "resume" not in kinds
+    assert os.path.exists(ck + ".corrupt")
+    # fresh start wrote new valid checkpoints at the original path
+    assert os.path.exists(ck)
+    ref = cpapr_mu(t, RANK, config=_ck_cfg(None, max_outer=4,
+                                           checkpoint_every=0,
+                                           checkpoint_path=None))
+    assert ref.kkt_history == res.kkt_history
+
+
+def test_fingerprint_mismatch_rejected(tmp_path):
+    """A checkpoint from a different problem/config must not resume."""
+    t = fixture()
+    ck = str(tmp_path / "ck.npz")
+    cpapr_mu(t, RANK, config=_ck_cfg(ck, max_outer=4))
+    other = CPAPRConfig(rank=RANK, max_outer=4, tol=1e-9,  # different tol
+                        strategy="segment", checkpoint_every=0)
+    res = cpapr_mu(t, RANK, config=other, resume_from=ck)
+    kinds = [e.kind for e in res.recoveries]
+    assert kinds == ["checkpoint_corrupt"]
+    assert "fingerprint" in res.recoveries[0].detail["error"]
+
+
+def test_resume_after_fault_preserves_recovery_log(tmp_path):
+    """Recoveries taken before the kill survive the checkpoint and are
+    prepended to the resumed run's log."""
+    t = fixture()
+    ck = str(tmp_path / "ck.npz")
+    cfg = _ck_cfg(ck, strategy="pallas", n_shards=None, combine="auto",
+                  rebalance_every=0)
+    with pytest.raises(faults.KilledError):
+        with faults.fail_strategy(strategy="pallas"), faults.kill_at_sweep(5):
+            cpapr_mu(t, RANK, config=cfg)
+    res = cpapr_mu(t, RANK, config=cfg, resume_from=ck)
+    kinds = [e.kind for e in res.recoveries]
+    assert kinds[0] == "demote_kernel" and "resume" in kinds
+
+
+# ---------------------------------------------------------------------------
+# Poisoned autotune cache
+# ---------------------------------------------------------------------------
+
+
+def test_poisoned_autotune_demotes_and_converges(tmp_path):
+    t = fixture()
+    tuner = Autotuner(cache_path=str(tmp_path / "cache.json"), measure=False)
+    mv0 = sort_mode(t, 0)
+    faults.poison_autotune(tuner, mv0, RANK, strategy="warpspeed")
+    res = cpapr_mu(t, RANK, config=CPAPRConfig(
+        rank=RANK, max_outer=SWEEPS, tol=TOL, policy="auto", autotuner=tuner))
+    assert res.converged
+    kinds = [e.kind for e in res.recoveries]
+    assert "demote_policy" in kinds
+    assert dense_kkt(t, res.ktensor) <= TOL * 1.5
+
+
+# ---------------------------------------------------------------------------
+# CP-ALS rides the same ladder
+# ---------------------------------------------------------------------------
+
+
+def test_cpals_kernel_fault_demotes_and_matches():
+    t = fixture()
+    clean_kt, clean_fits = cp_als(t, RANK, n_iters=5, strategy="segment")
+    recs = []
+    with faults.fail_strategy(strategy="pallas"):
+        kt, fits = cp_als(t, RANK, n_iters=5, strategy="pallas", policy=PB,
+                          recoveries=recs)
+    assert [e.kind for e in recs] == ["demote_kernel"]
+    assert abs(fits[-1] - clean_fits[-1]) < 1e-3

@@ -1,0 +1,364 @@
+"""Unit tests for the fault-tolerant runtime substrate (PR 6).
+
+Covers the pieces under ``repro.core.resilience`` and the satellite
+hardening: checkpoint serialization (atomic, crc-checked, versioned),
+input validation at the solver boundary, the numerical guard reduction,
+failure classification for the degradation ladder, grid-search probe
+retries, and the crc-stamped autotune cache store.
+"""
+import json
+import os
+import sys
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import resilience
+from repro.core.policy import grid_search, probe_error_is_retryable
+from repro.core.sparse_tensor import SparseTensor, random_poisson_tensor
+from repro.perf.autotune import AutotuneCache
+from repro.testing import faults
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint format
+# ---------------------------------------------------------------------------
+
+
+def _state():
+    return {
+        "fingerprint": "abc123",
+        "outer": 7,
+        "kkt_history": [0.5, 0.25],
+        "strategies": ["segment", "blocked"],
+        "lam": jnp.asarray([1.0, 2.0, 3.0], jnp.float32),
+        "factors": [jnp.ones((4, 3), jnp.float32),
+                    jnp.full((5, 3), 2.0, jnp.float32)],
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    resilience.save_checkpoint(path, _state())
+    out = resilience.load_checkpoint(path)
+    assert out["fingerprint"] == "abc123"
+    assert out["outer"] == 7
+    assert out["kkt_history"] == [0.5, 0.25]
+    assert out["strategies"] == ["segment", "blocked"]
+    np.testing.assert_array_equal(out["lam"], [1.0, 2.0, 3.0])
+    assert len(out["factors"]) == 2
+    np.testing.assert_array_equal(out["factors"][1],
+                                  np.full((5, 3), 2.0, np.float32))
+
+
+def test_checkpoint_write_is_atomic(tmp_path):
+    """No partial file is left behind: the tmp file is renamed over the
+    target, so a concurrent reader sees either the old or the new
+    checkpoint, never a torn one."""
+    path = str(tmp_path / "ck.npz")
+    resilience.save_checkpoint(path, _state())
+    first = open(path, "rb").read()
+    st = _state()
+    st["outer"] = 8
+    resilience.save_checkpoint(path, st)
+    assert resilience.load_checkpoint(path)["outer"] == 8
+    leftovers = [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    assert leftovers == []
+    assert open(path, "rb").read() != first
+
+
+@pytest.mark.parametrize("kind", ["flip", "truncate", "magic"])
+def test_checkpoint_corruption_detected(tmp_path, kind):
+    path = str(tmp_path / "ck.npz")
+    resilience.save_checkpoint(path, _state())
+    faults.corrupt_checkpoint(path, kind=kind)
+    with pytest.raises(resilience.CheckpointError):
+        resilience.load_checkpoint(path)
+
+
+def test_checkpoint_quarantine(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    resilience.save_checkpoint(path, _state())
+    q = resilience.quarantine_checkpoint(path)
+    assert q == path + ".corrupt"
+    assert os.path.exists(q) and not os.path.exists(path)
+
+
+def test_checkpoint_schema_gate(tmp_path):
+    """A future-schema checkpoint is refused, not misparsed."""
+    path = str(tmp_path / "ck.npz")
+    resilience.save_checkpoint(path, _state())
+    blob = open(path, "rb").read()
+    n = len(resilience._MAGIC)
+    hlen = int.from_bytes(blob[n:n + 8], "big")
+    header = json.loads(blob[n + 8:n + 8 + hlen])
+    header["schema"] = resilience.CHECKPOINT_SCHEMA + 1
+    hb = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(resilience._MAGIC + len(hb).to_bytes(8, "big") + hb
+                + blob[n + 8 + hlen:])
+    with pytest.raises(resilience.CheckpointError, match="schema"):
+        resilience.load_checkpoint(path)
+
+
+def test_config_fingerprint_is_stable():
+    a = resilience.config_fingerprint({"rank": 4, "tol": 1e-4})
+    b = resilience.config_fingerprint({"tol": 1e-4, "rank": 4})
+    c = resilience.config_fingerprint({"rank": 5, "tol": 1e-4})
+    assert a == b != c
+
+
+# ---------------------------------------------------------------------------
+# Input validation at the solver boundary
+# ---------------------------------------------------------------------------
+
+
+def _tensor(idx, vals, shape=(4, 3, 2)):
+    return SparseTensor(shape=shape,
+                        indices=jnp.asarray(idx, jnp.int32),
+                        values=jnp.asarray(vals, jnp.float32))
+
+
+GOOD_IDX = np.array([[0, 0, 0], [3, 2, 1], [1, 1, 1]])
+GOOD_VALS = np.array([1.0, 2.0, 3.0])
+
+
+@pytest.mark.parametrize("rank", [0, -1, 2.5])
+def test_validate_rejects_bad_rank(rank):
+    t = _tensor(GOOD_IDX, GOOD_VALS)
+    with pytest.raises(ValueError, match="rank must be a positive integer"):
+        resilience.validate_decomposition_inputs(t, rank)
+
+
+def test_validate_rejects_out_of_range_index_naming_mode():
+    idx = GOOD_IDX.copy()
+    idx[1, 1] = 3  # mode 1 has dim 3: valid rows are 0..2
+    with pytest.raises(ValueError,
+                       match=r"mode 1 has out-of-range index 3 at nonzero 1"):
+        resilience.validate_decomposition_inputs(_tensor(idx, GOOD_VALS), 2)
+
+
+def test_validate_rejects_nonfinite_and_negative_values():
+    with pytest.raises(ValueError, match="non-finite"):
+        resilience.validate_decomposition_inputs(
+            _tensor(GOOD_IDX, [1.0, np.nan, 2.0]), 2)
+    with pytest.raises(ValueError, match="negative"):
+        resilience.validate_decomposition_inputs(
+            _tensor(GOOD_IDX, [1.0, -2.0, 2.0]), 2)
+    # negative allowed when nonneg=False (a least-squares caller)
+    resilience.validate_decomposition_inputs(
+        _tensor(GOOD_IDX, [1.0, -2.0, 2.0]), 2, nonneg=False)
+
+
+def test_solver_boundaries_validate():
+    from repro.core import cp_als, cpapr_mu
+
+    idx = GOOD_IDX.copy()
+    idx[0, 2] = 9
+    t = _tensor(idx, GOOD_VALS)
+    with pytest.raises(ValueError, match="cpapr_mu: mode 2"):
+        cpapr_mu(t, 2)
+    with pytest.raises(ValueError, match="cp_als: mode 2"):
+        cp_als(t, 2, n_iters=1)
+    with pytest.raises(ValueError, match="cpapr_mu: rank"):
+        cpapr_mu(_tensor(GOOD_IDX, GOOD_VALS), -3)
+
+
+# ---------------------------------------------------------------------------
+# Numerical guard
+# ---------------------------------------------------------------------------
+
+
+def test_guard_ok_states():
+    good = jnp.ones((3, 2))
+    lam = jnp.ones((2,))
+    assert bool(resilience.guard_ok(good, lam))
+    assert not bool(resilience.guard_ok(good.at[0, 0].set(jnp.nan), lam))
+    assert not bool(resilience.guard_ok(good.at[1, 1].set(jnp.inf), lam))
+    assert not bool(resilience.guard_ok(good.at[2, 0].set(-1.0), lam))
+    assert not bool(resilience.guard_ok(good, lam.at[0].set(jnp.nan)))
+    assert not bool(resilience.guard_ok(good, lam, viol=jnp.float32(jnp.nan)))
+    assert bool(resilience.guard_ok(good, lam, viol=jnp.float32(0.5)))
+    assert resilience.state_ok(good, lam) is True
+
+
+# ---------------------------------------------------------------------------
+# Failure classification (the ladder's dispatch table)
+# ---------------------------------------------------------------------------
+
+
+def test_classify_failure_mapping():
+    cf = resilience.classify_failure
+    assert cf(MemoryError("boom")) == "oom"
+    assert cf(RuntimeError("RESOURCE_EXHAUSTED: out of memory")) == "oom"
+    assert cf(resilience.ShardAssignmentError("rb_start moved")) \
+        == "fingerprint"
+    assert cf(ValueError("unknown strategy 'warpspeed'")) == "policy"
+    assert cf(RuntimeError("Mosaic lowering failed")) == "kernel"
+    assert cf(NotImplementedError("pallas path")) == "kernel"
+    assert cf(KeyError("nope")) is None
+    assert cf(faults.KilledError("kill")) is None  # must propagate
+
+
+# ---------------------------------------------------------------------------
+# grid_search probe retries (satellite: no permanent inf for transients)
+# ---------------------------------------------------------------------------
+
+
+def _xla_error(msg="transient"):
+    from jax._src.lib import xla_client
+
+    return xla_client.XlaRuntimeError(msg)
+
+
+def test_grid_search_retries_transient_probe():
+    calls = {"n": 0}
+
+    def flaky(p):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise _xla_error("INTERNAL: transient compile hiccup")
+        return 0.5
+
+    out = grid_search(flaky, [object()], retries=1, backoff=0.0)
+    assert calls["n"] == 2
+    (pol, secs, err), = out
+    assert secs == 0.5 and err is None  # recovered: finite time, no error
+
+
+def test_grid_search_does_not_retry_config_rejections():
+    calls = {"n": 0}
+
+    def bad(p):
+        calls["n"] += 1
+        raise ValueError("block_rows too large")
+
+    out = grid_search(bad, [object()], retries=3, backoff=0.0)
+    assert calls["n"] == 1  # deterministic rejection: one attempt only
+    (pol, secs, err), = out
+    assert secs == float("inf") and "retryable" not in err
+
+
+def test_grid_search_tags_exhausted_retryables():
+    def always(p):
+        raise _xla_error("INTERNAL: persistent")
+
+    (pol, secs, err), = grid_search(always, [object()], retries=1,
+                                    backoff=0.0)
+    assert secs == float("inf") and err.endswith("(retryable)")
+
+
+def test_probe_error_classes():
+    assert not probe_error_is_retryable(ValueError("x"))
+    assert not probe_error_is_retryable(NotImplementedError("x"))
+    assert probe_error_is_retryable(_xla_error())
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache: crc stamping, corruption quarantine, concurrent writers
+# ---------------------------------------------------------------------------
+
+
+def _store_one(cache, key="k0", strategy="segment"):
+    from repro.core.policy import PhiPolicy
+
+    cache.store(key, PhiPolicy(strategy=strategy), 0.01, "grid")
+
+
+def test_cache_roundtrip_has_crc(tmp_path):
+    path = str(tmp_path / "cache.json")
+    c = AutotuneCache(path)
+    _store_one(c)
+    data = json.load(open(path))
+    assert isinstance(data.get("crc32"), str)
+    c2 = AutotuneCache(path)
+    assert c2.lookup("k0") is not None
+    assert c2.n_crc_failures == 0
+
+
+def test_cache_corrupt_body_loads_empty(tmp_path):
+    path = str(tmp_path / "cache.json")
+    c = AutotuneCache(path)
+    _store_one(c)
+    data = json.load(open(path))
+    data["entries"]["k0"]["seconds"] = 99.0  # tampered body, stale crc
+    json.dump(data, open(path, "w"))
+    c2 = AutotuneCache(path)
+    assert c2.entries == {} and c2.n_crc_failures == 1
+    _store_one(c2, "k1")  # still usable: next save rewrites a valid file
+    assert AutotuneCache(path).lookup("k1") is not None
+
+
+def test_cache_legacy_file_without_crc_accepted(tmp_path):
+    path = str(tmp_path / "cache.json")
+    c = AutotuneCache(path)
+    _store_one(c)
+    data = json.load(open(path))
+    del data["crc32"]
+    json.dump(data, open(path, "w"))
+    c2 = AutotuneCache(path)
+    assert c2.lookup("k0") is not None and c2.n_crc_failures == 0
+
+
+def test_cache_concurrent_writers_leave_valid_file(tmp_path):
+    """N threads hammering store() on the same path must end with a
+    parseable, crc-valid cache file (atomic rename: last writer wins,
+    no interleaved torn writes)."""
+    path = str(tmp_path / "cache.json")
+    errs = []
+
+    def writer(i):
+        try:
+            c = AutotuneCache(path)
+            for j in range(5):
+                _store_one(c, key=f"w{i}-{j}")
+        except Exception as e:  # pragma: no cover - the failure under test
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errs == []
+    final = AutotuneCache(path)
+    assert final.n_crc_failures == 0
+    assert len(final.entries) >= 5  # at least one writer's full batch
+
+
+def test_heuristic_fallback_never_served_as_grid(tmp_path):
+    """The inf-probe fix: a heuristic placeholder (nothing measured) is
+    stored with seconds=None/source='heuristic' and must not satisfy a
+    source='grid' lookup — a measuring tuner re-probes it instead of
+    serving a winner that was never timed."""
+    from repro.core.policy import PhiPolicy
+
+    path = str(tmp_path / "cache.json")
+    c = AutotuneCache(path)
+    c.store("k0", PhiPolicy(strategy="segment"), float("inf"), "heuristic")
+    assert c.lookup("k0", source="grid") is None
+    assert c.lookup("k0") is not None
+    assert json.load(open(path))["entries"]["k0"]["seconds"] is None
+
+
+# ---------------------------------------------------------------------------
+# RecoveryEvent bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_recovery_event_roundtrips_through_checkpoint(tmp_path):
+    import dataclasses
+
+    ev = resilience.RecoveryEvent("demote_kernel", outer=3, mode=1,
+                                  attempt=0, detail={"action": "a->b"})
+    path = str(tmp_path / "ck.npz")
+    st = _state()
+    st["recoveries"] = [dataclasses.asdict(ev)]
+    resilience.save_checkpoint(path, st)
+    back = resilience.load_checkpoint(path)["recoveries"]
+    assert resilience.RecoveryEvent(**back[0]) == ev
