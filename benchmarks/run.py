@@ -31,6 +31,7 @@ def _load_all():
     """Import the bench modules (pulls in jax) after env flags are set."""
     from . import (
         bench_breakdown,
+        bench_cutout,
         bench_fused,
         bench_guard,
         bench_mttkrp,
@@ -52,6 +53,7 @@ def _load_all():
         "sharded": bench_sharded.run,      # PR 2: multi-device sharded Phi
         "rebalance": bench_rebalance.run,  # PR 4: rebalancing + sharded Pi
         "guard": bench_guard.run,          # PR 6: numerical-guard overhead
+        "cutout": bench_cutout.run,        # PR 7: model-guided cold tuning
         "modes": bench_modes.run,          # Exp. 6 / Figs. 14-15
         "stream": bench_stream.run,        # Exp. 7 / Figs. 16-17
         "mttkrp": bench_mttkrp.run,        # Exp. 8 / Figs. 18-19
@@ -116,11 +118,18 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
     CP-APR solve seconds with the PR-6 numerical guard on vs off and the
     per-tensor ``overhead_frac`` (guard_s/no_guard_s - 1), with the
     geomean surfaced as ``summary.guard_overhead_frac`` — the acceptance
-    bar is <= 2% on the quick tier.
+    bar is <= 2% on the quick tier.  Schema 7 adds the ``model`` section
+    (see ``bench_cutout``): the model-guided tuner's cold-start receipt —
+    probes per cold key under the full measured grid vs the
+    roofline-pruned tuner, ``probe_reduction`` (the >= 5x acceptance
+    bar), per-key winner matches / measured regret vs the full grid,
+    fixture x strategy-family cell matches, the count of keys served
+    model-only with zero probes, and the calibrated model-vs-measured
+    error percentiles that drive the pruning bound.
     """
-    out: dict = {"schema": 6, "generated_unix": time.time(),
+    out: dict = {"schema": 7, "generated_unix": time.time(),
                  "breakdown": {}, "policy": {}, "fused": {}, "sharded": {},
-                 "rebalance": {}, "guard": {}, "summary": {}}
+                 "rebalance": {}, "guard": {}, "model": {}, "summary": {}}
     found = False
 
     rows = _load_rows("breakdown")
@@ -219,6 +228,38 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
             elif r.get("summary") == "geomean":
                 out["summary"]["guard_overhead_frac"] = \
                     r["guard_overhead_frac"]
+
+    rows = _load_rows("cutout")
+    if rows:
+        found = True
+        per_key = [r for r in rows if "tensor" in r]
+        out["model"]["keys"] = {
+            f"{r['tensor']}:{r['mode']}": {
+                k: r[k] for k in (
+                    "nnz", "n_candidates", "probes_full", "probes_model",
+                    "winner_full", "winner_model", "source_model",
+                    "model_s", "measured_s", "regret", "match",
+                    "family_regrets")
+                if k in r
+            }
+            for r in per_key
+        }
+        summ = next((r for r in rows if r.get("summary") == "totals"), None)
+        if summ:
+            keep = ("cold_keys", "probes_full", "probes_model",
+                    "probes_per_cold_key_full", "probes_per_cold_key_model",
+                    "probe_reduction", "model_served", "winner_match",
+                    "family_match", "winner_regret_geomean",
+                    "model_error_rel_p50", "model_error_rel_p95",
+                    "model_error_p95_log", "calibration_n")
+            out["model"].update({k: summ[k] for k in keep if k in summ})
+            out["summary"]["probe_reduction"] = summ.get("probe_reduction")
+            out["summary"]["model_winner_regret"] = \
+                summ.get("winner_regret_geomean")
+            if (summ.get("probe_reduction") or 0) < 5.0:
+                print("[benchmarks] WARNING: model-guided probe reduction "
+                      f"{summ.get('probe_reduction')}x is below the 5x bar",
+                      flush=True)
 
     if not found:
         return None

@@ -70,7 +70,15 @@ from .policy import PhiPolicy, default_policy
 from .resilience import STRATEGY_DEMOTION, RecoveryEvent
 from .sparse_tensor import KTensor, ModeView, SparseTensor, random_ktensor, sort_mode
 
-__all__ = ["CPAPRConfig", "CPAPRResult", "cpapr_mu", "poisson_loglik", "kkt_violation"]
+__all__ = [
+    "CPAPRConfig",
+    "CPAPRResult",
+    "ModeCutout",
+    "cpapr_mu",
+    "extract_mode_cutout",
+    "poisson_loglik",
+    "kkt_violation",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,6 +204,61 @@ def hoisted_mode_inputs(mv: ModeView, factors, strategy: str, layout, pig):
     else:
         vals_e = pi_e = None
     return pi, vals_e, pi_e
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeCutout:
+    """One mode's fused-MU burst problem, cut out of the solver.
+
+    The (rows, vals, Pi, B) quadruple that :func:`_make_mode_update`'s
+    inner ``while_loop`` consumes, extracted as a standalone problem (the
+    DaCe cutout-tuner shape): a tuner or benchmark can lower and measure
+    the MU burst on exactly the arrays the solver would feed it — same
+    sorted mode view, same hoisted Pi gather, same scaled factor —
+    without paying for a whole decomposition per probe.  Policy-dependent
+    layout expansion (``vals_e``/``pi_e``) is deliberately NOT part of
+    the cutout: it differs per candidate and the autotuner hoists it per
+    probe, exactly as the solver hoists it per mode update.
+    """
+
+    mode: int
+    rows: jax.Array  # (nnz,) sorted row ids
+    vals: jax.Array  # (nnz,) values in sorted order
+    pi: jax.Array  # (nnz, R) Khatri-Rao rows (hoisted gather)
+    b: jax.Array  # (I_n, R) scaled factor  B = A_n * lam
+    n_rows: int
+    rank: int
+    stats: "object"  # layout.ModeStats of the sorted rows
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+
+def extract_mode_cutout(t: SparseTensor, kt: KTensor, mode: int) -> ModeCutout:
+    """Extract :class:`ModeCutout` for ``mode`` of ``(t, kt)``.
+
+    Reuses the solver's own plumbing — :func:`sort_mode` for the mode
+    view, :func:`hoisted_mode_inputs` for the Pi gather (strategy
+    ``"segment"``: no layout expansion, Pi itself is policy-independent),
+    :func:`mode_run_stats` for the segment-run statistics the heuristic
+    and the autotune key consume — so the cutout cannot drift from what
+    ``cpapr_mu`` actually runs.
+    """
+    mv = sort_mode(t, mode)
+    pi, _, _ = hoisted_mode_inputs(mv, kt.factors, "segment", None, None)
+    b = kt.factors[mode] * kt.lam[None, :]
+    stats = mode_run_stats(np.asarray(mv.rows), mv.n_rows)
+    return ModeCutout(
+        mode=mode,
+        rows=mv.rows,
+        vals=mv.sorted_vals,
+        pi=pi,
+        b=b,
+        n_rows=mv.n_rows,
+        rank=int(kt.rank),
+        stats=stats,
+    )
 
 
 def kkt_violation(b: jax.Array, phi: jax.Array) -> jax.Array:

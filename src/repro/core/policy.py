@@ -34,6 +34,8 @@ __all__ = [
     "grid_search",
     "probe_error_is_retryable",
     "heuristic_policy",
+    "model_ambiguous_prefix",
+    "model_top_k",
     "vmem_footprint_bytes",
     "SEARCH_ERRORS",
 ]
@@ -156,6 +158,71 @@ def grid_search(
         results.append((p, secs, err))
     results.sort(key=lambda x: x[1])
     return results
+
+
+def model_top_k(
+    scored: Sequence[tuple],
+    k: int = 3,
+    per_family: bool = True,
+) -> list:
+    """Prune model-scored candidates to the K worth measuring.
+
+    ``scored`` is ``[(policy, model_seconds)]``; non-finite scores (model
+    failures) are dropped.  With ``per_family`` (default) the model-best
+    candidate of every strategy family keeps a slot before global ranking
+    fills the rest — the roofline model ranks *across* families far more
+    reliably than *within* the blocked family's block-size neighborhood,
+    and family winners are what the conformance/regret harnesses compare.
+    Returns ``[(policy, model_seconds)]`` sorted fastest-predicted-first.
+    """
+    finite = sorted((x for x in scored if np.isfinite(x[1])),
+                    key=lambda x: x[1])
+    if k <= 0 or not finite:
+        return []
+    if not per_family:
+        return finite[:k]
+    picked, seen_fam = [], set()
+    for pol, s in finite:  # one slot per family first, in model order
+        if pol.strategy not in seen_fam:
+            seen_fam.add(pol.strategy)
+            picked.append((pol, s))
+        if len(picked) >= k:
+            break
+    if len(picked) < k:
+        chosen = {id(p) for p, _ in picked}
+        for pol, s in finite:
+            if id(pol) not in chosen:
+                picked.append((pol, s))
+                chosen.add(id(pol))
+            if len(picked) >= k:
+                break
+    picked.sort(key=lambda x: x[1])
+    return picked
+
+
+def model_ambiguous_prefix(
+    ranked: Sequence[tuple],
+    bound_factor: float,
+    cap: int = 3,
+) -> list:
+    """The prefix of model-ranked candidates the model cannot separate.
+
+    ``ranked`` is ``[(policy, model_seconds)]`` fastest-predicted-first
+    (e.g. the output of :func:`model_top_k`); ``bound_factor`` is a
+    multiplicative error bound (>= 1): candidates whose predicted time is
+    within ``bound_factor`` of the predicted best are *ambiguous* — the
+    model's trailing error cannot rule them out — and must be measured.
+    A prefix of length 1 means the predicted margin to the runner-up
+    exceeds the error bound: the key can be served model-only.
+    """
+    if not ranked:
+        return []
+    best = ranked[0][1]
+    out = [ranked[0]]
+    for pol, s in ranked[1:cap]:
+        if s <= best * max(bound_factor, 1.0):
+            out.append((pol, s))
+    return out
 
 
 def heuristic_policy(

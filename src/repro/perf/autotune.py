@@ -19,6 +19,21 @@ The paper shows grid search over the parallel policy gives 2.25x (CPU) /
     same loop shape ``cpapr_mu`` runs — so the measurement captures the
     revisit/cache effects a one-shot call misses (set ``burst=1`` for
     the legacy single-call probe);
+  * **model-guided probe pruning** (``model_guided=True``, the default
+    for measuring tuners): every candidate's burst program is
+    AOT-compiled, costed with :func:`repro.perf.hlo_costs.module_costs`,
+    and scored with the 3-term roofline
+    (:func:`repro.perf.roofline.roofline_terms`) against a
+    :class:`HardwareSpec` detected from the *actual* backend.  Only the
+    model's top-K candidates (family winners guaranteed a slot — see
+    :func:`repro.core.policy.model_top_k`) are measured, reusing the
+    already-compiled executables, so pruning never pays a second
+    compile.  Entries record ``model_s``/``measured_s``; once the
+    store holds enough (model, measured) pairs to calibrate a trailing
+    error bound, keys whose predicted margin between the top two
+    candidates exceeds that bound are served **model-only with zero
+    probes** (``source="model"``) — cold keys under production traffic
+    then cost one compile pass, no timing loops at all;
   * when measurement is disabled or every probe fails it falls back to
     a migrated v1 winner (if one is quarantined for the same problem) or
     :func:`repro.core.policy.heuristic_policy`; probe failure reasons are
@@ -70,9 +85,12 @@ import numpy as np
 from repro.core.layout import ModeStats, build_blocked_layout, mode_run_stats
 from repro.core.phi import expand_to_layout, phi_mu_step
 from repro.core.policy import (
+    SEARCH_ERRORS,
     PhiPolicy,
     grid_search,
     heuristic_policy,
+    model_ambiguous_prefix,
+    model_top_k,
     vmem_footprint_bytes,
 )
 
@@ -374,22 +392,26 @@ class AutotuneCache:
 
     # -- lookup / store ---------------------------------------------------
     def lookup(
-        self, key: str, source: str | None = None, fresh: bool = False
+        self, key: str, source: "str | tuple | None" = None,
+        fresh: bool = False,
     ) -> PhiPolicy | None:
         """Cached policy for ``key``.
 
-        With ``source`` set, only entries tuned that way (e.g. ``"grid"``)
-        count — used to re-tune heuristic placeholders once measurement
-        becomes available.  With ``fresh=True``, entries whose staleness
-        metadata (schema / jax version / device kind) mismatches the
-        current process are skipped too — a measuring tuner re-tunes them,
-        a non-measuring one still serves them.
+        With ``source`` set (one name or a tuple of acceptable names),
+        only entries tuned that way (e.g. ``"grid"``, ``("grid",
+        "model")``) count — used to re-tune heuristic placeholders once
+        measurement becomes available.  With ``fresh=True``, entries
+        whose staleness metadata (schema / jax version / device kind)
+        mismatches the current process are skipped too — a measuring
+        tuner re-tunes them, a non-measuring one still serves them.
         """
         e = self.entries.get(key)
         if e is None:
             return None
-        if source is not None and e.get("source") != source:
-            return None
+        if source is not None:
+            accept = (source,) if isinstance(source, str) else tuple(source)
+            if e.get("source") not in accept:
+                return None
         if fresh and self.entry_is_stale(e):
             return None
         try:
@@ -409,6 +431,7 @@ class AutotuneCache:
         probe: str | None = None,
         burst: int | None = None,
         probe_errors: list | None = None,
+        extra: dict | None = None,
     ) -> None:
         entry = {
             "policy": _policy_to_json(policy),
@@ -427,9 +450,59 @@ class AutotuneCache:
             entry["burst"] = burst
         if probe_errors:
             entry["probe_errors"] = probe_errors
+        if extra:
+            # model-guided provenance (model_s / measured_s / probes /
+            # margin...) — plain JSON scalars only
+            entry.update(extra)
         self.entries[key] = entry
         self._evict_lru()
         self.save()
+
+    # -- model calibration ------------------------------------------------
+    def model_error_stats(self, device_kind: str | None = None) -> dict:
+        """Trailing model-vs-measured error over this store's entries.
+
+        Every *probed* model-guided entry records the winner's roofline
+        estimate (``model_s``) next to its measured time (``measured_s``).
+        The roofline is systematically off by a hardware-efficiency
+        factor (XLA:CPU does not hit spec-sheet peaks), so the useful
+        error is *calibrated*: with ``r = measured/model``, the median of
+        ``r`` is the scale bias and ``|ln(r / median_r)|`` the residual
+        dispersion — what actually limits the model's ability to rank.
+        Returns ``{n, median_ratio, p50_log_err, p95_log_err,
+        rel_err_p50, rel_err_p95}`` (the ``rel_err_*`` columns are the
+        raw uncalibrated ``|model - measured| / measured`` percentiles,
+        reported in BENCH_phi.json).  Only entries from the same device
+        kind count; ``n == 0`` means no calibration data yet.
+        """
+        if device_kind is None:
+            device_kind = current_device_kind()
+        ratios = []
+        for e in self.entries.values():
+            if e.get("device_kind") != device_kind:
+                continue
+            m, s = e.get("model_s"), e.get("measured_s")
+            if (
+                isinstance(m, (int, float)) and isinstance(s, (int, float))
+                and np.isfinite(m) and np.isfinite(s) and m > 0 and s > 0
+            ):
+                ratios.append(s / m)
+        if not ratios:
+            return {"n": 0, "median_ratio": None, "p50_log_err": None,
+                    "p95_log_err": None, "rel_err_p50": None,
+                    "rel_err_p95": None}
+        r = np.asarray(ratios, np.float64)
+        med = float(np.median(r))
+        log_err = np.abs(np.log(r / med))
+        rel = np.abs(r - 1.0)  # |measured - model| / model, uncalibrated
+        return {
+            "n": int(r.size),
+            "median_ratio": med,
+            "p50_log_err": float(np.percentile(log_err, 50)),
+            "p95_log_err": float(np.percentile(log_err, 95)),
+            "rel_err_p50": float(np.percentile(rel, 50)),
+            "rel_err_p95": float(np.percentile(rel, 95)),
+        }
 
     # -- v1 migration -----------------------------------------------------
     def quarantined_policy(self, key: str) -> PhiPolicy | None:
@@ -581,7 +654,27 @@ class Autotuner:
       * ``n_grid_searches`` — misses that actually ran timed probes.
       * ``n_migrated`` — misses resolved by adopting a quarantined v1
         winner under its v2 key.
+      * ``n_probes`` — individual timed policy probes (the cost the
+        model-guided pruning exists to cut).
+      * ``n_model_served`` — misses answered by the roofline model alone
+        (zero probes: the predicted top-2 margin beat the trailing
+        calibrated error bound).
+
+    Model-guided knobs (measuring tuners only):
+      * ``model_guided`` — score candidates with the roofline model and
+        measure only the top-``model_top_k`` (family winners always keep
+        a slot).  Falls back to the full measured grid whenever model
+        scoring fails outright.
+      * ``model_min_samples`` — (model_s, measured_s) pairs the store
+        must hold before model-only serving is allowed.
+      * ``model_margin_factor`` — how many calibrated p95 log-errors the
+        predicted top-2 margin must exceed to skip probing entirely.
     """
+
+    #: never trust the model to separate candidates closer than 25% even
+    #: when the trailing error says it could — timing jitter alone can
+    #: produce a deceptively small trailing p95 on few samples.
+    MODEL_MIN_LOG_ERR = float(np.log(1.25))
 
     def __init__(
         self,
@@ -595,6 +688,10 @@ class Autotuner:
         include_pallas: bool | None = None,
         cache_max_entries: int | None = None,
         cache_max_age_days: float | None = None,
+        model_guided: bool = True,
+        model_top_k: int = 3,
+        model_min_samples: int = 3,
+        model_margin_factor: float = 1.25,
     ):
         self.cache = AutotuneCache(cache_path, max_entries=cache_max_entries,
                                    max_age_days=cache_max_age_days)
@@ -607,13 +704,106 @@ class Autotuner:
         self.vmem_budget = vmem_budget
         self.platform = platform
         self.include_pallas = include_pallas
+        self.model_guided = model_guided
+        self.model_top_k = int(model_top_k)
+        if self.model_top_k < 1:
+            raise ValueError(f"model_top_k must be >= 1, got {model_top_k}")
+        self.model_min_samples = int(model_min_samples)
+        self.model_margin_factor = float(model_margin_factor)
+        self._hw = None  # detected HardwareSpec, resolved lazily once
         self.n_hits = 0
         self.n_searches = 0
         self.n_grid_searches = 0
         self.n_migrated = 0
+        self.n_probes = 0
+        self.n_model_served = 0
+
+    def hardware_spec(self):
+        """The roofline HardwareSpec for this tuner's backend (detected
+        from the actual platform, not an assumed TPU; cached)."""
+        if self._hw is None:
+            from repro.perf.roofline import detect_hardware_spec
+
+            self._hw = detect_hardware_spec(self.platform)
+        return self._hw
 
     # -- measurement ------------------------------------------------------
-    def _time_policy(self, pol: PhiPolicy, rows, vals, pi, b, n_rows: int):
+    @staticmethod
+    def _probe_args(pol: PhiPolicy, rows, vals, pi, n_rows: int):
+        """(layout, vals_e, pi_e) for one probe — the hoisted per-mode
+        prologue the solver runs once per mode update."""
+        if pol.strategy in ("blocked", "pallas"):
+            layout = build_blocked_layout(
+                np.asarray(rows), n_rows, pol.block_nnz, pol.block_rows
+            )
+            vals_e, pi_e = expand_to_layout(layout, vals, pi)
+            return layout, vals_e, pi_e
+        return None, None, None
+
+    def _model_score(self, pol: PhiPolicy, rows, vals, pi, b, n_rows: int):
+        """Roofline estimate of one fused MU step under ``pol``.
+
+        AOT-compiles the burst program (``jit.lower(...).compile()`` —
+        deliberately *not* the jit call cache, so the executable can be
+        handed to :meth:`_time_policy` and measured without a second
+        compile), parses the optimized HLO with
+        :func:`repro.perf.hlo_costs.module_costs`, and combines the
+        3-term roofline against the detected :class:`HardwareSpec`.
+
+        Returns ``(model_s, runner)`` where ``runner`` is a zero-arg
+        callable executing one burst.  ``model_s`` is in *model seconds*:
+        the burst ``while_loop``'s trip count is not visible in the
+        optimized HLO (the body is costed once), and XLA:CPU does not
+        reach spec-sheet peaks — both are uniform multiplicative biases
+        that the store's median-ratio calibration absorbs
+        (:meth:`AutotuneCache.model_error_stats`), so only the *ranking*
+        has to be right here.
+        """
+        from repro.perf.hlo_costs import module_costs
+        from repro.perf.roofline import roofline_terms
+
+        layout, vals_e, pi_e = self._probe_args(pol, rows, vals, pi, n_rows)
+        if self.burst > 1:
+            lowered = _jit_mu_burst.lower(
+                rows, vals, pi, b, vals_e, pi_e, n_rows=n_rows,
+                strategy=pol.strategy, layout=layout, burst=self.burst,
+            )
+        else:
+            lowered = _jit_mu_step.lower(
+                rows, vals, pi, b, vals_e, pi_e, n_rows=n_rows,
+                strategy=pol.strategy, layout=layout,
+            )
+        compiled = lowered.compile()
+        mc = module_costs(compiled.as_text())
+        hw = self.hardware_spec()
+        terms = roofline_terms(mc.flops, mc.bytes, mc.wire_bytes, n_chips=1,
+                               hw=hw)
+        # 3-term roofline + the small-problem overheads the roofline is
+        # blind to: per-dispatch cost for large-result instructions,
+        # serial-loop iteration cost for small-result ones (XLA:CPU's
+        # while-loop form of scatter/segment reductions), and serial
+        # scatter updates (zero coefficients on TPU specs = pure
+        # roofline).
+        n_large = mc.exec_instructions - mc.exec_small_instructions
+        model_s = (
+            terms.bound_s
+            + n_large * hw.op_overhead_s
+            + mc.exec_small_instructions * hw.serial_instr_s
+            + mc.scatter_elems * hw.scatter_elem_s
+        )
+        if not (np.isfinite(model_s) and model_s > 0):
+            raise ValueError(
+                f"empty cost model for {pol.label()}: flops={mc.flops} "
+                f"bytes={mc.bytes}"
+            )
+
+        def runner():
+            return compiled(rows, vals, pi, b, vals_e, pi_e)
+
+        return model_s, runner
+
+    def _time_policy(self, pol: PhiPolicy, rows, vals, pi, b, n_rows: int,
+                     runner=None):
         """Median seconds of one fused MU step under ``pol``.
 
         The default probe runs ``self.burst`` steps in one jitted
@@ -624,16 +814,23 @@ class Autotuner:
         hoists them out of the inner loop too (one per mode update).  The
         per-nonzero arrays are jit *arguments*, never closure constants:
         XLA embeds closed-over arrays as literals, which distorts CPU
-        timings by an order of magnitude."""
+        timings by an order of magnitude.
+
+        ``runner`` (from :meth:`_model_score`) is an already-AOT-compiled
+        burst executable for this exact policy: timing it skips the jit
+        path so a model-pruned candidate is never compiled twice."""
         from repro.perf.timing import bench_burst_seconds, bench_seconds
 
-        if pol.strategy in ("blocked", "pallas"):
-            layout = build_blocked_layout(
-                np.asarray(rows), n_rows, pol.block_nnz, pol.block_rows
-            )
-            vals_e, pi_e = expand_to_layout(layout, vals, pi)
-        else:
-            layout = vals_e = pi_e = None
+        self.n_probes += 1
+        if runner is not None:
+            if self.burst > 1:
+                return bench_burst_seconds(
+                    runner, burst=self.burst, pass_burst=False,
+                    warmup=self.warmup, iters=self.iters,
+                )
+            return bench_seconds(runner, warmup=self.warmup,
+                                 iters=self.iters)
+        layout, vals_e, pi_e = self._probe_args(pol, rows, vals, pi, n_rows)
 
         if self.burst > 1:
             return bench_burst_seconds(
@@ -666,6 +863,66 @@ class Autotuner:
             iters=self.iters,
         )
 
+    def _model_rank(self, cands, rows, vals, pi, b, n_rows: int):
+        """Score every candidate with the roofline model.
+
+        Returns ``(scored, runners, errors)``: ``scored`` is
+        ``[(policy, model_s)]`` fastest-predicted-first for the
+        candidates that scored, ``runners`` maps ``policy.label()`` to
+        the AOT-compiled burst executable, and ``errors`` records why the
+        rest failed (same shape as probe errors, tagged ``model:``).  An
+        empty ``scored`` means the model is unusable for this problem and
+        the caller must fall back to the full measured grid.
+        """
+        scored, runners, errors = [], {}, []
+        for p in cands:
+            try:
+                s, runner = self._model_score(p, rows, vals, pi, b, n_rows)
+            except SEARCH_ERRORS as e:
+                errors.append(f"{p.label()}: model: {type(e).__name__}: {e}")
+                continue
+            scored.append((p, s))
+            runners[p.label()] = runner
+        scored.sort(key=lambda x: x[1])
+        return scored, runners, errors
+
+    def _model_serve_or_prune(self, key, scored, stats, n_cands: int):
+        """Decide what the model ranking buys for one cold key.
+
+        Returns a :class:`PhiPolicy` when the key can be served
+        model-only — the predicted margin between the top two candidates
+        exceeds the store's trailing calibrated error bound
+        (floored at :data:`MODEL_MIN_LOG_ERR`), so measuring could not
+        responsibly overturn the prediction; the entry is stored with
+        ``source="model"`` and zero probes.  Otherwise returns the
+        *ambiguous prefix* of the model's top-K — the candidates the
+        error bound cannot separate, which are the only ones worth
+        timing.
+        """
+        top = model_top_k(scored, k=self.model_top_k)
+        est = self.cache.model_error_stats()
+        if est["n"] < self.model_min_samples or len(top) < 2:
+            return top  # not calibrated yet (or nothing to separate)
+        log_err = max(est["p95_log_err"], self.MODEL_MIN_LOG_ERR)
+        bound = float(np.exp(self.model_margin_factor * log_err))
+        prefix = model_ambiguous_prefix(top, bound, cap=self.model_top_k)
+        if len(prefix) > 1:
+            return prefix
+        pol, model_s = prefix[0]
+        self.n_model_served += 1
+        self.cache.store(
+            key, pol, float("inf"), "model", stats=stats,
+            extra={
+                "model_s": model_s,
+                "probes": 0,
+                "n_candidates": n_cands,
+                "model_margin": top[1][1] / model_s,
+                "model_error_bound": bound,
+                "calibration_n": est["n"],
+            },
+        )
+        return pol
+
     def _tune_key(self, key: str, rows, vals, pi, b, n_rows: int,
                   rank: int, platform: str, stats: ModeStats | None = None,
                   v1_key: str | None = None) -> PhiPolicy:
@@ -679,9 +936,11 @@ class Autotuner:
         # A heuristic placeholder (stored when measurement was disabled or
         # every probe failed), a stale entry (other jax version / device
         # kind / schema), or a migrated-v1 policy does not satisfy a
-        # measuring tuner — re-tune instead of pinning it forever.
+        # measuring tuner — re-tune instead of pinning it forever.  A
+        # model-served entry does: it was written by a measuring tuner
+        # whose calibrated margin test passed.
         hit = (
-            self.cache.lookup(key, source="grid", fresh=True)
+            self.cache.lookup(key, source=("grid", "model"), fresh=True)
             if self.measure
             else self.cache.lookup(key)
         )
@@ -699,6 +958,7 @@ class Autotuner:
         probe = ("burst" if self.burst > 1 else "single") if self.measure \
             else None
         probe_errors: list = []
+        extra: dict = {}
         if self.measure:
             cands = candidate_policies(
                 nnz,
@@ -709,16 +969,42 @@ class Autotuner:
                 include_pallas=self.include_pallas,
                 stats=stats,
             )
+            to_measure, runners, scored = cands, {}, None
+            extra = {"probes": len(cands), "n_candidates": len(cands)}
+            if self.model_guided:
+                scored, runners, model_errors = self._model_rank(
+                    cands, rows, vals, pi, b, n_rows
+                )
+                probe_errors += model_errors
+                if scored:  # at least one candidate scored: prune
+                    served = self._model_serve_or_prune(key, scored, stats,
+                                                        len(cands))
+                    if isinstance(served, PhiPolicy):
+                        return served
+                    to_measure = [p for p, _ in served]
+                    extra = {
+                        "probes": len(to_measure),
+                        "n_candidates": len(cands),
+                        "model_pruned": len(cands) - len(to_measure),
+                    }
             self.n_grid_searches += 1
             ranked = grid_search(
-                lambda p: self._time_policy(p, rows, vals, pi, b, n_rows), cands
+                lambda p: self._time_policy(p, rows, vals, pi, b, n_rows,
+                                            runner=runners.get(p.label())),
+                to_measure,
             )
-            probe_errors = [
+            probe_errors += [
                 f"{p.label()}: {err}" for p, _, err in ranked if err is not None
             ]
             if ranked and np.isfinite(ranked[0][1]):
                 best_p, best_s, _ = ranked[0]
                 source = "grid"
+                if scored:
+                    model_by_label = {p.label(): s for p, s in scored}
+                    ms = model_by_label.get(best_p.label())
+                    if ms is not None:
+                        extra["model_s"] = ms
+                        extra["measured_s"] = best_s
         if best_p is None and migrated is not None:
             # v1 migration path: adopt the old winner (it keeps its v1
             # provenance, so a later measuring tuner still re-tunes it).
@@ -737,7 +1023,7 @@ class Autotuner:
         self.cache.store(key, best_p, best_s, source, stats=stats,
                          probe=probe,
                          burst=self.burst if probe is not None else None,
-                         probe_errors=probe_errors)
+                         probe_errors=probe_errors, extra=extra)
         return best_p
 
     # -- public API -------------------------------------------------------
@@ -783,6 +1069,19 @@ class Autotuner:
         v1_key = policy_key(nnz, n_rows, rank, platform)
         return self._tune_key(key, rows, vals, pi, b, n_rows, rank, platform,
                               stats=stats, v1_key=v1_key)
+
+    def policy_for_cutout(self, cutout) -> PhiPolicy:
+        """Tuned policy for a :class:`repro.core.cpapr.ModeCutout`.
+
+        The cutout carries exactly the arrays the solver's per-mode
+        update consumes (sorted rows/vals, hoisted Pi, scaled factor,
+        run stats), so tuning it is tuning the real mode problem —
+        lowered and measured in isolation instead of inside a solve.
+        """
+        return self.policy_for_mode(
+            cutout.rows, cutout.vals, cutout.pi, cutout.b,
+            n_rows=cutout.n_rows, rank=cutout.rank, stats=cutout.stats,
+        )
 
     def policy_for_sharded_mode(
         self,

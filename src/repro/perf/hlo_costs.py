@@ -190,6 +190,27 @@ class ModuleCosts:
     wire_by_kind: dict
     count_by_kind: dict
     unknown_trip_loops: int
+    # Trip-weighted count of *executed* top-level instructions (a fusion
+    # counts once, its internals don't; while bodies multiply by their
+    # trip count; parameters/constants/GTEs are structural and free).
+    # Each is roughly one kernel dispatch on XLA:CPU — the per-dispatch
+    # overhead term the pure flops/bytes roofline cannot see, and what
+    # makes a many-small-blocks policy slow at equal padded work.
+    exec_instructions: float = 0.0
+    # The subset of exec_instructions whose result is tiny (<= 256
+    # elements).  A long-trip while loop over row-sized values is how
+    # XLA:CPU expresses a serial scatter/segment reduction: its body
+    # "instructions" are iterations of one compiled loop (~tens of ns
+    # each), not kernel dispatches (~1us each).  Splitting the count by
+    # result size lets a model charge the two populations differently.
+    exec_small_instructions: float = 0.0
+    # Trip-weighted update-element count of scatter ops.  When a scatter
+    # survives as an HLO op it executes as a serial per-update loop, so
+    # its cost scales with update *elements*, far above the bytes/bw
+    # charge.  (XLA:CPU often rewrites the scatter into an explicit
+    # while loop instead — that form is captured by
+    # exec_small_instructions.)
+    scatter_elems: float = 0.0
 
     @property
     def wire_bytes(self) -> float:
@@ -338,6 +359,31 @@ def module_costs(txt: str, assume_fused_elementwise: bool = True) -> ModuleCosts
 
     memo: dict = {}
 
+    _FREE_OPS = ("parameter", "constant", "get-tuple-element", "tuple",
+                 "after-all")
+
+    def exec_elems(ins: Instr, shapes: dict) -> float:
+        """Effective result size of one executed instruction, for the
+        small/large split.  An in-place dynamic-update-slice (bare or as
+        a fusion root) carries the FULL array in its result type but only
+        writes the update slice — per-row DUS inside a serial reduction
+        loop is the canonical case — so charge the update's size."""
+        if ins.op == "dynamic-update-slice" and len(ins.operands) > 1:
+            return _elems(shapes.get(ins.operands[1], ""))
+        if ins.op == "fusion":
+            cm = _CALLED_RE.search(ins.line)
+            if cm:
+                sub = comps.get(cm.group(1).split(",")[0].strip(" %"), [])
+                dus = [i2 for i2 in sub if i2.op == "dynamic-update-slice"]
+                if dus:
+                    inner = {i2.name: i2.type_str for i2 in sub}
+                    return max(
+                        (_elems(inner.get(d.operands[1], ""))
+                         for d in dus if len(d.operands) > 1),
+                        default=_elems(ins.type_str),
+                    )
+        return _elems(ins.type_str)
+
     def cost_of(name: str, inside_fusion: bool):
         key = (name, inside_fusion)
         if key in memo:
@@ -346,18 +392,32 @@ def module_costs(txt: str, assume_fused_elementwise: bool = True) -> ModuleCosts
         byts = 0.0
         wire: dict = defaultdict(float)
         counts: dict = defaultdict(float)
+        instrs = 0.0
+        small = 0.0
+        scat = 0.0
         shapes = {i.name: i.type_str for i in comps.get(name, [])}
         for ins in comps.get(name, []):
             op = ins.op
+            # executed-dispatch count: structural ops are free, fusion
+            # internals are covered by the fusion's own single dispatch
+            if op not in _FREE_OPS and not inside_fusion:
+                instrs += 1.0
+                if exec_elems(ins, shapes) <= 256.0:
+                    small += 1.0
+            if op == "scatter" and len(ins.operands) >= 3:
+                scat += _elems(shapes.get(ins.operands[2], ""))
             # --- control flow ---------------------------------------------
             if op == "while":
                 bm = re.search(r"body=%?([\w.\-]+)", ins.line)
                 cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
                 trips = trip_count(cm.group(1)) if cm else 1.0
                 if bm:
-                    f, b, w, c = cost_of(bm.group(1), False)
+                    f, b, w, c, n_i, n_s, sc = cost_of(bm.group(1), False)
                     flops += f * trips
                     byts += b * trips
+                    instrs += n_i * trips
+                    small += n_s * trips
+                    scat += sc * trips
                     for k, v in w.items():
                         wire[k] += v * trips
                     for k, v in c.items():
@@ -368,8 +428,9 @@ def module_costs(txt: str, assume_fused_elementwise: bool = True) -> ModuleCosts
                 cm = _CALLED_RE.search(ins.line)
                 if op == "fusion" and cm:
                     sub_name = cm.group(1).split(",")[0].strip(" %")
-                    f, _b, w, c = cost_of(sub_name, True)
+                    f, _b, w, c, _n, _s, sc = cost_of(sub_name, True)
                     flops += f
+                    scat += sc
                     for k, v in w.items():
                         wire[k] += v
                     for k, v in c.items():
@@ -389,9 +450,13 @@ def module_costs(txt: str, assume_fused_elementwise: bool = True) -> ModuleCosts
                     continue
                 if op in ("call", "conditional") and cm:
                     for sub in cm.group(1).split(","):
-                        f, b, w, c = cost_of(sub.strip(" %"), inside_fusion)
+                        f, b, w, c, n_i, n_s, sc = cost_of(sub.strip(" %"),
+                                                           inside_fusion)
                         flops += f
                         byts += b
+                        instrs += n_i
+                        small += n_s
+                        scat += sc
                         for k, v in w.items():
                             wire[k] += v
                         for k, v in c.items():
@@ -462,12 +527,13 @@ def module_costs(txt: str, assume_fused_elementwise: bool = True) -> ModuleCosts
             if not inside_fusion:
                 byts += shape_bytes(ins.type_str) + sum(
                     shape_bytes(shapes.get(o, "")) for o in ins.operands)
-        out = (flops, byts, dict(wire), dict(counts))
+        out = (flops, byts, dict(wire), dict(counts), instrs, small, scat)
         memo[key] = out
         return out
 
     if entry is None:
         return ModuleCosts(0.0, 0.0, {}, {}, 0)
-    f, b, w, c = cost_of(entry, False)
+    f, b, w, c, n_i, n_s, sc = cost_of(entry, False)
     return ModuleCosts(flops=f, bytes=b, wire_by_kind=w, count_by_kind=c,
-                       unknown_trip_loops=unknown[0])
+                       unknown_trip_loops=unknown[0], exec_instructions=n_i,
+                       exec_small_instructions=n_s, scatter_elems=sc)

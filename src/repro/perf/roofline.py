@@ -17,6 +17,7 @@ __all__ = [
     "HardwareSpec",
     "HARDWARE",
     "attainable_gflops",
+    "detect_hardware_spec",
     "operational_intensity_phi",
     "RooflineTerms",
     "roofline_terms",
@@ -30,6 +31,18 @@ class HardwareSpec:
     hbm_bw: float  # bytes/s per chip
     link_bw: float = 0.0  # bytes/s per ICI link (0 = single device)
     vmem_bytes: int = 0
+    # Small-problem overhead coefficients, used by the model-guided
+    # autotuner on top of the 3 roofline terms (zero = pure roofline):
+    # ``op_overhead_s`` — seconds per executed large-result HLO
+    # instruction (a kernel dispatch); ``serial_instr_s`` — seconds per
+    # small-result (<=256-element) instruction, the iteration cost of the
+    # serial while loops XLA:CPU lowers scatter/segment reductions into;
+    # ``scatter_elem_s`` — seconds per update element of a scatter that
+    # survives as an HLO op.  These dominate the ranking of candidate
+    # policies on problems too small to stress flops or bandwidth.
+    op_overhead_s: float = 0.0
+    serial_instr_s: float = 0.0
+    scatter_elem_s: float = 0.0
 
     @property
     def balance(self) -> float:
@@ -49,13 +62,48 @@ HARDWARE = {
     ),
     "k80": HardwareSpec("NVIDIA Tesla K80", peak_flops=2910e9, hbm_bw=480e9),
     # The container host (1 core); bandwidth measured by bench_stream.
-    "host_cpu": HardwareSpec("host XLA:CPU (1 core)", peak_flops=50e9, hbm_bw=20e9),
+    # Overhead coefficients calibrated against measured fused-MU bursts
+    # (see tests/test_roofline_model.py): ~1us per dispatched HLO
+    # instruction, ~40ns per serial-loop iteration (the while loops
+    # XLA:CPU lowers scatter/segment reductions into — e.g. chicago
+    # mode-0 segment: 106621 small instrs x 4e-8 = 4.3ms vs 4.4ms
+    # measured), ~30ns per scatter update element.
+    "host_cpu": HardwareSpec(
+        "host XLA:CPU (1 core)", peak_flops=50e9, hbm_bw=20e9,
+        op_overhead_s=1e-6, serial_instr_s=4e-8, scatter_elem_s=3e-8,
+    ),
 }
 
 
 def attainable_gflops(intensity: float, hw: HardwareSpec) -> float:
     """P = min(pi, beta * I)   (paper Eq. 2), in GFLOP/s."""
     return min(hw.peak_flops, hw.hbm_bw * intensity) / 1e9
+
+
+# jax backend platform -> HARDWARE key.  "gpu" maps to the paper's K80
+# spec (the only GPU we have numbers for); real deployments override via
+# $REPRO_HARDWARE_SPEC.
+_BACKEND_SPECS = {"cpu": "host_cpu", "tpu": "tpu_v5e", "gpu": "k80"}
+
+
+def detect_hardware_spec(platform: str | None = None) -> HardwareSpec:
+    """HardwareSpec for the *actual* backend, not an assumed TPU.
+
+    Resolution order: ``$REPRO_HARDWARE_SPEC`` (a HARDWARE key), the
+    ``platform`` argument, then ``jax.default_backend()``.  Unknown
+    platforms fall back to ``host_cpu`` — a wrong-but-finite bound beats
+    a KeyError in the middle of an autotune pass.
+    """
+    import os
+
+    override = os.environ.get("REPRO_HARDWARE_SPEC")
+    if override and override in HARDWARE:
+        return HARDWARE[override]
+    if platform is None:
+        import jax
+
+        platform = jax.default_backend()
+    return HARDWARE[_BACKEND_SPECS.get(platform, "host_cpu")]
 
 
 # The intensities the paper *states* (Eq. 5 / Eq. 8, FLOP/byte).  Note:
@@ -68,13 +116,23 @@ PAPER_STATED_INTENSITY = {"gpu": 0.125, "cpu": 0.27}  # FLOP/byte
 
 
 def operational_intensity_phi(
-    rank: int, variant: str = "gpu", v: int = 32, word_bytes: int = 8
+    rank: int,
+    variant: str = "gpu",
+    v: int = 32,
+    word_bytes: int = 8,
+    nnz: int = 10**6,
 ) -> float:
     """Operational intensity of Phi^(n) from the paper's Eqs. 3-4 / 6-7,
-    evaluated literally, in FLOP/byte (paper words are 8-byte doubles)."""
+    evaluated literally, in FLOP/byte (paper words are 8-byte doubles).
+
+    ``nnz`` only matters through sub-linear terms in Eqs. 3-4/6-7 (there
+    are none for the gpu variant; the cpu variant's v-strip remainder is
+    O(1)), so the intensity is nnz-invariant — asserted in
+    tests/test_roofline_model.py.
+    """
     from repro.core.phi import phi_flops_words
 
-    w, q = phi_flops_words(10**6, rank, variant=variant, v=v)
+    w, q = phi_flops_words(nnz, rank, variant=variant, v=v)
     return (w / q) / word_bytes
 
 
@@ -90,6 +148,10 @@ class RooflineTerms:
     collective_bytes: float
     model_flops: float  # 6*N*D (dense) or 6*N_active*D (MoE); 0 if n/a
     n_chips: int
+    # Peak FLOP/s of the spec these terms were built from.  Defaults to
+    # the TPU v5e peak for direct RooflineTerms(...) constructions that
+    # predate the field; roofline_terms() always sets it from ``hw``.
+    peak_flops: float = 197e12
 
     @property
     def dominant(self) -> str:
@@ -112,13 +174,12 @@ class RooflineTerms:
 
     @property
     def mfu_bound(self) -> float:
-        """Upper bound on MFU implied by the three terms."""
-        if not self.model_flops or not self.bound_s:
+        """Upper bound on MFU implied by the three terms, against the
+        peak of the spec that built these terms (a module-level TPU peak
+        here used to make host_cpu bounds ~4000x too small)."""
+        if not self.model_flops or not self.bound_s or not self.peak_flops:
             return 0.0
-        return self.model_flops / (self.bound_s * self.n_chips) / _PEAK_CACHE
-
-
-_PEAK_CACHE = HARDWARE["tpu_v5e"].peak_flops
+        return self.model_flops / (self.bound_s * self.n_chips) / self.peak_flops
 
 
 def roofline_terms(
@@ -142,4 +203,5 @@ def roofline_terms(
         collective_bytes=collective_bytes,
         model_flops=model_flops,
         n_chips=n_chips,
+        peak_flops=hw.peak_flops,
     )

@@ -38,7 +38,8 @@ def bench_seconds(
 
 
 def bench_burst_seconds(
-    fn: Callable, *args, burst: int, warmup: int = 1, iters: int = 2, **kwargs
+    fn: Callable, *args, burst: int, warmup: int = 1, iters: int = 2,
+    pass_burst: bool = True, **kwargs
 ) -> float:
     """Median per-iteration seconds of an internally-looping function.
 
@@ -46,11 +47,18 @@ def bench_burst_seconds(
     and execute that many algorithm iterations per call.  Returns the
     timed median divided by ``burst`` — directly comparable to
     :func:`bench_seconds` of one iteration.
+
+    ``pass_burst=False`` is for callables with the loop bound already
+    baked in — e.g. an AOT-compiled executable from ``jit.lower(...,
+    burst=N).compile()``, where ``burst`` is a static argument of the
+    *lowering*, not of the call.  The divisor is still ``burst``; it just
+    isn't forwarded as a kwarg.
     """
     if burst < 1:
         raise ValueError(f"burst must be >= 1, got {burst}")
-    sec = bench_seconds(fn, *args, burst=burst, warmup=warmup, iters=iters,
-                        **kwargs)
+    if pass_burst:
+        kwargs["burst"] = burst
+    sec = bench_seconds(fn, *args, warmup=warmup, iters=iters, **kwargs)
     return sec / burst
 
 
