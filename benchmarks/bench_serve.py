@@ -1,0 +1,146 @@
+"""Streaming decomposition service receipts (PR 8).
+
+Two serving claims, measured on pinned model-consistent fixtures:
+
+* **Warm-start beats cold** — after an append of >= 10% fresh nonzeros
+  (drawn from the same generative ktensor as the base tensor, i.e. a
+  streaming workload rather than noise), the warm-started solve of the
+  merged tensor must converge in at most half the outer sweeps of a
+  cold solve (``sweep_ratio = cold_sweeps / warm_sweeps >= 2`` is the
+  acceptance bar; wall seconds ride along as secondary columns).
+
+* **Batching amortizes dispatch** — J small same-bucket jobs solved in
+  one vmapped dispatch vs the same jobs solved one at a time through
+  the identical padded path (so the comparison isolates batching, not
+  padding).  ``batched_speedup = perjob_s / batched_s``.
+
+The per-fixture rows land in ``experiments/bench/serve.json`` and are
+distilled into the ``serve`` section of ``BENCH_phi.json`` (schema 8).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import CPAPRConfig, cpapr_mu
+from repro.core.sparse_tensor import random_poisson_tensor
+from repro.serve.batch import batched_cpapr_mu
+from repro.serve.decomp import DecompJob, DecompService
+
+from .common import OUT_DIR, Reporter, geomean
+
+# Pinned streaming fixtures: (shape, nnz, rank, append nnz, tol, seed).
+# Both are low-rank Poisson tensors whose appends come from the SAME
+# seed ktensor — the regime where a previous optimum is a real warm
+# start.  Keys: base PRNGKey(seed), extra PRNGKey(100+seed), previous
+# solve PRNGKey(0), cold solve PRNGKey(5).
+FIXTURES = {
+    "quick-a": dict(shape=(25, 20, 15), nnz=4000, rank=2, extra=1000,
+                    tol=1e-2, seed=1),
+    "quick-b": dict(shape=(25, 20, 15), nnz=6000, rank=2, extra=1200,
+                    tol=1e-2, seed=2),
+}
+MAX_OUTER = 60
+
+BATCH_JOBS = 6
+BATCH_SHAPE, BATCH_NNZ, BATCH_RANK = (17, 11, 9), 500, 3
+
+
+def _warm_vs_cold(rep: Reporter, name: str, fx: dict, autotune_path: str):
+    t, kt = random_poisson_tensor(jax.random.PRNGKey(fx["seed"]),
+                                  fx["shape"], nnz=fx["nnz"],
+                                  rank=fx["rank"])
+    extra, _ = random_poisson_tensor(jax.random.PRNGKey(100 + fx["seed"]),
+                                     fx["shape"], nnz=fx["extra"],
+                                     rank=fx["rank"], seed_ktensor=kt)
+    svc = DecompService(autotune_path=autotune_path, max_outer=MAX_OUTER,
+                        tol=fx["tol"])
+    svc.submit(name, t, fx["rank"], key=jax.random.PRNGKey(0))
+
+    t0 = time.perf_counter()
+    warm = svc.append(name, np.asarray(extra.indices),
+                      np.asarray(extra.values))
+    warm_s = time.perf_counter() - t0
+
+    merged = svc.tenant(name).tensor
+    t0 = time.perf_counter()
+    cold = cpapr_mu(merged, fx["rank"], key=jax.random.PRNGKey(5),
+                    config=CPAPRConfig(rank=fx["rank"], max_outer=MAX_OUTER,
+                                       tol=fx["tol"], track_loglik=False))
+    cold_s = time.perf_counter() - t0
+    if not (warm.result.converged and cold.converged):
+        raise RuntimeError(
+            f"bench_serve fixture {name} did not converge "
+            f"(warm={warm.result.converged}, cold={cold.converged})"
+        )
+    ratio = cold.n_outer / max(warm.result.n_outer, 1)
+    rep.row(tensor=name, warm_sweeps=warm.result.n_outer,
+            cold_sweeps=cold.n_outer, sweep_ratio=round(ratio, 3),
+            frac_new=round(warm.frac_new, 4),
+            sweep_budget=warm.sweep_budget,
+            warm_s=round(warm_s, 4), cold_s=round(cold_s, 4))
+    return ratio
+
+
+def _batched_throughput(rep: Reporter, autotune_path: str):
+    jobs = []
+    for j in range(BATCH_JOBS):
+        t, _ = random_poisson_tensor(jax.random.PRNGKey(50 + j),
+                                     BATCH_SHAPE, nnz=BATCH_NNZ,
+                                     rank=BATCH_RANK)
+        jobs.append(DecompJob(tenant=f"b{j}", tensor=t, rank=BATCH_RANK,
+                              key=jax.random.PRNGKey(500 + j)))
+    cfg = CPAPRConfig(rank=BATCH_RANK, max_outer=12, tol=1e-3,
+                      track_loglik=False)
+
+    # one vmapped dispatch for the whole cohort (includes compile)
+    svc = DecompService(autotune_path=autotune_path, max_outer=12, tol=1e-3)
+    t0 = time.perf_counter()
+    res = svc.submit_many(jobs)
+    batched_s = time.perf_counter() - t0
+    assert svc.n_batched_dispatches == 1, svc.n_batched_dispatches
+    bucket = res[0].bucket
+
+    # same jobs, same padded path, one dispatch each (jit caches shared
+    # across iterations, as a sequential server would see)
+    t0 = time.perf_counter()
+    for job in jobs:
+        batched_cpapr_mu([job.tensor], BATCH_RANK, keys=[job.key],
+                         config=cfg, bucket=bucket)
+    perjob_s = time.perf_counter() - t0
+
+    speedup = perjob_s / batched_s
+    rep.row(batch=f"{BATCH_SHAPE[0]}x{BATCH_SHAPE[1]}x{BATCH_SHAPE[2]}",
+            jobs=BATCH_JOBS, dispatches=1,
+            batched_s=round(batched_s, 4), perjob_s=round(perjob_s, 4),
+            batched_speedup=round(speedup, 3),
+            jobs_per_s=round(BATCH_JOBS / batched_s, 2))
+    return speedup
+
+
+def run():
+    import os
+
+    rep = Reporter("serve")
+    autotune_path = os.path.join(OUT_DIR, "serve_autotune.json")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    if os.path.exists(autotune_path):
+        os.remove(autotune_path)
+
+    ratios = [_warm_vs_cold(rep, name, fx, autotune_path)
+              for name, fx in FIXTURES.items()]
+    speedup = _batched_throughput(rep, autotune_path)
+
+    g = geomean(ratios)
+    rep.row(summary="geomean", warm_vs_cold_sweeps=round(g, 3),
+            batched_speedup=round(speedup, 3))
+    if g < 2.0:
+        print(f"[serve] WARNING: warm-vs-cold sweep ratio {g:.2f}x is "
+              "below the 2x acceptance bar", flush=True)
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -40,6 +40,7 @@ def _load_all():
         bench_ppa,
         bench_rebalance,
         bench_roofline,
+        bench_serve,
         bench_sharded,
         bench_stream,
     )
@@ -54,6 +55,7 @@ def _load_all():
         "rebalance": bench_rebalance.run,  # PR 4: rebalancing + sharded Pi
         "guard": bench_guard.run,          # PR 6: numerical-guard overhead
         "cutout": bench_cutout.run,        # PR 7: model-guided cold tuning
+        "serve": bench_serve.run,          # PR 8: streaming service receipts
         "modes": bench_modes.run,          # Exp. 6 / Figs. 14-15
         "stream": bench_stream.run,        # Exp. 7 / Figs. 16-17
         "mttkrp": bench_mttkrp.run,        # Exp. 8 / Figs. 18-19
@@ -125,11 +127,18 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
     bar), per-key winner matches / measured regret vs the full grid,
     fixture x strategy-family cell matches, the count of keys served
     model-only with zero probes, and the calibrated model-vs-measured
-    error percentiles that drive the pruning bound.
+    error percentiles that drive the pruning bound.  Schema 8 adds the
+    ``serve`` section (see ``bench_serve``): the streaming service's
+    warm-start receipt — per-fixture warm vs cold outer sweeps after a
+    model-consistent append (``summary.warm_vs_cold_sweeps`` geomean,
+    acceptance bar >= 2x) — and the padded-bucket batching receipt
+    (one vmapped dispatch for J same-bucket jobs vs the same jobs one
+    dispatch each through the identical padded path).
     """
-    out: dict = {"schema": 7, "generated_unix": time.time(),
+    out: dict = {"schema": 8, "generated_unix": time.time(),
                  "breakdown": {}, "policy": {}, "fused": {}, "sharded": {},
-                 "rebalance": {}, "guard": {}, "model": {}, "summary": {}}
+                 "rebalance": {}, "guard": {}, "model": {}, "serve": {},
+                 "summary": {}}
     found = False
 
     rows = _load_rows("breakdown")
@@ -260,6 +269,30 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
                 print("[benchmarks] WARNING: model-guided probe reduction "
                       f"{summ.get('probe_reduction')}x is below the 5x bar",
                       flush=True)
+
+    rows = _load_rows("serve")
+    if rows:
+        found = True
+        keep_f = ("warm_sweeps", "cold_sweeps", "sweep_ratio", "frac_new",
+                  "sweep_budget", "warm_s", "cold_s")
+        keep_b = ("jobs", "dispatches", "batched_s", "perjob_s",
+                  "batched_speedup", "jobs_per_s")
+        for r in rows:
+            if "tensor" in r:
+                out["serve"].setdefault("fixtures", {})[r["tensor"]] = {
+                    k: r[k] for k in keep_f if k in r
+                }
+            elif "batch" in r:
+                out["serve"]["batched"] = {k: r[k] for k in keep_b if k in r}
+            elif r.get("summary") == "geomean":
+                out["summary"]["warm_vs_cold_sweeps"] = \
+                    r["warm_vs_cold_sweeps"]
+                out["summary"]["serve_batched_speedup"] = \
+                    r["batched_speedup"]
+                if r["warm_vs_cold_sweeps"] < 2.0:
+                    print("[benchmarks] WARNING: warm-vs-cold sweep ratio "
+                          f"{r['warm_vs_cold_sweeps']}x is below the 2x bar",
+                          flush=True)
 
     if not found:
         return None

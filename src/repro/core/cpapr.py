@@ -74,10 +74,12 @@ __all__ = [
     "CPAPRConfig",
     "CPAPRResult",
     "ModeCutout",
+    "SweepOutcome",
     "cpapr_mu",
     "extract_mode_cutout",
     "poisson_loglik",
     "kkt_violation",
+    "sweep_step",
 ]
 
 
@@ -170,6 +172,74 @@ class CPAPRResult:
     # demotions, checkpoint quarantine/resume) — every fault the solver
     # absorbed instead of crashing, in order.
     recoveries: list | None = None
+
+
+@dataclasses.dataclass
+class SweepOutcome:
+    """One outer sweep's worth of state, produced by :func:`sweep_step`.
+
+    ``worst``/``inner_total`` are left as device values (scalars for the
+    driver's per-tensor updates, ``(J,)`` arrays for the service's batched
+    bucket updates); callers that need host floats convert once at sweep
+    end.  ``bad`` lists the modes the numerical guard blamed for a
+    non-finite sweep (empty when the sweep is clean or unguarded).
+    """
+
+    factors: list
+    lam: jax.Array
+    worst: "jax.Array | None"
+    inner_total: "jax.Array | int"
+    bad: list
+
+
+def sweep_step(carry, batch, guard: bool = False) -> SweepOutcome:
+    """One CP-APR outer sweep as a pure ``(carry, batch) -> carry`` step.
+
+    ``carry`` is ``(factors, lam)``; ``batch`` is the sweep's worth of
+    per-mode subproblems: callables ``(factors, lam) -> (A_n', lam',
+    viol, n_inner, ok)`` where ``ok`` is the mode's on-device guard
+    boolean (or None when unguarded).  The function owns nothing but the
+    mode-ordered application and the guard bookkeeping, so every caller
+    runs the exact same sweep body: :func:`cpapr_mu` passes its
+    resilience-wrapped mode updates (and its checkpoint/resume path
+    re-enters the same loop on the restored carry), while the
+    decomposition service (``repro.serve``) passes vmapped padded-bucket
+    updates whose ``viol`` is a per-job ``(J,)`` array.
+
+    Guard semantics mirror the driver's: a non-finite KKT scalar aborts
+    the sweep early (the remaining modes would consume NaN factors) and
+    blames the earliest mode whose completed guard flag tripped; a sweep
+    that finishes collects every tripped mode into ``bad``.  The input
+    ``factors`` list is never mutated — the outcome carries a fresh list,
+    so the caller's sweep-start snapshot stays intact for guard restores.
+    """
+    factors, lam = list(carry[0]), carry[1]
+    n_modes = len(batch)
+    worst = None
+    inner_total: "jax.Array | int" = 0
+    ok_flags: list = [None] * n_modes
+    bad: list = []
+    for n, mode_fn in enumerate(batch):
+        a_new, lam_new, viol, n_inner, ok = mode_fn(factors, lam)
+        if guard and not math.isfinite(float(jnp.max(viol))):
+            # poisoned KKT scalar: no point finishing the sweep, the
+            # remaining modes would consume NaN factors.  Blame an
+            # earlier mode whose (complete) guard flag tripped — its bad
+            # factors poisoned this one.
+            bad = [m for m in range(n)
+                   if ok_flags[m] is not None and not bool(ok_flags[m])] \
+                or [n]
+            break
+        factors[n] = a_new
+        lam = lam_new
+        ok_flags[n] = ok
+        worst = viol if worst is None else jnp.maximum(worst, viol)
+        inner_total = inner_total + n_inner
+    if guard and not bad:
+        bad = [n for n in range(n_modes)
+               if ok_flags[n] is not None and not bool(ok_flags[n])]
+    return SweepOutcome(factors=factors, lam=lam, worst=worst,
+                        inner_total=inner_total, bad=bad)
 
 
 def mode_pi_gather(
@@ -1057,37 +1127,20 @@ def cpapr_mu(
         snap_factors, snap_lam = list(factors), lam
         ll = None
         for sweep_attempt in range(cfg.guard_retries + 1):
-            worst = 0.0
-            inner_total = 0
+            # the shared pure sweep body (also the service's entry point);
             # per-mode guard booleans stay ON DEVICE during the sweep:
             # syncing them per mode would serialize the async factor
             # epilogues / owner gathers the solver pipelines, so they are
             # read once at sweep end when those buffers are complete
             # anyway (the read is then ~free)
-            ok_flags: list = [None] * n_modes
-            bad: list = []
-            for n in range(n_modes):
-                a_new, lam_new, viol, n_inner, ok = _run_mode(
-                    n_outer, n, factors, lam
-                )
-                violf = float(viol)
-                if cfg.guard and not math.isfinite(violf):
-                    # poisoned KKT scalar: no point finishing the sweep,
-                    # the remaining modes would consume NaN factors.
-                    # Blame an earlier mode whose (complete) guard flag
-                    # tripped — its bad factors poisoned this one.
-                    bad = [m for m in range(n)
-                           if ok_flags[m] is not None
-                           and not bool(ok_flags[m])] or [n]
-                    break
-                factors[n] = a_new
-                lam = lam_new
-                ok_flags[n] = ok
-                worst = max(worst, violf)
-                inner_total += int(n_inner)
-            if cfg.guard and not bad:
-                bad = [n for n in range(n_modes)
-                       if ok_flags[n] is not None and not bool(ok_flags[n])]
+            out = sweep_step(
+                (factors, lam),
+                [partial(_run_mode, n_outer, n) for n in range(n_modes)],
+                guard=cfg.guard,
+            )
+            factors, lam, bad = out.factors, out.lam, out.bad
+            worst = float(out.worst) if out.worst is not None else 0.0
+            inner_total = int(out.inner_total)
             if not bad:
                 if cfg.track_loglik:
                     ll = float(poisson_loglik(
@@ -1112,7 +1165,7 @@ def cpapr_mu(
             # restore last-good state and redo the sweep.  The first
             # retry reruns as-is (transient fault); later retries climb
             # the kappa ladder on the offending modes.
-            factors[:] = snap_factors
+            factors = list(snap_factors)
             lam = snap_lam
             if sweep_attempt >= 1:
                 for n in bad:

@@ -25,6 +25,9 @@ __all__ = [
     "SparseTensor",
     "KTensor",
     "ModeView",
+    "AppendInfo",
+    "append_nonzeros",
+    "merge_mode_view",
     "sort_mode",
     "random_ktensor",
     "random_poisson_tensor",
@@ -197,13 +200,19 @@ def random_ktensor(
     return KTensor(lam=lam, factors=tuple(factors))
 
 
-def _unique_coo(idx: np.ndarray, vals: np.ndarray, shape) -> tuple:
-    """Deduplicate COO coordinates (summing values)."""
+def _linear_index(idx: np.ndarray, shape) -> np.ndarray:
+    """Row-major linearization of (nnz, N) coordinates into int64 codes."""
     lin = np.zeros(idx.shape[0], dtype=np.int64)
     mult = 1
     for n in range(len(shape) - 1, -1, -1):
         lin += idx[:, n].astype(np.int64) * mult
         mult *= int(shape[n])
+    return lin
+
+
+def _unique_coo(idx: np.ndarray, vals: np.ndarray, shape) -> tuple:
+    """Deduplicate COO coordinates (summing values)."""
+    lin = _linear_index(idx, shape)
     uniq, inv = np.unique(lin, return_inverse=True)
     out_vals = np.zeros(uniq.shape[0], dtype=vals.dtype)
     np.add.at(out_vals, inv, vals)
@@ -213,6 +222,164 @@ def _unique_coo(idx: np.ndarray, vals: np.ndarray, shape) -> tuple:
         out_idx[:, n] = rem % int(shape[n])
         rem //= int(shape[n])
     return out_idx, out_vals
+
+
+@dataclasses.dataclass(frozen=True)
+class AppendInfo:
+    """Bookkeeping for one :func:`append_nonzeros` merge.
+
+    ``n_fresh`` entries landed on previously-empty coordinates (they sit
+    at the tail of the merged COO arrays, in mode-sorted-stable order of
+    the incoming batch); ``n_merged`` collided with existing coordinates
+    and had their counts summed in place.  ``frac_new`` is the fresh
+    share of the merged nonzero count — the freshness signal the serving
+    layer's warm-start sweep budget consumes.
+    """
+
+    n_appended: int
+    n_fresh: int
+    n_merged: int
+    nnz_before: int
+    nnz_after: int
+
+    @property
+    def frac_new(self) -> float:
+        return self.n_fresh / max(self.nnz_after, 1)
+
+
+def append_nonzeros(
+    t: SparseTensor, new_indices, new_values
+) -> "tuple[SparseTensor, AppendInfo]":
+    """Merge a batch of new nonzeros into ``t`` (streaming append).
+
+    The incoming batch is first deduplicated against itself through the
+    :func:`_unique_coo` path (duplicate coordinates sum), then matched
+    against the existing coordinates by linearized index: collisions add
+    their counts to the existing entries *in place* (COO order
+    preserved), genuinely-new coordinates append at the tail.  That
+    layout invariant — positions ``[0, t.nnz)`` of the merged arrays are
+    ``t``'s nonzeros in their original order — is what lets
+    :func:`merge_mode_view` extend the per-mode sorted views by merging
+    sorted runs instead of re-sorting.  Runs on host numpy (ingest, not
+    a hot path).
+    """
+    new_idx = np.asarray(new_indices)
+    new_vals = np.asarray(new_values, dtype=np.float32)
+    if new_idx.ndim != 2 or new_idx.shape[1] != t.ndim:
+        raise ValueError(
+            f"append_nonzeros: new_indices must be (k, {t.ndim}) for a "
+            f"{t.ndim}-mode tensor; got shape {new_idx.shape}"
+        )
+    if new_vals.shape != (new_idx.shape[0],):
+        raise ValueError(
+            f"append_nonzeros: new_values must be ({new_idx.shape[0]},) to "
+            f"match new_indices; got shape {new_vals.shape}"
+        )
+    if not np.all(np.isfinite(new_vals)) or np.any(new_vals < 0):
+        raise ValueError(
+            "append_nonzeros: values must be finite non-negative counts"
+        )
+    for n, i_n in enumerate(t.shape):
+        if new_idx.shape[0] and (
+            new_idx[:, n].min() < 0 or new_idx[:, n].max() >= i_n
+        ):
+            raise ValueError(
+                f"append_nonzeros: mode-{n} coordinates out of range for "
+                f"shape {t.shape}"
+            )
+    n_appended = int(new_idx.shape[0])
+    new_idx, new_vals = _unique_coo(
+        new_idx.astype(np.int64), new_vals, t.shape
+    )
+
+    old_idx = np.asarray(t.indices)
+    old_vals = np.array(t.values, dtype=np.float32)  # copy: updated in place
+    lin_old = _linear_index(old_idx, t.shape)
+    order_old = np.argsort(lin_old, kind="stable")
+    lin_sorted = lin_old[order_old]
+    lin_new = _linear_index(new_idx, t.shape)
+    pos = np.searchsorted(lin_sorted, lin_new)
+    pos_c = np.minimum(pos, max(len(lin_sorted) - 1, 0))
+    matched = (
+        (lin_new <= lin_sorted[-1]) & (lin_sorted[pos_c] == lin_new)
+        if len(lin_sorted)
+        else np.zeros(lin_new.shape, dtype=bool)
+    )
+    np.add.at(old_vals, order_old[pos_c[matched]], new_vals[matched])
+
+    fresh_idx = new_idx[~matched].astype(np.int32)
+    fresh_vals = new_vals[~matched]
+    merged = SparseTensor(
+        shape=t.shape,
+        indices=jnp.concatenate(
+            [jnp.asarray(old_idx, jnp.int32), jnp.asarray(fresh_idx)]
+        ),
+        values=jnp.concatenate(
+            [jnp.asarray(old_vals), jnp.asarray(fresh_vals, jnp.float32)]
+        ),
+    )
+    info = AppendInfo(
+        n_appended=n_appended,
+        n_fresh=int(fresh_idx.shape[0]),
+        n_merged=int(matched.sum()),
+        nnz_before=t.nnz,
+        nnz_after=merged.nnz,
+    )
+    return merged, info
+
+
+def merge_mode_view(
+    mv: ModeView, merged: SparseTensor, nnz_before: int
+) -> ModeView:
+    """Extend a mode view over an appended tensor by merging sorted runs.
+
+    ``merged`` must come from :func:`append_nonzeros` on the tensor
+    ``mv`` was built from (``nnz_before`` = that tensor's nnz): positions
+    ``[0, nnz_before)`` are the old nonzeros in their original order
+    (values possibly bumped by collisions) and the tail is the fresh
+    batch.  The old sorted run is reused as-is; only the O(k log k) sort
+    of the fresh tail plus an O(nnz) merge (``searchsorted`` +
+    ``insert``) and a value re-gather are paid — no full re-sort.  The
+    result is identical (element-for-element, including stable tie
+    order) to ``sort_mode(merged, mv.mode)``.
+    """
+    n = mv.mode
+    i_n = mv.n_rows
+    idx_np = np.asarray(merged.indices)
+    if idx_np.shape[0] < nnz_before:
+        raise ValueError(
+            f"merge_mode_view: merged tensor has {idx_np.shape[0]} nonzeros "
+            f"< nnz_before={nnz_before}"
+        )
+    tail_idx = idx_np[nnz_before:]
+    tail_rows = tail_idx[:, n]
+    order_tail = np.argsort(tail_rows, kind="stable")
+    rows_tail = tail_rows[order_tail].astype(np.int32)
+    perm_tail = (nnz_before + order_tail).astype(np.int32)
+
+    rows_old = np.asarray(mv.rows)
+    # stable merge: new entries land *after* old entries with equal row
+    # (they sit at higher COO positions), matching sort_mode's stable sort
+    ins = np.searchsorted(rows_old, rows_tail, side="right")
+    perm = np.insert(np.asarray(mv.perm), ins, perm_tail).astype(np.int32)
+    rows = np.insert(rows_old, ins, rows_tail).astype(np.int32)
+    sorted_idx = np.insert(
+        np.asarray(mv.sorted_idx), ins, tail_idx[order_tail], axis=0
+    ).astype(np.int32)
+    # collisions changed old values in place: re-gather, don't re-sort
+    sorted_vals = np.asarray(merged.values)[perm]
+    counts_tail = np.bincount(rows_tail, minlength=i_n)
+    row_starts = np.asarray(mv.row_starts) + np.concatenate(
+        [[0], np.cumsum(counts_tail)]
+    ).astype(np.int32)
+    return ModeView(
+        mode=n,
+        perm=jnp.asarray(perm),
+        rows=jnp.asarray(rows),
+        sorted_idx=jnp.asarray(sorted_idx),
+        sorted_vals=jnp.asarray(sorted_vals, jnp.float32),
+        row_starts=jnp.asarray(row_starts, jnp.int32),
+    )
 
 
 def random_poisson_tensor(

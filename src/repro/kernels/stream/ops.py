@@ -42,6 +42,37 @@ def stream_op(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if op not in STREAM_OPS:
-        raise ValueError(op)
-    c_in = c if c is not None else b
+        raise ValueError(
+            f"unknown STREAM op {op!r} (choose from {sorted(STREAM_OPS)})"
+        )
+    if b.ndim != 1:
+        raise ValueError(f"stream_op expects a 1-D array, got shape "
+                         f"{tuple(b.shape)}")
+    n = b.shape[0]
+    if n % 128 != 0:
+        raise ValueError(
+            f"stream_op input length {n} is not a multiple of the 128-lane "
+            f"width; pad the array (it would be silently truncated to "
+            f"{(n // 128) * 128} elements)"
+        )
+    tile = 128 * block_rows
+    if n % tile != 0:
+        raise ValueError(
+            f"stream_op input length {n} is not a multiple of "
+            f"128*block_rows={tile} (block_rows={block_rows}); pad the "
+            f"array or pass a block_rows that divides {n // 128} rows"
+        )
+    needs_c = op in ("add", "triad")
+    if needs_c:
+        if c is None:
+            raise ValueError(
+                f"STREAM op {op!r} reads two arrays; pass c explicitly "
+                f"(aliasing b would silently compute e.g. b+b)"
+            )
+        if c.shape != b.shape:
+            raise ValueError(
+                f"stream_op c shape {tuple(c.shape)} does not match b "
+                f"shape {tuple(b.shape)}"
+            )
+    c_in = c if needs_c else b
     return _run(op, b, c_in, block_rows, s, bool(interpret))

@@ -718,6 +718,22 @@ class Autotuner:
         self.n_probes = 0
         self.n_model_served = 0
 
+    def counters(self) -> dict:
+        """Lookup/search/probe counters as a plain dict.
+
+        The serving layer's metrics surface (and ``bench_serve``) report
+        these to prove the cross-tenant store works: repeat shapes show
+        up as ``hits`` with no ``probes``.
+        """
+        return {
+            "hits": self.n_hits,
+            "searches": self.n_searches,
+            "grid_searches": self.n_grid_searches,
+            "migrated": self.n_migrated,
+            "probes": self.n_probes,
+            "model_served": self.n_model_served,
+        }
+
     def hardware_spec(self):
         """The roofline HardwareSpec for this tuner's backend (detected
         from the actual platform, not an assumed TPU; cached)."""

@@ -1,0 +1,287 @@
+"""Streaming multi-tenant decomposition service.
+
+The production shape the paper's software goal (SparTen as a library)
+points at: many tenants, each owning a growing sparse count tensor,
+asking for fresh CP-APR factors as data streams in.  Three mechanisms
+keep that affordable:
+
+* **Incremental appends** — :meth:`DecompService.append` merges a batch
+  of new nonzeros into the tenant's tensor through the
+  ``_unique_coo``-path dedup (:func:`repro.core.sparse_tensor.append_nonzeros`),
+  extends every per-mode sorted view by merging sorted runs instead of
+  re-sorting (:func:`repro.core.sparse_tensor.merge_mode_view`), and
+  **warm-starts** the solve from the tenant's previous factors
+  (``cpapr_mu(init=prev)``) under a freshness-aware sweep budget
+  (:func:`warm_sweep_budget`): a 10% append starts near the old optimum
+  and should not pay a cold solve's outer sweeps.
+
+* **Padded-bucket batching** — :meth:`DecompService.submit_many` groups
+  small cold jobs into shared padded buckets and solves each bucket in
+  one vmapped dispatch (:mod:`repro.serve.batch`); singleton buckets run
+  the same padded path un-vmapped, so a job's factors are bitwise
+  independent of its cohort.
+
+* **One shared autotune store** — every tenant's ``policy="auto"``
+  solve consults the same crc-stamped :class:`~repro.perf.autotune.AutotuneCache`,
+  so a shape any tenant has seen never probes again
+  (:meth:`DecompService.stats` surfaces the hit counters).
+
+All solves run through :func:`repro.core.cpapr.sweep_step` — the
+solver-as-library sweep body — either via the ``cpapr_mu`` driver
+(cold/warm per-tenant solves, with its guards and degradation ladder)
+or via the batched bucket driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+
+from repro.core.cpapr import CPAPRConfig, CPAPRResult, cpapr_mu
+from repro.core.sparse_tensor import (
+    KTensor,
+    SparseTensor,
+    append_nonzeros,
+    merge_mode_view,
+    sort_mode,
+)
+from repro.perf.autotune import Autotuner
+from repro.serve.batch import BucketRegistry, batched_cpapr_mu
+
+__all__ = [
+    "DecompJob",
+    "DecompService",
+    "ServiceResult",
+    "TenantState",
+    "warm_sweep_budget",
+]
+
+
+def warm_sweep_budget(
+    frac_new: float, base_outer: int, floor: int = 2
+) -> int:
+    """Freshness-aware outer-sweep budget for a warm-started append.
+
+    An append that refreshed a fraction ``frac_new`` of the nonzeros
+    starts near the old optimum, so it gets roughly ``2 * frac_new`` of
+    a cold solve's sweep budget (a 10% append pays ~20% of the sweeps),
+    clamped to ``[floor, base_outer]`` so tiny appends still take a
+    couple of polish sweeps and a total rewrite degrades gracefully to a
+    cold solve.
+    """
+    frac = min(max(float(frac_new), 0.0), 1.0)
+    return int(min(max(math.ceil(base_outer * 2.0 * frac), floor),
+                   base_outer))
+
+
+@dataclasses.dataclass
+class TenantState:
+    """Everything the service retains per tenant between requests."""
+
+    tensor: SparseTensor
+    mode_views: list
+    rank: int
+    ktensor: KTensor | None = None
+    n_solves: int = 0
+    n_appends: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DecompJob:
+    """One cold decomposition request (the ``submit_many`` unit)."""
+
+    tenant: str
+    tensor: SparseTensor
+    rank: int
+    key: "jax.Array | None" = None
+    init: "KTensor | None" = None
+
+
+@dataclasses.dataclass
+class ServiceResult:
+    """A solve receipt: the solver result plus serving metadata."""
+
+    tenant: str
+    result: CPAPRResult
+    warm: bool = False
+    batched: bool = False
+    frac_new: float = 0.0
+    sweep_budget: int = 0
+    bucket: "object | None" = None
+
+
+class DecompService:
+    """Multi-tenant CP-APR decomposition service.
+
+    Args:
+      autotune_path: path of the shared crc-stamped autotune store (one
+        file for every tenant); None uses the library default.
+      measure: whether the shared tuner runs timed probes on cold keys
+        (False serves persisted winners / heuristics only — the cheap
+        serving-tier default).
+      registry: bucket registry for :meth:`submit_many`.
+      solver_kwargs: overrides applied to every solve's
+        :class:`CPAPRConfig` (e.g. ``max_outer``, ``tol``,
+        ``strategy``).  ``policy="auto"`` + the shared tuner is the
+        default.
+    """
+
+    def __init__(
+        self,
+        autotune_path: str | None = None,
+        measure: bool = False,
+        registry: BucketRegistry | None = None,
+        **solver_kwargs,
+    ):
+        self.tuner = Autotuner(cache_path=autotune_path, measure=measure)
+        self.registry = registry or BucketRegistry()
+        self.defaults = dict(
+            max_outer=20,
+            tol=1e-4,
+            policy="auto",
+            track_loglik=False,
+        )
+        self.defaults.update(solver_kwargs)
+        self.tenants: dict = {}
+        self.n_jobs = 0
+        self.n_batched_dispatches = 0
+
+    # -- config plumbing --------------------------------------------------
+    def _config(self, rank: int, **overrides) -> CPAPRConfig:
+        kw = dict(self.defaults)
+        kw.update(overrides)
+        if kw.get("policy") == "auto" and kw.get("autotuner") is None:
+            kw["autotuner"] = self.tuner
+        return CPAPRConfig(rank=rank, **kw)
+
+    def tenant(self, name: str) -> TenantState:
+        if name not in self.tenants:
+            raise ValueError(
+                f"unknown tenant {name!r}; submit a tensor first "
+                f"(known: {sorted(self.tenants)})"
+            )
+        return self.tenants[name]
+
+    # -- cold submissions -------------------------------------------------
+    def submit(
+        self,
+        tenant: str,
+        tensor: SparseTensor,
+        rank: int,
+        key: "jax.Array | None" = None,
+        init: "KTensor | None" = None,
+        **overrides,
+    ) -> ServiceResult:
+        """Cold-solve one tensor and register/replace the tenant state."""
+        cfg = self._config(rank, **overrides)
+        mvs = [sort_mode(tensor, n) for n in range(tensor.ndim)]
+        if key is None and init is None:
+            key = jax.random.PRNGKey(self.n_jobs)
+        res = cpapr_mu(tensor, rank, key=key, init=init, config=cfg,
+                       mode_views=mvs)
+        self.tenants[tenant] = TenantState(
+            tensor=tensor, mode_views=mvs, rank=rank,
+            ktensor=res.ktensor, n_solves=1,
+        )
+        self.n_jobs += 1
+        return ServiceResult(tenant=tenant, result=res,
+                             sweep_budget=cfg.max_outer)
+
+    def submit_many(self, jobs) -> list:
+        """Solve many cold jobs, batching same-bucket jobs per dispatch.
+
+        Jobs are grouped by the padded-bucket registry; every bucket —
+        including singletons — runs the padded segment path of
+        :func:`repro.serve.batch.batched_cpapr_mu`, so a job's factors
+        do not depend on which cohort it was batched with.  Results come
+        back aligned with ``jobs``; each job's tenant state is
+        registered for later appends.
+        """
+        jobs = list(jobs)
+        groups = self.registry.group(
+            [(j.tensor.shape, j.tensor.nnz, j.rank) for j in jobs]
+        )
+        results: list = [None] * len(jobs)
+        for bucket, idxs in groups.items():
+            members = [jobs[i] for i in idxs]
+            keys = [
+                j.key if j.key is not None
+                else jax.random.PRNGKey(self.n_jobs + i)
+                for i, j in zip(idxs, members)
+            ]
+            inits = [j.init for j in members]
+            cfg = self._config(bucket.rank)
+            res, _ = batched_cpapr_mu(
+                [j.tensor for j in members], bucket.rank,
+                keys=keys, inits=inits, config=cfg, bucket=bucket,
+            )
+            self.n_batched_dispatches += 1
+            for i, job, r in zip(idxs, members, res):
+                self.tenants[job.tenant] = TenantState(
+                    tensor=job.tensor,
+                    mode_views=[sort_mode(job.tensor, n)
+                                for n in range(job.tensor.ndim)],
+                    rank=job.rank,
+                    ktensor=r.ktensor,
+                    n_solves=1,
+                )
+                results[i] = ServiceResult(
+                    tenant=job.tenant, result=r, batched=len(members) > 1,
+                    sweep_budget=cfg.max_outer, bucket=bucket,
+                )
+        self.n_jobs += len(jobs)
+        return results
+
+    # -- incremental appends ----------------------------------------------
+    def append(
+        self,
+        tenant: str,
+        new_indices,
+        new_values,
+        sweep_budget: int | None = None,
+        **overrides,
+    ) -> ServiceResult:
+        """Merge new nonzeros into a tenant's tensor and warm-start.
+
+        The merged tensor's mode views are extended incrementally (no
+        re-sort) and the solve starts from the tenant's previous factors
+        under the freshness-aware sweep budget.
+        """
+        st = self.tenant(tenant)
+        merged, info = append_nonzeros(st.tensor, new_indices, new_values)
+        mvs = [merge_mode_view(mv, merged, st.tensor.nnz)
+               for mv in st.mode_views]
+        base_outer = int(
+            overrides.get("max_outer", self.defaults["max_outer"])
+        )
+        budget = (int(sweep_budget) if sweep_budget is not None
+                  else warm_sweep_budget(info.frac_new, base_outer))
+        overrides["max_outer"] = budget
+        cfg = self._config(st.rank, **overrides)
+        res = cpapr_mu(merged, st.rank, init=st.ktensor, config=cfg,
+                       mode_views=mvs)
+        st.tensor = merged
+        st.mode_views = mvs
+        st.ktensor = res.ktensor
+        st.n_solves += 1
+        st.n_appends += 1
+        self.n_jobs += 1
+        return ServiceResult(
+            tenant=tenant, result=res, warm=True,
+            frac_new=info.frac_new, sweep_budget=budget,
+        )
+
+    # -- metrics ----------------------------------------------------------
+    def stats(self) -> dict:
+        """Serving counters incl. the shared autotune store's hit rates."""
+        return {
+            "tenants": len(self.tenants),
+            "jobs": self.n_jobs,
+            "batched_dispatches": self.n_batched_dispatches,
+            "buckets": {
+                str(b): n for b, n in self.registry.seen.items()
+            },
+            "autotune": self.tuner.counters(),
+            "autotune_cache_entries": len(self.tuner.cache.entries),
+        }

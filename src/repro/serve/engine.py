@@ -39,7 +39,10 @@ class Engine:
         ).astype(jnp.int32)
 
     def _decode_impl(self, caches, first_tokens, key):
-        n = self.cfg.max_new_tokens
+        # The prefill already produced first_tokens, so only
+        # max_new_tokens - 1 decode steps remain; scanning n steps would
+        # run the model once for a token that is never returned.
+        n = self.cfg.max_new_tokens - 1
 
         def body(carry, _):
             caches, tok, key, done = carry
@@ -52,7 +55,12 @@ class Engine:
             return (caches, nxt, key, done), nxt[:, 0]
 
         b = first_tokens.shape[0]
-        done0 = jnp.zeros((b,), bool)
+        if self.cfg.eos_id is not None:
+            # A sequence whose very first sampled token is EOS is already
+            # finished — every subsequent step must emit EOS, not decode on.
+            done0 = first_tokens[:, 0] == self.cfg.eos_id
+        else:
+            done0 = jnp.zeros((b,), bool)
         (caches, _, _, _), toks = jax.lax.scan(
             body, (caches, first_tokens, key, done0), None, length=n)
         return jnp.moveaxis(toks, 0, 1), caches  # (B, n)
@@ -72,4 +80,4 @@ class Engine:
         key, sub = jax.random.split(key)
         first = self._sample(logits, sub)[:, None]
         out, _ = self._decode(caches, first, key)
-        return jnp.concatenate([first, out[:, :-1]], axis=1)
+        return jnp.concatenate([first, out], axis=1)

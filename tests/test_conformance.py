@@ -559,3 +559,103 @@ def test_resume_path_meets_dense_oracle(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert ref.kkt_history == res.kkt_history
     assert _dense_kkt(t, res.ktensor) <= _dense_kkt(t, ref.ktensor) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Streaming warm-start rows (the serving append contract, per strategy)
+# ---------------------------------------------------------------------------
+
+# Each row: the solver config an appended-then-warm-started solve runs
+# under.  The contract is strategy-independent: after merging a
+# model-consistent append (same generative ktensor as the base tensor),
+# warm-starting from the previous factors must (a) converge, (b) land at
+# the cold solve's optimum by the dense-f64 KKT oracle and by
+# reconstruction at every observed coordinate, and (c) pay at most half
+# the cold solve's outer sweeps.
+
+WARMSTART_ROWS = {
+    "segment": dict(cfg=dict(strategy="segment")),
+    "sharded-rs": dict(cfg=dict(strategy="sharded",
+                                combine="reduce_scatter", policy=PB)),
+}
+
+
+def _model_values_at(t, kt):
+    """Reconstructed model values at t's nonzero coordinates, f64."""
+    idx = np.asarray(t.indices)
+    lam = np.asarray(kt.lam, np.float64)
+    m = np.ones((idx.shape[0], lam.shape[0]))
+    for n, f in enumerate(kt.factors):
+        m *= np.asarray(f, np.float64)[idx[:, n]]
+    return m @ lam
+
+
+def run_warmstart_case(name: str, mesh=None, n_shards: int | None = None):
+    from repro.core import CPAPRConfig, cpapr_mu
+    from repro.core.sparse_tensor import append_nonzeros, merge_mode_view
+
+    rank, tol, max_outer = 2, 1e-2, 60
+    t0, kt_seed = random_poisson_tensor(jax.random.PRNGKey(1), (25, 20, 15),
+                                        nnz=4000, rank=rank)
+    extra, _ = random_poisson_tensor(jax.random.PRNGKey(101), (25, 20, 15),
+                                     nnz=1000, rank=rank,
+                                     seed_ktensor=kt_seed)
+    merged, _ = append_nonzeros(t0, np.asarray(extra.indices),
+                                np.asarray(extra.values))
+    mvs = [merge_mode_view(sort_mode(t0, n), merged, t0.nnz)
+           for n in range(merged.ndim)]
+
+    kw = dict(rank=rank, max_outer=max_outer, tol=tol, track_loglik=False,
+              **WARMSTART_ROWS[name]["cfg"])
+    if kw.get("strategy") == "sharded":
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if n_shards is not None:
+            kw.setdefault("n_shards", n_shards)
+    prev = cpapr_mu(t0, rank, key=jax.random.PRNGKey(0),
+                    config=CPAPRConfig(**kw))
+    assert prev.converged, (name, "previous solve did not converge")
+    warm = cpapr_mu(merged, rank, init=prev.ktensor,
+                    config=CPAPRConfig(**kw), mode_views=mvs)
+    cold = cpapr_mu(merged, rank, key=jax.random.PRNGKey(5),
+                    config=CPAPRConfig(**kw))
+    assert warm.converged and cold.converged, (
+        name, warm.converged, cold.converged)
+    w_kkt = _dense_kkt(merged, warm.ktensor)
+    c_kkt = _dense_kkt(merged, cold.ktensor)
+    assert w_kkt <= max(1.05 * c_kkt, 1.1 * tol), (name, w_kkt, c_kkt)
+    mw = _model_values_at(merged, warm.ktensor)
+    mc = _model_values_at(merged, cold.ktensor)
+    rel = float(np.linalg.norm(mw - mc) / np.linalg.norm(mc))
+    assert rel < 0.05, (name, rel)
+    assert warm.n_outer * 2 <= cold.n_outer, (name, warm.n_outer,
+                                              cold.n_outer)
+    return dict(warm=warm.n_outer, cold=cold.n_outer, rel=rel)
+
+
+@pytest.mark.parametrize("name", sorted(WARMSTART_ROWS))
+def test_warmstart_rows(name):
+    """Warm-start conformance, in-process (sharded row emulated)."""
+    run_warmstart_case(name, n_shards=2 if name != "segment" else None)
+
+
+WARMSTART_SCRIPT = """
+import jax
+from repro.core.distributed import make_phi_mesh
+import test_conformance as tc
+
+n_dev = jax.device_count()
+assert n_dev == {devices}, n_dev
+mesh = make_phi_mesh(n_dev) if n_dev > 1 else None
+out = tc.run_warmstart_case("sharded-rs", mesh=mesh, n_shards=n_dev)
+print("WARMSTART_OK", out)
+"""
+
+
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_warmstart_forced_devices(devices):
+    """The sharded warm-start row under a real mesh at 1/2/4 devices —
+    the serving append path must meet the same contract when the solve
+    itself is distributed."""
+    assert "WARMSTART_OK" in _run(WARMSTART_SCRIPT.format(devices=devices),
+                                  devices)

@@ -89,6 +89,41 @@ def test_stream_pallas_sweep(op, n, block_rows):
                                rtol=1e-6, atol=1e-6)
 
 
+def test_stream_rejects_untiled_lengths():
+    """Lengths that are not a multiple of 128*block_rows used to be
+    silently truncated (the bandwidth figure quietly covered fewer
+    bytes); now they are rejected at the boundary with the tile size
+    in the message."""
+    b = jnp.ones((128 * 256,), jnp.float32)
+    with pytest.raises(ValueError, match="128-lane"):
+        stream_op("copy", b[:100])
+    with pytest.raises(ValueError, match=r"128\*block_rows=32768"):
+        stream_op("copy", b[: 128 * 8], block_rows=256)
+    with pytest.raises(ValueError, match="1-D"):
+        stream_op("copy", b.reshape(-1, 128))
+    with pytest.raises(ValueError, match="unknown STREAM op"):
+        stream_op("daxpy", b)
+    # exact tile multiple still works with a non-default block_rows
+    out = stream_op("scale", jnp.ones((128 * 8,), jnp.float32),
+                    block_rows=8, s=2.0)
+    np.testing.assert_array_equal(np.asarray(out), np.full(128 * 8, 2.0))
+
+
+def test_stream_two_array_ops_require_c():
+    """add/triad read two distinct arrays; c=None used to alias b and
+    silently compute b+b / b+s*b."""
+    b = jnp.ones((128 * 256,), jnp.float32)
+    with pytest.raises(ValueError, match="aliasing"):
+        stream_op("add", b)
+    with pytest.raises(ValueError, match="aliasing"):
+        stream_op("triad", b)
+    with pytest.raises(ValueError, match="does not match"):
+        stream_op("add", b, b[:-128])
+    # one-array ops never needed c and still accept its absence
+    np.testing.assert_array_equal(np.asarray(stream_op("copy", b)),
+                                  np.asarray(b))
+
+
 def test_ssd_chunked_vs_ref():
     from repro.models.mamba2 import ssd_chunked, ssd_ref
     key = jax.random.PRNGKey(2)

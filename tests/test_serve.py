@@ -1,0 +1,359 @@
+"""Serving-layer tests: engine decode fixes, streaming appends, the
+padded-bucket batched solver, and the multi-tenant decomposition
+service.
+
+The engine tests drive :class:`repro.serve.Engine` with a tiny
+deterministic fake model whose ``decode_step`` counts real dispatches
+through ``jax.debug.callback`` — the regression they pin is the wasted
+final decode step (scan used to run ``max_new_tokens`` steps and throw
+the last token away) and EOS handling when the *first* sampled token is
+already EOS.
+
+The service tests pin the streaming contracts: an append merges through
+the ``_unique_coo`` dedup path and extends mode views without
+re-sorting (bitwise vs a full re-sort); a batched bucket solve is
+bitwise independent of its cohort; a warm-started append converges in
+fewer sweeps than a cold solve of the merged tensor; and two tenants
+with the same shape share one autotune store.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cpapr import CPAPRConfig, cpapr_mu
+from repro.core.sparse_tensor import (
+    SparseTensor,
+    append_nonzeros,
+    merge_mode_view,
+    random_poisson_tensor,
+    sort_mode,
+)
+from repro.serve.batch import BucketRegistry, batched_cpapr_mu
+from repro.serve.decomp import DecompJob, DecompService, warm_sweep_budget
+from repro.serve.engine import Engine, ServeConfig
+
+# ---------------------------------------------------------------------------
+# Engine decode-loop regressions
+# ---------------------------------------------------------------------------
+
+
+class _CountingModel:
+    """Deterministic toy LM: next token is (tok + 1) mod V.
+
+    ``decode_step`` records every *runtime* dispatch via
+    ``jax.debug.callback`` (fires once per executed scan step, not per
+    trace), so tests can assert exactly how many model steps a generate
+    call paid for.
+    """
+
+    def __init__(self, v: int = 11):
+        self.v = v
+        self.calls: list = []
+
+    def _onehot(self, tok):
+        return jax.nn.one_hot(tok % self.v, self.v)
+
+    def prefill(self, params, batch, cache_len):
+        toks = batch["tokens"]
+        return self._onehot(toks[:, -1]), jnp.zeros((toks.shape[0],),
+                                                    jnp.int32)
+
+    def decode_step(self, params, caches, tok):
+        jax.debug.callback(lambda: self.calls.append(1))
+        return self._onehot(tok[:, 0] + 1), caches + 1
+
+
+def _gen(model, batch, **cfg):
+    eng = Engine(model, params=None, cfg=ServeConfig(temperature=0.0, **cfg))
+    out = eng.generate(batch, key=jax.random.PRNGKey(0))
+    out.block_until_ready()
+    jax.effects_barrier()
+    return np.asarray(out)
+
+
+def test_generate_no_wasted_decode_step():
+    """n new tokens must cost exactly n-1 decode_step dispatches (the
+    first token comes from prefill); the old loop ran one extra step
+    whose token was discarded."""
+    m = _CountingModel()
+    batch = {"tokens": jnp.asarray([[1, 2, 3], [5, 6, 7]], jnp.int32)}
+    out = _gen(m, batch, max_new_tokens=5)
+    np.testing.assert_array_equal(
+        out, [[3, 4, 5, 6, 7], [7, 8, 9, 10, 0]])
+    assert len(m.calls) == 4, f"expected 4 decode dispatches, got " \
+                              f"{len(m.calls)}"
+
+
+def test_generate_single_token_no_decode():
+    """max_new_tokens=1 is satisfied by prefill alone — zero decode
+    dispatches, and the output is exactly the first sampled token."""
+    m = _CountingModel()
+    batch = {"tokens": jnp.asarray([[4], [9]], jnp.int32)}
+    out = _gen(m, batch, max_new_tokens=1)
+    np.testing.assert_array_equal(out, [[4], [9]])
+    assert len(m.calls) == 0
+
+
+def test_generate_eos_on_first_token():
+    """A sequence whose first sampled token is EOS is finished: every
+    later position must be EOS, not a continued decode."""
+    m = _CountingModel()
+    # row 0's first token (= last prompt token) IS the eos id
+    batch = {"tokens": jnp.asarray([[3], [5]], jnp.int32)}
+    out = _gen(m, batch, max_new_tokens=4, eos_id=3)
+    np.testing.assert_array_equal(out, [[3, 3, 3, 3], [5, 6, 7, 8]])
+
+
+def test_generate_eos_mid_sequence():
+    m = _CountingModel()
+    batch = {"tokens": jnp.asarray([[4]], jnp.int32)}
+    out = _gen(m, batch, max_new_tokens=5, eos_id=6)
+    np.testing.assert_array_equal(out, [[4, 5, 6, 6, 6]])
+
+
+# ---------------------------------------------------------------------------
+# Streaming appends: COO merge + incremental mode views
+# ---------------------------------------------------------------------------
+
+
+def _tiny():
+    return SparseTensor(
+        shape=(4, 3),
+        indices=jnp.asarray([[0, 0], [1, 1], [2, 2]], jnp.int32),
+        values=jnp.asarray([1.0, 2.0, 3.0], jnp.float32),
+    )
+
+
+def test_append_dedups_batch_and_sums_collisions():
+    t = _tiny()
+    merged, info = append_nonzeros(
+        t,
+        np.asarray([[1, 1], [3, 0], [3, 0]]),
+        np.asarray([5.0, 7.0, 7.0], np.float32),
+    )
+    # intra-batch duplicate (3,0)+(3,0) summed, then (1,1) collided with
+    # the existing entry in place; only (3,0) is genuinely new
+    assert (info.n_appended, info.n_fresh, info.n_merged) == (3, 1, 1)
+    assert (info.nnz_before, info.nnz_after) == (3, 4)
+    assert info.frac_new == pytest.approx(0.25)
+    # layout invariant: old entries first, in their original order
+    np.testing.assert_array_equal(
+        np.asarray(merged.indices),
+        [[0, 0], [1, 1], [2, 2], [3, 0]])
+    np.testing.assert_array_equal(
+        np.asarray(merged.values), [1.0, 7.0, 3.0, 14.0])
+
+
+def test_append_validation_errors():
+    t = _tiny()
+    with pytest.raises(ValueError, match=r"\(k, 2\)"):
+        append_nonzeros(t, np.zeros((2, 3), int), np.ones(2, np.float32))
+    with pytest.raises(ValueError, match="match new_indices"):
+        append_nonzeros(t, np.zeros((2, 2), int), np.ones(3, np.float32))
+    with pytest.raises(ValueError, match="out of range"):
+        append_nonzeros(t, np.asarray([[4, 0]]), np.ones(1, np.float32))
+    with pytest.raises(ValueError, match="finite non-negative"):
+        append_nonzeros(t, np.asarray([[0, 0]]),
+                        np.asarray([-1.0], np.float32))
+
+
+def test_merge_mode_view_bitwise_matches_full_resort():
+    """The incremental sorted-run merge must equal a full stable re-sort
+    of the merged tensor on every field of every mode — including the
+    stable tie order for rows that already had entries."""
+    t, _ = random_poisson_tensor(jax.random.PRNGKey(2), (13, 9, 7),
+                                 nnz=300, rank=3)
+    rng = np.random.RandomState(0)
+    k = 80
+    new_idx = np.stack([rng.randint(0, s, size=k) for s in t.shape], axis=1)
+    new_vals = rng.poisson(2.0, size=k).astype(np.float32) + 1.0
+    merged, _ = append_nonzeros(t, new_idx, new_vals)
+    for n in range(t.ndim):
+        inc = merge_mode_view(sort_mode(t, n), merged, t.nnz)
+        ref = sort_mode(merged, n)
+        np.testing.assert_array_equal(np.asarray(inc.perm),
+                                      np.asarray(ref.perm))
+        np.testing.assert_array_equal(np.asarray(inc.rows),
+                                      np.asarray(ref.rows))
+        np.testing.assert_array_equal(np.asarray(inc.sorted_idx),
+                                      np.asarray(ref.sorted_idx))
+        np.testing.assert_array_equal(np.asarray(inc.sorted_vals),
+                                      np.asarray(ref.sorted_vals))
+        np.testing.assert_array_equal(np.asarray(inc.row_starts),
+                                      np.asarray(ref.row_starts))
+        assert inc.n_rows == ref.n_rows and inc.mode == ref.mode
+
+
+# ---------------------------------------------------------------------------
+# Padded-bucket batched solver
+# ---------------------------------------------------------------------------
+
+_BCFG = dict(max_outer=12, tol=1e-3, track_loglik=False)
+
+
+def _bucket_jobs(n, nnz=500, shape=(17, 11, 9), rank=3):
+    out = []
+    for j in range(n):
+        t, _ = random_poisson_tensor(jax.random.PRNGKey(20 + j), shape,
+                                     nnz=nnz, rank=rank)
+        out.append(t)
+    return out
+
+
+def test_batched_bitwise_independent_of_cohort():
+    """A job solved in a 3-job bucket must be bitwise the same job solved
+    alone through the same padded bucket — factors, lam, and sweep
+    count.  This is what lets the service batch tenants together without
+    cross-tenant numerical coupling."""
+    rank = 3
+    ts = _bucket_jobs(3, rank=rank)
+    keys = [jax.random.PRNGKey(100 + j) for j in range(3)]
+    cfg = CPAPRConfig(rank=rank, **_BCFG)
+    res3, bucket = batched_cpapr_mu(ts, rank, keys=keys, config=cfg)
+    for j in range(3):
+        res1, _ = batched_cpapr_mu([ts[j]], rank, keys=[keys[j]],
+                                   config=cfg, bucket=bucket)
+        assert res1[0].n_outer == res3[j].n_outer
+        np.testing.assert_array_equal(np.asarray(res1[0].ktensor.lam),
+                                      np.asarray(res3[j].ktensor.lam))
+        for a, b in zip(res1[0].ktensor.factors, res3[j].ktensor.factors):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batched_matches_unpadded_solver():
+    """Through the padded path the per-job answer must match the plain
+    ``cpapr_mu`` segment solve of the same job (same key): equal sweep
+    trajectory, factors equal to reduction-order tolerance (padding
+    changes ``jnp.sum`` tree shapes, so this is allclose, not bitwise)."""
+    rank = 3
+    ts = _bucket_jobs(2, rank=rank)
+    keys = [jax.random.PRNGKey(100 + j) for j in range(2)]
+    cfg = CPAPRConfig(rank=rank, **_BCFG)
+    res, _ = batched_cpapr_mu(ts, rank, keys=keys, config=cfg)
+    for t, key, r in zip(ts, keys, res):
+        ref = cpapr_mu(t, rank, key=key,
+                       config=CPAPRConfig(rank=rank, strategy="segment",
+                                          **_BCFG))
+        assert r.converged == ref.converged
+        np.testing.assert_allclose(np.asarray(r.ktensor.lam),
+                                   np.asarray(ref.ktensor.lam),
+                                   rtol=2e-3, atol=1e-5)
+        for a, b in zip(r.ktensor.factors, ref.ktensor.factors):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=1e-5)
+
+
+def test_bucket_registry_groups_and_pads():
+    reg = BucketRegistry(row_multiple=8, nnz_floor=64)
+    groups = reg.group([
+        ((17, 11, 9), 500, 3),   # -> (24, 16, 16) rows, 512 nnz
+        ((20, 14, 10), 490, 3),  # -> same bucket
+        ((17, 11, 9), 2000, 3),  # -> different nnz bucket
+    ])
+    sizes = sorted(len(v) for v in groups.values())
+    assert sizes == [1, 2]
+    b2 = next(b for b, v in groups.items() if len(v) == 2)
+    assert b2.shape == (24, 16, 16) and b2.nnz == 512 and b2.rank == 3
+
+
+# ---------------------------------------------------------------------------
+# DecompService: warm starts, batching, shared autotune store
+# ---------------------------------------------------------------------------
+
+
+def _service_fixture(rank=2, shape=(25, 20, 15), nnz=4000, seed=1):
+    """Model-consistent streaming fixture: the appended nonzeros come
+    from the SAME generative ktensor as the base tensor, so the old
+    optimum is a genuinely good warm start (random-noise appends are
+    not a streaming workload and do not warm-start well)."""
+    t, kt = random_poisson_tensor(jax.random.PRNGKey(seed), shape,
+                                  nnz=nnz, rank=rank)
+    extra, _ = random_poisson_tensor(jax.random.PRNGKey(100 + seed), shape,
+                                     nnz=nnz // 4, rank=rank,
+                                     seed_ktensor=kt)
+    return t, extra
+
+
+def test_warm_sweep_budget_schedule():
+    assert warm_sweep_budget(0.0, 20) == 2
+    assert warm_sweep_budget(0.1, 20) == 4
+    assert warm_sweep_budget(0.5, 20) == 20
+    assert warm_sweep_budget(1.0, 20) == 20
+    assert warm_sweep_budget(0.05, 40, floor=3) == 4
+    assert warm_sweep_budget(-1.0, 20) == 2  # clamped
+
+
+def test_service_append_warm_start_beats_cold(tmp_path):
+    """The streaming contract: after an append of ~15% fresh nonzeros,
+    the warm-started solve converges within its freshness budget and
+    pays at most half the sweeps of a cold solve of the merged tensor."""
+    rank, max_outer, tol = 2, 60, 1e-2
+    t, extra = _service_fixture(rank=rank)
+    svc = DecompService(autotune_path=str(tmp_path / "at.json"),
+                        max_outer=max_outer, tol=tol)
+    svc.submit("a", t, rank, key=jax.random.PRNGKey(0))
+    warm = svc.append("a", np.asarray(extra.indices),
+                      np.asarray(extra.values))
+    assert warm.warm and 0.0 < warm.frac_new < 0.5
+    assert warm.sweep_budget < max_outer
+    assert warm.result.converged, "warm start failed to converge in budget"
+
+    merged = svc.tenant("a").tensor
+    cold = cpapr_mu(merged, rank, key=jax.random.PRNGKey(5),
+                    config=CPAPRConfig(rank=rank, max_outer=max_outer,
+                                       tol=tol, track_loglik=False))
+    assert cold.converged
+    assert warm.result.n_outer * 2 <= cold.n_outer, (
+        warm.result.n_outer, cold.n_outer)
+
+
+def test_service_submit_many_batches_and_appends(tmp_path):
+    """Same-bucket jobs share one dispatch; results align with the job
+    list; a later append works on state registered by the batched path."""
+    rank = 2
+    jobs = []
+    for j in range(3):
+        t, _ = random_poisson_tensor(jax.random.PRNGKey(30 + j),
+                                     (17, 11, 9), nnz=500, rank=rank)
+        jobs.append(DecompJob(tenant=f"t{j}", tensor=t, rank=rank,
+                              key=jax.random.PRNGKey(300 + j)))
+    svc = DecompService(autotune_path=str(tmp_path / "at.json"),
+                        max_outer=12, tol=1e-3)
+    res = svc.submit_many(jobs)
+    assert [r.tenant for r in res] == ["t0", "t1", "t2"]
+    assert all(r.batched for r in res)
+    assert svc.n_batched_dispatches == 1
+
+    t0 = jobs[0].tensor
+    rng = np.random.RandomState(1)
+    k = 60
+    idx = np.stack([rng.randint(0, s, size=k) for s in t0.shape], axis=1)
+    vals = rng.poisson(2.0, size=k).astype(np.float32) + 1.0
+    warm = svc.append("t0", idx, vals)
+    assert warm.warm and svc.tenant("t0").n_appends == 1
+    assert svc.tenant("t0").tensor.nnz > t0.nnz
+
+    with pytest.raises(ValueError, match="unknown tenant"):
+        svc.append("nope", idx, vals)
+
+
+def test_service_shares_autotune_across_tenants(tmp_path):
+    """Two tenants submitting the same-shaped problem hit one shared
+    autotune store: the second solve's policy comes from the cache, not
+    a fresh search."""
+    rank = 2
+    t, _ = random_poisson_tensor(jax.random.PRNGKey(40), (25, 20, 15),
+                                 nnz=1500, rank=rank)
+    svc = DecompService(autotune_path=str(tmp_path / "at.json"),
+                        max_outer=3, tol=1e-3)
+    svc.submit("alice", t, rank, key=jax.random.PRNGKey(0))
+    s0 = svc.stats()["autotune"]
+    svc.submit("bob", t, rank, key=jax.random.PRNGKey(1))
+    s1 = svc.stats()["autotune"]
+    assert s1["hits"] > s0["hits"], (s0, s1)
+    assert s1["searches"] == s0["searches"], (s0, s1)
+    assert svc.stats()["tenants"] == 2
+    assert svc.stats()["autotune_cache_entries"] >= 1
