@@ -1,0 +1,147 @@
+"""Dense matrix-free tier vs the sparse strategies (PR 9's receipt).
+
+Near-dense fixtures (fill 0.3-0.5 — the regime the GenTen-style fill
+cut targets; the quick-tier FROSTT samples sit at 0.05-0.08 and stay
+sparse) time the mode-0 Phi through:
+
+  segment     — the streaming segment-sum baseline (the sparse default),
+  pallas      — the sparse Pallas kernel on its default blocking,
+  dense       — the matrix-free dense kernel, f32,
+  dense-bf16  — the mixed tier (bf16 elements, f32 accumulation).
+
+``dense_vs_segment`` > 1 on at least one fixture is the acceptance bar:
+the first strategy where the Pallas path beats segment-sum outright on
+CPU-sized problems (no Pi materialization, no gather — just fat MXU/AVX
+dots).  The bf16 leg also records its max relative error vs the f32
+dense result — the receipt that the mixed tier's conformance tolerance
+(3e-2) holds outside the test fixtures.  ``heuristic_dense`` receipts
+that ``policy="auto"``'s fill cut really selects the tier per fixture.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dense import build_dense_mode, dense_kr_factors
+from repro.core.layout import build_blocked_layout, mode_run_stats
+from repro.core.phi import expand_to_layout, phi_from_rows
+from repro.core.pi import pi_rows
+from repro.core.policy import default_policy, heuristic_policy
+from repro.core.sparse_tensor import SparseTensor, random_ktensor, sort_mode
+from repro.kernels.dense import phi_dense
+from repro.perf.timing import bench_seconds
+
+from .common import RANK, Reporter, geomean
+
+# (shape, fill): small enough to stay under DENSE_MAX_ELEMS, dense
+# enough to sit past the fill cut (bin 0-1); "brick" is the big one
+# where the crossover should be unambiguous.
+FIXTURES = {
+    "cube": ((48, 40, 32), 0.45),
+    "slab": ((96, 64, 8), 0.35),
+    "brick": ((128, 96, 48), 0.40),
+}
+
+
+def make_near_dense(name: str, rank: int = RANK):
+    shape, fill = FIXTURES[name]
+    rng = np.random.default_rng(abs(hash(name)) % (1 << 31))
+    mask = rng.random(shape) < fill
+    idx = np.argwhere(mask).astype(np.int32)
+    vals = rng.poisson(2.0, idx.shape[0]).astype(np.float32) + 1.0
+    t = SparseTensor(shape=tuple(shape), indices=jnp.asarray(idx),
+                     values=jnp.asarray(vals))
+    kt = random_ktensor(jax.random.PRNGKey(17), tuple(shape), rank)
+    return t, kt
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "strategy", "layout"))
+def _sparse_dispatch(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy,
+                     layout):
+    return phi_from_rows(rows, vals, pi, b, n_rows=n_rows,
+                         strategy=strategy, layout=layout,
+                         vals_e=vals_e, pi_e=pi_e)
+
+
+@jax.jit
+def _dense_dispatch(x, c, a, b):
+    return phi_dense(x, c, a, b)
+
+
+def run(fixtures=tuple(FIXTURES), iters: int = 5):
+    rep = Reporter("dense")
+    ratios = []
+    for name in fixtures:
+        t, kt = make_near_dense(name)
+        mv = sort_mode(t, 0)
+        pi = pi_rows(mv.sorted_idx, kt.factors, 0)
+        b = kt.factors[0] * kt.lam[None, :]
+        nnz, n_rows = t.nnz, mv.n_rows
+        row_width = int(np.prod(t.shape[1:]))
+        stats = mode_run_stats(np.asarray(mv.rows), n_rows,
+                               row_width=row_width)
+        auto = heuristic_policy(nnz, n_rows, RANK,
+                                platform=jax.default_backend(), stats=stats)
+
+        t_seg = bench_seconds(_sparse_dispatch, mv.rows, mv.sorted_vals, pi,
+                              b, None, None, n_rows=n_rows,
+                              strategy="segment", layout=None, iters=iters)
+
+        # the sparse Pallas leg runs in interpret mode on CPU and costs
+        # tens of seconds per call past ~100k nnz — cap it to keep the
+        # quick tier quick (the crossover story is segment-vs-dense)
+        t_pal = None
+        if nnz <= 100_000:
+            pol = default_policy(RANK)
+            layout = build_blocked_layout(np.asarray(mv.rows), n_rows,
+                                          pol.block_nnz, pol.block_rows)
+            vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
+            t_pal = bench_seconds(_sparse_dispatch, mv.rows, mv.sorted_vals,
+                                  pi, b, vals_e, pi_e, n_rows=n_rows,
+                                  strategy="pallas", layout=layout,
+                                  iters=iters)
+
+        dn = build_dense_mode(np.asarray(mv.sorted_idx),
+                              np.asarray(mv.sorted_vals), t.shape, 0)
+        c, a = dense_kr_factors(dn, kt.factors)
+        t_dns = bench_seconds(_dense_dispatch, dn.x, c, a, b, iters=iters)
+
+        bf = jnp.bfloat16
+        x16, c16, a16, b16 = (dn.x.astype(bf), c.astype(bf), a.astype(bf),
+                              b.astype(bf))
+        t_bf16 = bench_seconds(_dense_dispatch, x16, c16, a16, b16,
+                               iters=iters)
+        out32 = np.asarray(_dense_dispatch(dn.x, c, a, b), np.float64)
+        out16 = np.asarray(_dense_dispatch(x16, c16, a16, b16), np.float64)
+        rel = float(np.max(np.abs(out16 - out32) /
+                           np.maximum(np.abs(out32), 1e-6)))
+
+        row = dict(tensor=name, nnz=nnz,
+                   fill=round(float(stats.fill_frac), 4),
+                   fill_bin=stats.fill_bin,
+                   heuristic_dense=(auto.strategy == "dense"),
+                   segment_s=round(t_seg, 6),
+                   dense_s=round(t_dns, 6), dense_bf16_s=round(t_bf16, 6),
+                   dense_vs_segment=round(t_seg / t_dns, 3),
+                   bf16_vs_f32=round(t_dns / t_bf16, 3),
+                   bf16_max_rel_err=round(rel, 5),
+                   bf16_within_tier=(rel <= 3e-2))
+        if t_pal is not None:
+            row.update(pallas_s=round(t_pal, 6),
+                       dense_vs_pallas=round(t_pal / t_dns, 3))
+        rep.row(**row)
+        ratios.append(t_seg / t_dns)
+    rep.row(summary="geomean",
+            dense_vs_segment=round(geomean(ratios), 3),
+            best_dense_vs_segment=round(max(ratios), 3))
+    if max(ratios) <= 1.0:
+        print("[bench_dense] WARNING: dense tier beat segment on no "
+              "fixture (acceptance bar: at least one)", flush=True)
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

@@ -32,6 +32,7 @@ def _load_all():
     from . import (
         bench_breakdown,
         bench_cutout,
+        bench_dense,
         bench_fused,
         bench_guard,
         bench_mttkrp,
@@ -56,6 +57,7 @@ def _load_all():
         "guard": bench_guard.run,          # PR 6: numerical-guard overhead
         "cutout": bench_cutout.run,        # PR 7: model-guided cold tuning
         "serve": bench_serve.run,          # PR 8: streaming service receipts
+        "dense": bench_dense.run,          # PR 9: dense matrix-free tier
         "modes": bench_modes.run,          # Exp. 6 / Figs. 14-15
         "stream": bench_stream.run,        # Exp. 7 / Figs. 16-17
         "mttkrp": bench_mttkrp.run,        # Exp. 8 / Figs. 18-19
@@ -133,12 +135,21 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
     model-consistent append (``summary.warm_vs_cold_sweeps`` geomean,
     acceptance bar >= 2x) — and the padded-bucket batching receipt
     (one vmapped dispatch for J same-bucket jobs vs the same jobs one
-    dispatch each through the identical padded path).
+    dispatch each through the identical padded path).  Schema 9 adds the
+    ``dense`` section (see ``bench_dense``): the dense matrix-free
+    tier's crossover receipt on near-dense fixtures — per-fixture
+    sparse-vs-dense Phi seconds and ``dense_vs_segment`` speedup
+    (acceptance bar: > 1 on at least one fixture, surfaced as
+    ``summary.best_dense_vs_segment``), whether the fill cut's
+    heuristic selected the tier (``heuristic_dense``), and the
+    bf16-element/f32-accumulate path's timing + max relative error vs
+    the f32 dense result (``bf16_within_tier`` = within the 3e-2
+    conformance tolerance tier).
     """
-    out: dict = {"schema": 8, "generated_unix": time.time(),
+    out: dict = {"schema": 9, "generated_unix": time.time(),
                  "breakdown": {}, "policy": {}, "fused": {}, "sharded": {},
                  "rebalance": {}, "guard": {}, "model": {}, "serve": {},
-                 "summary": {}}
+                 "dense": {}, "summary": {}}
     found = False
 
     rows = _load_rows("breakdown")
@@ -293,6 +304,24 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
                     print("[benchmarks] WARNING: warm-vs-cold sweep ratio "
                           f"{r['warm_vs_cold_sweeps']}x is below the 2x bar",
                           flush=True)
+
+    rows = _load_rows("dense")
+    if rows:
+        found = True
+        keep = ("nnz", "fill", "fill_bin", "heuristic_dense", "segment_s",
+                "pallas_s", "dense_s", "dense_bf16_s", "dense_vs_segment",
+                "dense_vs_pallas", "bf16_vs_f32", "bf16_max_rel_err",
+                "bf16_within_tier")
+        for r in rows:
+            if "tensor" in r:
+                out["dense"][r["tensor"]] = {k: r[k] for k in keep if k in r}
+            elif r.get("summary") == "geomean":
+                out["summary"]["dense_vs_segment"] = r["dense_vs_segment"]
+                out["summary"]["best_dense_vs_segment"] = \
+                    r["best_dense_vs_segment"]
+                if r["best_dense_vs_segment"] <= 1.0:
+                    print("[benchmarks] WARNING: dense tier beat segment on "
+                          "no fixture (bar: at least one)", flush=True)
 
     if not found:
         return None

@@ -100,6 +100,33 @@ def _make_als_mode_update(
     n = mv.mode
     n_rows = mv.n_rows
 
+    def _gram_solve(factors: tuple, m_n):
+        gram = jnp.ones((rank, rank), m_n.dtype)
+        for m, f in enumerate(factors):
+            if m != n:
+                gram = gram * (f.T @ f)
+        return jnp.linalg.solve(
+            gram + _RIDGE * jnp.eye(rank, dtype=gram.dtype), m_n.T
+        ).T
+
+    if strategy == "dense":
+        dense = layout  # DenseModeData rides the layouts slot
+
+        @jax.jit
+        def _dense_update(x, factors: tuple):
+            # x arrives as a runtime argument (not a closure) so XLA does
+            # not embed the densified tensor as a program literal.
+            m_n = krao_reduce_rows(
+                None, None, None, n_rows, strategy="dense",
+                dense=dense.with_x(x), factors=factors,
+            )
+            return _gram_solve(factors, m_n)
+
+        def update(factors: tuple):
+            return _dense_update(dense.x, tuple(factors))
+
+        return update
+
     @jax.jit
     def update(factors: tuple):
         kr, vals_e, kr_e = hoisted_mode_inputs(mv, factors, strategy,
@@ -119,13 +146,7 @@ def _make_als_mode_update(
             factors=factors if pig is not None else None,
             combine=combine,
         )
-        gram = jnp.ones((rank, rank), m_n.dtype)
-        for m, f in enumerate(factors):
-            if m != n:
-                gram = gram * (f.T @ f)
-        return jnp.linalg.solve(
-            gram + _RIDGE * jnp.eye(rank, dtype=gram.dtype), m_n.T
-        ).T
+        return _gram_solve(factors, m_n)
 
     return update
 
@@ -196,8 +217,10 @@ def cp_als(
         _make_als_mode_update(
             mvs[n], rank, strategies[n], layouts[n], locals_[n],
             mesh if strategies[n] == "sharded" else None, pigs[n],
-            combine=effective_mode_combine(combine, strategies[n],
-                                           layouts[n], rank),
+            combine=effective_mode_combine(
+                combine, strategies[n], layouts[n], rank,
+                itemsize=jnp.dtype(factors[n].dtype).itemsize,
+            ),
         )
         for n in range(t.ndim)
     ]

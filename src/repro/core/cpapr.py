@@ -266,6 +266,10 @@ def hoisted_mode_inputs(mv: ModeView, factors, strategy: str, layout, pig):
         # Shard-local Pi: only the values expansion is hoisted (the
         # factor-row gathers happen per call inside the sharded reduce).
         return None, expand_vals_to_shards(layout, mv.sorted_vals), None
+    if strategy == "dense":
+        # The dense tier never builds Pi or a sorted-stream expansion —
+        # its hoisted state is the DenseModeData riding the layout slot.
+        return None, None, None
     pi = pi_rows(mv.sorted_idx, factors, mv.mode)
     if strategy == "sharded" and layout is not None:
         vals_e, pi_e = expand_to_shards(layout, mv.sorted_vals, pi)
@@ -368,7 +372,7 @@ def resolve_combine(combine: str, strategy: str) -> str:
 
 
 def effective_mode_combine(combine: str, strategy: str, layout,
-                           rank: int) -> str:
+                           rank: int, *, itemsize: int = 4) -> str:
     """Per-mode combine after the wire-aware ``"auto"`` demotion.
 
     ``"auto"`` prefers the reduce-scatter epilogue but consults
@@ -376,7 +380,10 @@ def effective_mode_combine(combine: str, strategy: str, layout,
     actual sharded layout: a heavily block-skewed split pads the owner
     slots past the psum wire, and auto then keeps the psum combine for
     that mode.  An explicit ``combine="reduce_scatter"`` is never
-    demoted.
+    demoted.  ``itemsize`` is the factor element width in bytes — the
+    wire model scales linearly with it, so an f64 run must thread 8 here
+    or both sides of the comparison are 2x off (they used to be: the
+    model silently assumed 4-byte elements).
     """
     eff = resolve_combine(combine, strategy)
     if (
@@ -386,7 +393,7 @@ def effective_mode_combine(combine: str, strategy: str, layout,
     ):
         from .distributed import preferred_combine  # deferred: avoids cycle
 
-        eff = preferred_combine(layout, rank)
+        eff = preferred_combine(layout, rank, itemsize=itemsize)
     return eff
 
 
@@ -510,10 +517,61 @@ def _make_mode_update(
     if (
         strategy == "sharded"
         and isinstance(layout, ShardedBlockedLayout)
-        and effective_mode_combine(cfg.combine, strategy, layout, cfg.rank)
+        and effective_mode_combine(
+            cfg.combine, strategy, layout, cfg.rank,
+            itemsize=jnp.dtype(mv.sorted_vals.dtype).itemsize,
+        )
         == "reduce_scatter"
     ):
         return _make_owner_mode_update(mv, cfg, layout, local_strategy, pig)
+
+    if strategy == "dense":
+        from repro.kernels.dense import ops as dense_ops
+        from .phi import _dense_operands
+
+        dense = layout  # DenseModeData rides the layouts slot
+
+        @jax.jit
+        def _dense_update(x, factors: tuple, lam: jax.Array):
+            # x arrives as a runtime argument (not a closure) so XLA does
+            # not embed the densified tensor as a program literal; the
+            # factor-side operands (c, a) are hoisted out of the inner
+            # loop — they depend only on the non-target factors.
+            a_n = factors[n]
+            xx, c, a = _dense_operands(dense.with_x(x), factors, a_n)
+
+            # --- scooch: lift inadmissible zeros (Alg. 1 line 3) ----------
+            phi0 = dense_ops.phi_dense(
+                xx, c, a, a_n * lam[None, :], eps=cfg.eps
+            )
+            s = jnp.where((a_n < cfg.kappa_tol) & (phi0 > 1.0),
+                          cfg.kappa, 0.0)
+            b0 = (a_n + s) * lam[None, :]
+
+            # --- fused inner MU loop (Alg. 1 lines 5-8) -------------------
+            def cond(state):
+                i, _, viol = state
+                return (i < cfg.max_inner) & (viol > cfg.tol)
+
+            def body(state):
+                i, b, _ = state
+                mu, viol = dense_ops.phi_mu_dense(xx, c, a, b, eps=cfg.eps)
+                return (i + 1, jnp.where(viol > cfg.tol, mu, b), viol)
+
+            i, b, viol = jax.lax.while_loop(
+                cond, body,
+                (jnp.int32(0), b0, jnp.asarray(jnp.inf, jnp.float32)),
+            )
+
+            # --- renormalize (Alg. 1 lines 9-10) --------------------------
+            lam_new = jnp.sum(b, axis=0)
+            safe = jnp.maximum(lam_new, cfg.eps)
+            return b / safe, lam_new, viol, i
+
+        def update(factors: tuple, lam: jax.Array):
+            return _dense_update(dense.x, tuple(factors), lam)
+
+        return update, None
 
     @jax.jit
     def update(factors: tuple, lam: jax.Array):
@@ -614,6 +672,31 @@ def _shard_mode_layout(mv: ModeView, pol: PhiPolicy, n_shards: int):
     return "sharded", shard_blocked_layout(base, n_shards)
 
 
+def _mode_row_width(factors, n: int) -> int:
+    """Cells per mode-``n`` row: the product of the other mode sizes.
+
+    This is the denominator of the per-mode fill fraction
+    (``nnz / (n_rows * row_width)``) that keys the dense-tier cut.
+    """
+    w = 1
+    for m, f in enumerate(factors):
+        if m != n:
+            w *= int(f.shape[0])
+    return w
+
+
+def _dense_mode_data(mv: ModeView, factors):
+    """Densify one mode into its :class:`repro.core.dense.DenseModeData`
+    (the dense tier's analog of a blocked layout); shape comes from the
+    factor row counts."""
+    from .dense import build_dense_mode  # deferred: keeps import DAG flat
+
+    shape = tuple(int(f.shape[0]) for f in factors)
+    return build_dense_mode(
+        np.asarray(mv.sorted_idx), np.asarray(mv.sorted_vals), shape, mv.mode
+    )
+
+
 def resolve_mode_policies(
     mvs: Sequence[ModeView],
     factors: Sequence[jax.Array],
@@ -674,14 +757,26 @@ def resolve_mode_policies(
                 # Segment-run stats computed once per mode (host numpy,
                 # same cost model as the layout sort) — they key the v2
                 # autotune cache so equal-size modes with different
-                # distributions stop sharing a winner.
-                stats_n = mode_run_stats(np.asarray(mv.rows), mv.n_rows)
+                # distributions stop sharing a winner.  row_width adds
+                # the fill fraction (the /fill key dimension), which
+                # arms the dense-tier cut in the tuner's heuristic.
+                stats_n = mode_run_stats(
+                    np.asarray(mv.rows), mv.n_rows,
+                    row_width=_mode_row_width(factors, n),
+                )
                 pol = tuner.policy_for_mode(
                     mv.rows, mv.sorted_vals, pi_n, b_n,
                     n_rows=mv.n_rows, rank=rank, stats=stats_n,
                 )
             policies[n] = pol
-            if pol.strategy in ("blocked", "pallas"):
+            if pol.strategy == "dense":
+                # Per-mode hybrid: a near-dense mode runs the matrix-free
+                # dense tier (always unsharded — its whole densified mode
+                # fits one device by construction) while the other modes
+                # keep their sparse winners.
+                strategies[n] = "dense"
+                layouts[n] = _dense_mode_data(mv, factors)
+            elif pol.strategy in ("blocked", "pallas"):
                 locals_[n] = pol.strategy
                 if sharded:
                     strategies[n], layouts[n] = _shard_mode_layout(
@@ -716,6 +811,14 @@ def resolve_mode_policies(
                 )
             else:  # an unblocked user policy has nothing to shard
                 strategies[n] = pol.strategy
+        return strategies, layouts, policies, locals_
+
+    if strategy == "dense":
+        pol = policy if isinstance(policy, PhiPolicy) \
+            else PhiPolicy(strategy="dense", block_nnz=8)
+        for n in range(n_modes):
+            policies[n] = pol
+            layouts[n] = _dense_mode_data(mvs[n], factors)
         return strategies, layouts, policies, locals_
 
     if strategy in ("blocked", "pallas"):
@@ -765,12 +868,14 @@ def _ckpt_fingerprint(t: SparseTensor, cfg: CPAPRConfig) -> str:
     })
 
 
-def _restore_mode_layouts(mvs, strategies, policies, mode_shards, rb_bounds):
+def _restore_mode_layouts(mvs, strategies, policies, mode_shards, rb_bounds,
+                          shape=None):
     """Rebuild per-mode layouts exactly as checkpointed: tuned block
     sizes from the saved policies, rebalanced shard assignments from the
     saved row-block cuts (``shard_blocked_layout(bounds=...)``) — the
     resumed schedule is identical to the killed run's, so the solve
-    continues bitwise."""
+    continues bitwise.  ``shape`` (the full tensor shape) re-densifies
+    any dense-tier modes."""
     layouts: list = [None] * len(mvs)
     for n, mv in enumerate(mvs):
         pol = policies[n]
@@ -780,6 +885,13 @@ def _restore_mode_layouts(mvs, strategies, policies, mode_shards, rb_bounds):
             )
             layouts[n] = shard_blocked_layout(
                 base, mode_shards[n], bounds=rb_bounds.get(n)
+            )
+        elif strategies[n] == "dense":
+            from .dense import build_dense_mode  # deferred
+
+            layouts[n] = build_dense_mode(
+                np.asarray(mv.sorted_idx), np.asarray(mv.sorted_vals),
+                tuple(shape), n,
             )
         elif strategies[n] in ("blocked", "pallas") and pol is not None:
             layouts[n] = build_blocked_layout(
@@ -865,7 +977,7 @@ def cpapr_mu(
                      for k, v in resume_state.get("rb_bounds", {}).items()}
         layouts = _restore_mode_layouts(
             mvs, strategies, policies, list(resume_state["mode_shards"]),
-            rb_bounds,
+            rb_bounds, shape=t.shape,
         )
         # restore the per-mode kappa ladder + combine demotions, so the
         # resumed trajectory matches the killed run even mid-recovery

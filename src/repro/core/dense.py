@@ -1,0 +1,122 @@
+"""Dense mode data for the matrix-free MTTKRP/Phi tier.
+
+``strategy="dense"`` skips the (nnz, R) Pi materialization entirely:
+instead of sorted nonzero streams + layout expansion, a mode carries its
+*mode-permuted densified tensor* ``x (K, I, J)`` (built once per mode,
+like a blocked layout) and the kernels contract factor tiles against it
+in VMEM (see ``repro.kernels.dense``).  Conventions:
+
+* ``I`` — the target mode's dimension (output rows).
+* ``J`` — the *widest* non-target mode: it becomes the matmul inner
+  width, so picking the largest keeps the MXU dots fat.
+* ``K`` — the remaining modes flattened row-major (in ascending mode
+  order); ``K == 1`` for matrices.
+
+The factor-side operands are derived per call (they change every MU
+iteration, unlike ``x``): ``c = factors[j_mode]`` and ``a`` = the
+row-major Khatri-Rao product of the ``k_modes`` factors, aligned with
+the ``K`` linearization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "DenseModeData",
+    "DENSE_MAX_ELEMS",
+    "build_dense_mode",
+    "dense_kr_factors",
+]
+
+#: refuse to densify past this many cells (16 MiB of f32) — the dense
+#: tier targets near-dense *small-mode* problems; the fill cut in
+#: ``core.policy.heuristic_policy`` enforces the same cap analytically.
+DENSE_MAX_ELEMS = 1 << 22
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DenseModeData:
+    """One mode's densified tensor + the static permutation metadata.
+
+    ``x`` is stored f32 (the data's natural dtype); mixed-precision
+    tiers cast at the call site.  Hashes by identity (like
+    ``BlockedLayout``) so it can ride jit static args; the routing layer
+    threads ``x`` as a runtime array instead to avoid literal embedding.
+    """
+
+    x: jax.Array  # (K, I, J) mode-permuted dense tensor
+    mode: int
+    j_mode: int
+    k_modes: tuple  # ascending mode indices flattened into K
+    shape: tuple  # full tensor shape
+
+    @property
+    def n_rows(self) -> int:
+        return self.x.shape[1]
+
+    def with_x(self, x) -> "DenseModeData":
+        """Same metadata around a (possibly traced / recast) ``x``."""
+        return dataclasses.replace(self, x=x)
+
+
+def build_dense_mode(
+    idx,
+    vals,
+    shape,
+    mode: int,
+    max_elems: int = DENSE_MAX_ELEMS,
+) -> DenseModeData:
+    """Densify one mode's COO data into the (K, I, J) kernel layout.
+
+    ``idx (nnz, N)`` full coordinates (any sort order), ``vals (nnz,)``.
+    Duplicate coordinates sum, matching ``dense_from_coo``.  Raises when
+    the dense cell count exceeds ``max_elems`` — callers should only
+    reach here after the fill cut fired.
+    """
+    shape = tuple(int(s) for s in shape)
+    total = math.prod(shape)
+    if total > max_elems:
+        raise ValueError(
+            f"refusing to densify mode {mode} of shape {shape}: "
+            f"{total} cells > max_elems={max_elems}"
+        )
+    if not (0 <= mode < len(shape)):
+        raise ValueError(f"mode {mode} out of range for shape {shape}")
+    others = [m for m in range(len(shape)) if m != mode]
+    if not others:
+        raise ValueError("dense tier needs at least a 2-way tensor")
+    j_mode = max(others, key=lambda m: shape[m])
+    k_modes = tuple(m for m in others if m != j_mode)
+    idx = np.asarray(idx)
+    vals = np.asarray(vals, np.float32)
+    n_k = math.prod(shape[m] for m in k_modes) if k_modes else 1
+    k_lin = np.zeros(idx.shape[0], np.int64)
+    for m in k_modes:
+        k_lin = k_lin * shape[m] + idx[:, m]
+    x = np.zeros((n_k, shape[mode], shape[j_mode]), np.float32)
+    np.add.at(x, (k_lin, idx[:, mode], idx[:, j_mode]), vals)
+    return DenseModeData(
+        x=jnp.asarray(x), mode=mode, j_mode=j_mode, k_modes=k_modes,
+        shape=shape,
+    )
+
+
+def dense_kr_factors(dense: DenseModeData, factors) -> tuple:
+    """(c, a) factor-side kernel operands for the current factors.
+
+    ``c = factors[j_mode]`` and ``a (K, R)`` is the Khatri-Rao product of
+    the ``k_modes`` factors with the *same* row-major linearization as
+    ``build_dense_mode``'s ``K`` axis (earlier modes vary slowest).
+    Dtypes follow the factors — the precision tier is declared there.
+    """
+    c = factors[dense.j_mode]
+    a = jnp.ones((1, c.shape[1]), c.dtype)
+    for m in dense.k_modes:
+        f = factors[m]
+        a = (a[:, None, :] * f[None, :, :]).reshape(-1, f.shape[1])
+    return c, a

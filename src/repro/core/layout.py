@@ -36,6 +36,7 @@ __all__ = [
     "ShardedPiGather",
     "build_blocked_layout",
     "build_shard_pi_gather",
+    "fill_stats",
     "mode_run_stats",
     "owner_partition",
     "rebalance_shards",
@@ -80,6 +81,18 @@ class ModeStats:
       dup_bin:   floor(-log2(dup_share))       — 0 = one row owns >1/2,
                  1 = >1/4, ... capped at 16 (uniform regime).
       empty_bin: floor(4 * empty_frac) in 0..3 — quartile bins.
+
+    The optional *fill* pair is the density/bandedness cut for the dense
+    matrix-free tier (GenTen-style, PAPERS.md arXiv 2510.14891): the
+    fraction of the mode's dense cells that hold a nonzero.  It needs
+    the per-row width (product of the other mode dims), which most call
+    sites don't have, so it defaults to *unknown* (-1) and the key
+    fragment only grows a ``/fill=bN`` dimension when it is known — old
+    v2 cache keys stay valid.
+
+      fill_frac: nnz / (n_rows * row_width), or -1.0 when unknown.
+      fill_bin:  floor(-log2(fill_frac)) capped at 15 (0 = >1/2 full,
+                 1 = >1/4, ...), or -1 when unknown.
     """
 
     nnz: int
@@ -91,30 +104,56 @@ class ModeStats:
     p95_bin: int
     dup_bin: int
     empty_bin: int
+    fill_frac: float = -1.0
+    fill_bin: int = -1
 
     DUP_BIN_CAP = 16
+    FILL_BIN_CAP = 15
 
     def key_fragment(self) -> str:
         """The binned-stats dimension of a v2 autotune cache key."""
-        return f"p95=b{self.p95_bin}/dup=b{self.dup_bin}/emt=b{self.empty_bin}"
+        frag = f"p95=b{self.p95_bin}/dup=b{self.dup_bin}/emt=b{self.empty_bin}"
+        if self.fill_bin >= 0:
+            frag += f"/fill=b{self.fill_bin}"
+        return frag
 
 
-def mode_run_stats(rows_sorted: np.ndarray, n_rows: int) -> ModeStats:
+def fill_stats(nnz: int, n_rows: int, row_width: int) -> tuple:
+    """(fill_frac, fill_bin) of a mode with ``row_width`` cells per row."""
+    cells = max(int(n_rows), 1) * max(int(row_width), 1)
+    fill = nnz / cells
+    if fill <= 0.0:
+        return 0.0, ModeStats.FILL_BIN_CAP
+    fill_bin = int(np.clip(np.floor(-np.log2(fill)), 0,
+                           ModeStats.FILL_BIN_CAP))
+    return float(fill), fill_bin
+
+
+def mode_run_stats(
+    rows_sorted: np.ndarray, n_rows: int, row_width: int | None = None
+) -> ModeStats:
     """Segment-run statistics from sorted mode-n coordinates.
 
     Runs once per mode on host numpy (same cost model as the layout
     builder's one-time sort); callers hoist it next to
     :func:`build_blocked_layout` and thread the result to the autotuner.
     Handles nnz=0 (all stats zero, maximally-empty bins).
+
+    ``row_width`` (the product of the *other* mode dimensions) enables
+    the fill-fraction fields that drive the dense-tier cut; without it
+    they stay unknown and the cache-key fragment is unchanged.
     """
     rows_sorted = np.asarray(rows_sorted)
     nnz = int(rows_sorted.shape[0])
     n_rows = int(n_rows)
+    fill_frac, fill_bin = -1.0, -1
+    if row_width is not None:
+        fill_frac, fill_bin = fill_stats(nnz, n_rows, row_width)
     if nnz == 0:
         return ModeStats(
             nnz=0, n_rows=n_rows, p95_run=0.0, max_run=0, dup_share=0.0,
             empty_frac=1.0, p95_bin=0, dup_bin=ModeStats.DUP_BIN_CAP,
-            empty_bin=3,
+            empty_bin=3, fill_frac=fill_frac, fill_bin=fill_bin,
         )
     counts = np.bincount(rows_sorted, minlength=max(n_rows, 1))
     runs = counts[counts > 0]
@@ -129,6 +168,7 @@ def mode_run_stats(rows_sorted: np.ndarray, n_rows: int) -> ModeStats:
         nnz=nnz, n_rows=n_rows, p95_run=p95, max_run=max_run,
         dup_share=float(dup_share), empty_frac=float(empty_frac),
         p95_bin=p95_bin, dup_bin=dup_bin, empty_bin=empty_bin,
+        fill_frac=fill_frac, fill_bin=fill_bin,
     )
 
 

@@ -18,6 +18,11 @@ Strategies (the paper's CPU/GPU composite implementation, mapped to TPU):
     MXU matmuls over a :class:`BlockedLayout` (pure-jnp emulation of the
     Pallas kernel; bitwise-same schedule).
   * ``pallas``   — the actual Pallas TPU kernel (repro.kernels.phi).
+  * ``dense``    — the matrix-free tier for near-dense modes: the mode's
+    densified (K, I, J) tensor (``repro.core.dense``) is contracted
+    against factor tiles in VMEM (repro.kernels.dense), skipping the
+    (nnz, R) Pi materialization and the sorted stream entirely.  Exact,
+    not approximate: zero entries carry zero Phi weight.
 
 PPA perturbations (paper Sec. 3.3) are exposed uniformly via ``perturb``:
 
@@ -73,7 +78,7 @@ __all__ = [
     "ALL_PHI_STRATEGIES",
 ]
 
-PHI_STRATEGIES = ("scatter", "segment", "blocked", "pallas")
+PHI_STRATEGIES = ("scatter", "segment", "blocked", "pallas", "dense")
 # "sharded" = blocked schedule partitioned over a mesh data axis with a
 # psum Phi combine; emulated on one device when no mesh is given.
 ALL_PHI_STRATEGIES = PHI_STRATEGIES + ("sharded",)
@@ -270,13 +275,18 @@ def _resolve_layout(rows, n_rows, layout, vals, pi, vals_e, pi_e):
     default blockings, mirroring the autotuner's v2 keying.  Pre-expanded
     ``vals_e``/``pi_e`` (from a hoisted :func:`expand_to_layout`) are
     passed through untouched so the solver's inner loop never re-gathers.
+
+    The heuristic sees the *real* backend (``jax.default_backend()``), not
+    a hardcoded "tpu" — CPU runs get the CPU branch's cache-model block
+    sizes.  Strategy choice is already fixed by the caller here; only the
+    blocking is taken from the policy.
     """
     if layout is None:
         rows_np = np.asarray(rows)
         stats = mode_run_stats(rows_np, n_rows)
         pol = heuristic_policy(
             int(rows_np.shape[0]), n_rows, int(pi.shape[1]),
-            platform="tpu", stats=stats,
+            platform=jax.default_backend(), stats=stats,
         )
         layout = build_blocked_layout(
             rows_np, n_rows, block_nnz=pol.block_nnz, block_rows=pol.block_rows
@@ -285,6 +295,29 @@ def _resolve_layout(rows, n_rows, layout, vals, pi, vals_e, pi_e):
     if vals_e is None or pi_e is None:
         vals_e, pi_e = expand_to_layout(layout, vals, pi)
     return layout, vals_e, pi_e
+
+
+def _dense_operands(dense, factors, b=None):
+    """Kernel operands ``(x, c, a)`` for the dense tier.
+
+    ``dense`` is a :class:`repro.core.dense.DenseModeData`; ``factors``
+    the full factor tuple.  The element tier follows ``b`` when given
+    (the MU path), else the ``c`` factor — ``x`` is stored f32 and cast
+    here, so a bf16 factor set drives the bf16-compute/f32-accumulate
+    kernel variant without a second densified copy.
+    """
+    if dense is None:
+        raise ValueError(
+            "strategy='dense' needs dense= (a DenseModeData; build one "
+            "with repro.core.dense.build_dense_mode)"
+        )
+    if factors is None:
+        raise ValueError("strategy='dense' needs the full factors tuple")
+    from .dense import dense_kr_factors  # deferred: keeps import DAG flat
+
+    c, a = dense_kr_factors(dense, factors)
+    dt = b.dtype if b is not None else c.dtype
+    return dense.x.astype(dt), c.astype(dt), a.astype(dt)
 
 
 def _default_shard_count(mesh) -> int:
@@ -398,8 +431,13 @@ def phi_from_rows(
     pi_gather=None,
     factors=None,
     combine: str = "psum",
+    dense=None,
 ) -> jax.Array:
     """Phi^(n) from pre-gathered Pi rows.  ``rows`` sorted unless 'scatter'.
+
+    For ``dense``, ``dense`` (a :class:`repro.core.dense.DenseModeData`)
+    plus the full ``factors`` tuple replace the sorted stream entirely —
+    ``rows``/``vals``/``pi`` may be ``None``.
 
     For ``blocked``/``pallas``, optional ``vals_e``/``pi_e`` are the
     layout-expanded arrays (see :func:`expand_to_layout`); pass them to
@@ -434,6 +472,13 @@ def phi_from_rows(
             rows, n_rows, layout, vals, pi, vals_e, pi_e
         )
         return phi_ops.phi_blocked(layout, vals_e, pi_e, b, float(eps))[:n_rows]
+    if strategy == "dense":
+        if perturb is not None:
+            raise ValueError("perturb is not supported for strategy='dense'")
+        from repro.kernels.dense import ops as dense_ops
+
+        x, c, a = _dense_operands(dense, factors, b)
+        return dense_ops.phi_dense(x, c, a, b, eps=eps)
     if strategy == "sharded":
         if perturb is not None:
             raise ValueError("perturb is not supported for strategy='sharded'")
@@ -489,6 +534,7 @@ def phi_mu_step(
     pi_gather=None,
     factors=None,
     combine: str = "psum",
+    dense=None,
 ) -> tuple:
     """One fused CP-APR inner MU step: ``(B', viol)`` in a single pass.
 
@@ -536,6 +582,12 @@ def phi_mu_step(
         )
         mu_pad, viol = phi_ops.phi_mu_blocked(layout, vals_e, pi_e, b, eps)
         return jnp.where(viol > tol, mu_pad[:n_rows], b), viol
+    if strategy == "dense":
+        from repro.kernels.dense import ops as dense_ops
+
+        x, c, a = _dense_operands(dense, factors, b)
+        mu, viol = dense_ops.phi_mu_dense(x, c, a, b, eps=eps)
+        return jnp.where(viol > tol, mu, b), viol
     if strategy == "sharded":
         from .distributed import phi_mu_sharded  # deferred: avoids cycle
 
@@ -577,6 +629,7 @@ def krao_reduce_rows(
     factors=None,
     sorted_rows: bool = True,
     combine: str = "psum",
+    dense=None,
 ) -> jax.Array:
     """Shared segmented Khatri-Rao reduction: ``out[i] = sum x_j * kr_j``.
 
@@ -590,6 +643,9 @@ def krao_reduce_rows(
       * ``blocked``  — the blocked segmented schedule (jnp emulation),
         via :func:`_phi_blocked_core` with plain weights;
       * ``pallas``   — the MTTKRP Pallas kernel (repro.kernels.mttkrp);
+      * ``dense``    — the matrix-free dense kernel on ``dense=`` (a
+        :class:`repro.core.dense.DenseModeData`) + ``factors``;
+        ``rows``/``vals``/``kr`` may be None;
       * ``sharded``  — row-block shards + one psum combine; with
         ``pi_gather``/``factors``, each shard computes its Khatri-Rao
         rows shard-locally and ``kr``/``kr_e`` may be None.
@@ -628,6 +684,11 @@ def krao_reduce_rows(
             rows, n_rows, layout, vals, kr, vals_e, kr_e
         )
         return mttkrp_ops.mttkrp_blocked(layout, vals_e, kr_e)[:n_rows]
+    if strategy == "dense":
+        from repro.kernels.dense import ops as dense_ops
+
+        x, c, a = _dense_operands(dense, factors)
+        return dense_ops.mttkrp_dense(x, c, a)
     if strategy == "sharded":
         from .distributed import krao_sharded  # deferred: avoids cycle
 
@@ -707,8 +768,27 @@ def phi_mode(
     layout: BlockedLayout | None = None,
     perturb: str | None = None,
 ) -> jax.Array:
-    """Full Phi^(n) for a mode view: Pi gather-product then reduction."""
+    """Full Phi^(n) for a mode view: Pi gather-product then reduction.
+
+    For ``strategy="dense"`` the mode is densified on the fly (shape
+    taken from the factor row counts) and no Pi is ever built — fine for
+    one-shot calls; solvers build the :class:`DenseModeData` once via
+    ``repro.core.cpapr.resolve_mode_policies`` instead.
+    """
     n = mv.mode
+    if strategy == "dense":
+        if perturb is not None:
+            raise ValueError("perturb is not supported for strategy='dense'")
+        from .dense import build_dense_mode
+
+        shape = tuple(int(f.shape[0]) for f in factors)
+        dn = build_dense_mode(
+            np.asarray(mv.sorted_idx), np.asarray(mv.sorted_vals), shape, n
+        )
+        return phi_from_rows(
+            None, None, None, b, n_rows=mv.n_rows, eps=eps,
+            strategy="dense", dense=dn, factors=tuple(factors),
+        )
     idx = mv.sorted_idx
     if perturb == "perfect_reuse":
         idx = idx * 0

@@ -29,6 +29,7 @@ import numpy as np
 
 __all__ = [
     "PhiPolicy",
+    "DENSE_FILL_BIN_MAX",
     "default_policy",
     "policy_grid",
     "grid_search",
@@ -39,6 +40,10 @@ __all__ = [
     "vmem_footprint_bytes",
     "SEARCH_ERRORS",
 ]
+
+
+# Near-dense cut for the matrix-free tier: fill bins 0 and 1 (> 2^-2 fill).
+DENSE_FILL_BIN_MAX = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,13 +261,27 @@ def heuristic_policy(
     and uniform modes with the same nnz/rows then size block_rows
     differently.  ``row_hist`` (raw per-row counts) is the legacy way to
     pass the same information.
+
+    Density cut (dense/matrix-free tier): when ``stats`` carries a fill
+    bin (see :func:`repro.core.layout.fill_stats`) and the mode is
+    near-dense (``fill > 2^-2``, i.e. bin 0 or 1) with a total cell count
+    small enough to materialize, the sparse schedules are all wasted
+    index traffic — return ``strategy="dense"`` (``block_nnz`` carries
+    the K-slab depth ``block_k``).  Zero entries contribute zero weight
+    to Phi, so the dense path is exact, not an approximation.
     """
     if platform is None:
         import jax
 
         platform = jax.default_backend()
-    if platform == "cpu":
-        return PhiPolicy(strategy="segment")
+    if stats is not None and getattr(stats, "fill_bin", -1) >= 0:
+        fill = float(getattr(stats, "fill_frac", 0.0))
+        if stats.fill_bin <= DENSE_FILL_BIN_MAX and fill > 0.0:
+            from repro.core.dense import DENSE_MAX_ELEMS
+
+            cells = nnz / fill
+            if cells <= DENSE_MAX_ELEMS:
+                return PhiPolicy(strategy="dense", block_nnz=8)
     d = max(1.0, nnz / max(1, n_rows))
     if stats is not None and getattr(stats, "nnz", 0) > 0:
         p95 = max(float(stats.p95_run), 1.0)
@@ -270,6 +289,20 @@ def heuristic_policy(
         p95 = float(np.percentile(row_hist, 95))
     else:
         p95 = d
+    if platform == "cpu":
+        # Cache-model sizing for the segmented reduce: ~2 average rows of
+        # work per chunk against a ~1 MiB L2 slice instead of VMEM, and a
+        # tighter block ceiling (no MXU to feed).  Strategy stays
+        # "segment" — the one-hot matmul schedules lose 40-250x here.
+        bn = int(2 ** np.clip(np.round(np.log2(2 * d)), 6, 10))
+        br = int(2 ** np.clip(np.round(np.log2(max(bn / max(p95, 1.0), 8))), 3, 8))
+        p = PhiPolicy(strategy="segment", block_nnz=bn, block_rows=br)
+        l2_budget = 1 << 20
+        while vmem_footprint_bytes(p, rank) > l2_budget and p.block_nnz > 64:
+            p = dataclasses.replace(p, block_nnz=p.block_nnz // 2)
+        while vmem_footprint_bytes(p, rank) > l2_budget and p.block_rows > 8:
+            p = dataclasses.replace(p, block_rows=p.block_rows // 2)
+        return p
     # block_nnz: cover ~4 average rows per step, snapped to sublane multiples.
     bn = int(2 ** np.clip(np.round(np.log2(4 * d)), 6, 11))
     # block_rows: enough rows that a block rarely crosses, >= 8 sublanes.

@@ -133,8 +133,11 @@ def state_ok(a, lam, viol=None) -> bool:
 # Failure classification + demotion ladder
 # ---------------------------------------------------------------------------
 
-# kernel/compile demotion chain: each rung is strictly more portable
-STRATEGY_DEMOTION = {"pallas": "blocked", "blocked": "segment"}
+# kernel/compile demotion chain: each rung is strictly more portable.
+# "dense" demotes straight to the sorted segmented reduce — the blocked
+# rungs need the sorted-stream layout the dense tier never built.
+STRATEGY_DEMOTION = {"pallas": "blocked", "blocked": "segment",
+                     "dense": "segment"}
 
 _OOM_MARKERS = ("resource_exhausted", "out of memory", "allocation failure")
 _KERNEL_MARKERS = ("mosaic", "pallas", "simulated kernel", "lowering",

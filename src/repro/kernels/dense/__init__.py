@@ -1,0 +1,1 @@
+from .ops import mttkrp_dense, phi_dense, phi_mu_dense  # noqa: F401

@@ -1,0 +1,171 @@
+"""Jitted wrappers for the dense matrix-free kernels: padding + dtype tier.
+
+Inputs arrive as the mode-permuted dense tensor ``x (K, I, J)`` plus the
+factor-side operands ``c (J, R)`` / ``a (K, R)`` (built by
+``repro.core.dense``).  TPU tile padding happens here (I to the sublane
+multiple, J and R to the 128-lane width, K to a whole number of
+``block_k`` tiles); results come back in the *caller's* element dtype —
+f32 passthrough, bf16 rounded exactly once from the f32 accumulator.
+f64 raises (:func:`repro.kernels.dtypes.check_kernel_dtype`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import round_up
+from repro.kernels.dtypes import ACC_DTYPE, check_kernel_dtype
+
+from .kernel import (
+    dense_mttkrp_pallas_call,
+    dense_phi_mu_pallas_call,
+    dense_phi_pallas_call,
+)
+
+__all__ = ["mttkrp_dense", "phi_dense", "phi_mu_dense", "default_block_k"]
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _sublane(dt) -> int:
+    return 16 if jnp.dtype(dt) == jnp.dtype(jnp.bfloat16) else 8
+
+
+def default_block_k(dt=jnp.float32) -> int:
+    """Slices per grid step — the VMEM streaming tile (and the sublane
+    multiple of the ``a`` tile, so bf16 doubles it)."""
+    return _sublane(dt)
+
+
+def _pad_dense(x, c, a, b, block_k):
+    """Pad (x, c, a[, b]) to TPU tiles; returns padded arrays + dims."""
+    k, i, j = x.shape
+    r = c.shape[1]
+    sub = _sublane(x.dtype)
+    i_pad = round_up(i, sub)
+    j_pad = round_up(j, 128)
+    r_pad = round_up(r, 128)
+    k_pad = round_up(max(k, 1), block_k)
+    x_p = jnp.pad(x, ((0, k_pad - k), (0, i_pad - i), (0, j_pad - j)))
+    c_p = jnp.pad(c, ((0, j_pad - j), (0, r_pad - r)))
+    a_p = jnp.pad(a, ((0, k_pad - k), (0, r_pad - r)))
+    b_p = None
+    if b is not None:
+        b_p = jnp.pad(b, ((0, i_pad - b.shape[0]), (0, r_pad - r)))
+    return x_p, c_p, a_p, b_p, (k_pad // block_k, i_pad, j_pad, r_pad)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def _run_mttkrp(x, c, a, block_k, interpret):
+    x_p, c_p, a_p, _, (n_grid, i_pad, j_pad, r_pad) = _pad_dense(
+        x, c, a, None, block_k
+    )
+    call = dense_mttkrp_pallas_call(
+        n_grid, block_k, i_pad, j_pad, r_pad,
+        acc_dtype=ACC_DTYPE, interpret=interpret,
+    )
+    return call(x_p, c_p, a_p)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "eps", "interpret"))
+def _run_phi(x, c, a, b, block_k, eps, interpret):
+    x_p, c_p, a_p, b_p, (n_grid, i_pad, j_pad, r_pad) = _pad_dense(
+        x, c, a, b, block_k
+    )
+    call = dense_phi_pallas_call(
+        n_grid, block_k, i_pad, j_pad, r_pad, eps=eps,
+        acc_dtype=ACC_DTYPE, interpret=interpret,
+    )
+    return call(x_p, c_p, a_p, b_p)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "eps", "interpret"))
+def _run_phi_mu(x, c, a, b, block_k, eps, interpret):
+    x_p, c_p, a_p, b_p, (n_grid, i_pad, j_pad, r_pad) = _pad_dense(
+        x, c, a, b, block_k
+    )
+    call = dense_phi_mu_pallas_call(
+        n_grid, block_k, i_pad, j_pad, r_pad, eps=eps,
+        acc_dtype=ACC_DTYPE, interpret=interpret,
+    )
+    return call(x_p, c_p, a_p, b_p)
+
+
+def _prep(name, x, c, a, b, block_k, interpret):
+    dt = check_kernel_dtype(name, x, c, a, b)
+    if interpret is None:
+        interpret = _default_interpret()
+    if block_k is None:
+        block_k = default_block_k(dt)
+    else:
+        block_k = round_up(int(block_k), _sublane(dt))
+    return dt, block_k, bool(interpret)
+
+
+def mttkrp_dense(
+    x: jax.Array,
+    c: jax.Array,
+    a: jax.Array,
+    *,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Matrix-free dense MTTKRP: ``M = sum_k x[k] @ (c * a[k])``.
+
+    ``x (K, I, J)`` mode-permuted dense tensor, ``c (J, R)``,
+    ``a (K, R)``; returns ``(I, R)`` in the caller's element dtype.
+    """
+    dt, block_k, interpret = _prep(
+        "mttkrp_dense", x, c, a, None, block_k, interpret
+    )
+    out = _run_mttkrp(x, c, a, block_k, interpret)
+    return out[: x.shape[1], : c.shape[1]].astype(dt)
+
+
+def phi_dense(
+    x: jax.Array,
+    c: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    eps: float = 1e-10,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Dense Phi^(n): Poisson weights against the in-kernel model slices.
+
+    Semantics match the sparse strategies exactly (zero entries
+    contribute zero weight).  Returns ``(I, R)`` in the caller's dtype.
+    """
+    dt, block_k, interpret = _prep("phi_dense", x, c, a, b, block_k, interpret)
+    out = _run_phi(x, c, a, b, block_k, float(eps), interpret)
+    return out[: x.shape[1], : c.shape[1]].astype(dt)
+
+
+def phi_mu_dense(
+    x: jax.Array,
+    c: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    eps: float = 1e-10,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+) -> tuple:
+    """Fused dense MU fast path.
+
+    Returns ``(mu, viol)``: ``mu = B * Phi`` as ``(I, R)`` in the
+    caller's dtype and ``viol`` the f32 scalar KKT violation
+    ``max |min(B, 1 - Phi)|`` over the padded window (padding is exact
+    zero on both sides of the min, contributing 0).
+    """
+    dt, block_k, interpret = _prep(
+        "phi_mu_dense", x, c, a, b, block_k, interpret
+    )
+    mu_pad, kkt = _run_phi_mu(x, c, a, b, block_k, float(eps), interpret)
+    mu = mu_pad[: x.shape[1], : c.shape[1]].astype(dt)
+    return mu, jnp.max(kkt)

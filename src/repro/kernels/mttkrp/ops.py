@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.layout import BlockedLayout, round_up
+from repro.kernels.dtypes import check_kernel_dtype
 
 from .kernel import mttkrp_pallas_call
 
@@ -29,15 +30,18 @@ def mttkrp_blocked_arrays(
     Like ``repro.kernels.phi.ops.phi_blocked_arrays``: no host-static
     :class:`BlockedLayout` is needed, so this entry point runs on
     per-shard slices inside ``shard_map`` where each device carries its
-    own layout data.  Returns the padded (n_rows_pad, R) window.
+    own layout data.  Returns the padded (n_rows_pad, R) window in the
+    caller's element dtype (f32 or bf16; f64 raises — see
+    ``repro.kernels.dtypes``).  Accumulation is always f32.
     """
+    dt = check_kernel_dtype("mttkrp_blocked", vals_e, kr_e)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     r = kr_e.shape[1]
     r_pad = round_up(r, 128)
-    vals2 = vals_e.reshape(-1, 1).astype(jnp.float32)
+    vals2 = vals_e.reshape(-1, 1)
     lrow2 = local_rows.astype(jnp.int32).reshape(-1, 1)
-    kr_p = jnp.pad(kr_e.astype(jnp.float32), ((0, 0), (0, r_pad - r)))
+    kr_p = jnp.pad(kr_e, ((0, 0), (0, r_pad - r)))
     call = mttkrp_pallas_call(
         n_grid=grid_rb.shape[0],
         block_nnz=block_nnz,
@@ -46,7 +50,7 @@ def mttkrp_blocked_arrays(
         rank_pad=r_pad,
         interpret=bool(interpret),
     )
-    return call(grid_rb.astype(jnp.int32), vals2, lrow2, kr_p)[:, :r]
+    return call(grid_rb.astype(jnp.int32), vals2, lrow2, kr_p)[:, :r].astype(dt)
 
 
 @functools.partial(jax.jit, static_argnames=("layout", "interpret"))

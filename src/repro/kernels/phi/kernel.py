@@ -80,8 +80,8 @@ def _phi_kernel(
     b_rows = jnp.dot(onehot, b_ref[...], preferred_element_type=jnp.float32)
     s = jnp.sum(b_rows * pi, axis=1, keepdims=True)  # (bn, 1)
     vals = vals_ref[...]
-    w = jnp.where(vals > 0, vals / jnp.maximum(s, eps), 0.0)  # (bn, 1)
-    contrib = w * pi  # (bn, R)
+    w = jnp.where(vals > 0, vals / jnp.maximum(s, eps), 0.0)  # (bn, 1) f32
+    contrib = (w * pi).astype(pi.dtype)  # (bn, R) element dtype
     phi_ref[...] += jnp.dot(onehot.T, contrib, preferred_element_type=jnp.float32)
 
 
@@ -122,8 +122,8 @@ def _phi_mu_kernel(
     b_rows = jnp.dot(onehot, b, preferred_element_type=jnp.float32)
     s = jnp.sum(b_rows * pi, axis=1, keepdims=True)  # (bn, 1)
     vals = vals_ref[...]
-    w = jnp.where(vals > 0, vals / jnp.maximum(s, eps), 0.0)  # (bn, 1)
-    contrib = w * pi  # (bn, R)
+    w = jnp.where(vals > 0, vals / jnp.maximum(s, eps), 0.0)  # (bn, 1) f32
+    contrib = (w * pi).astype(pi.dtype)  # (bn, R) element dtype
     mu_ref[...] += jnp.dot(onehot.T, contrib, preferred_element_type=jnp.float32)
 
     # Fused epilogue: the accumulated Phi window never leaves VMEM — it is

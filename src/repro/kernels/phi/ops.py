@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.layout import BlockedLayout, round_up
+from repro.kernels.dtypes import check_kernel_dtype
 
 from .kernel import phi_mu_pallas_call, phi_pallas_call
 
@@ -25,18 +26,16 @@ def _default_interpret() -> bool:
 
 
 def _pad_inputs(layout: BlockedLayout, vals_e, pi_e, b):
+    dt = check_kernel_dtype("phi_mu_blocked", vals_e, pi_e, b)
     r = pi_e.shape[1]
     r_pad = round_up(r, 128)
     n_rows_pad = layout.n_rows_pad
-    vals2 = vals_e.reshape(-1, 1).astype(jnp.float32)
+    vals2 = vals_e.reshape(-1, 1)
     lrow2 = jnp.asarray(layout.local_rows, jnp.int32).reshape(-1, 1)
-    pi_p = jnp.pad(pi_e.astype(jnp.float32), ((0, 0), (0, r_pad - r)))
-    b_p = jnp.pad(
-        b.astype(jnp.float32),
-        ((0, n_rows_pad - b.shape[0]), (0, r_pad - r)),
-    )
+    pi_p = jnp.pad(pi_e, ((0, 0), (0, r_pad - r)))
+    b_p = jnp.pad(b, ((0, n_rows_pad - b.shape[0]), (0, r_pad - r)))
     grid_rb = jnp.asarray(layout.grid_rb, jnp.int32)
-    return vals2, lrow2, pi_p, b_p, grid_rb, r, r_pad
+    return vals2, lrow2, pi_p, b_p, grid_rb, r, r_pad, dt
 
 
 def phi_blocked_arrays(
@@ -57,16 +56,19 @@ def phi_blocked_arrays(
     needed — grid/row metadata arrive as arrays, so this entry point works
     on per-shard slices inside ``shard_map`` where each device carries its
     own layout data.  ``b_win`` is the (n_rows_pad, R) B window; returns
-    the padded (n_rows_pad, R) Phi window.
+    the padded (n_rows_pad, R) Phi window in the caller's element dtype
+    (f32 or bf16; f64 raises — see ``repro.kernels.dtypes``).
+    Accumulation is always f32.
     """
+    dt = check_kernel_dtype("phi_blocked", vals_e, pi_e, b_win)
     if interpret is None:
         interpret = _default_interpret()
     r = pi_e.shape[1]
     r_pad = round_up(r, 128)
-    vals2 = vals_e.reshape(-1, 1).astype(jnp.float32)
+    vals2 = vals_e.reshape(-1, 1)
     lrow2 = local_rows.astype(jnp.int32).reshape(-1, 1)
-    pi_p = jnp.pad(pi_e.astype(jnp.float32), ((0, 0), (0, r_pad - r)))
-    b_p = jnp.pad(b_win.astype(jnp.float32), ((0, 0), (0, r_pad - r)))
+    pi_p = jnp.pad(pi_e, ((0, 0), (0, r_pad - r)))
+    b_p = jnp.pad(b_win, ((0, 0), (0, r_pad - r)))
     call = phi_pallas_call(
         n_grid=grid_rb.shape[0],
         block_nnz=block_nnz,
@@ -76,7 +78,9 @@ def phi_blocked_arrays(
         eps=float(eps),
         interpret=bool(interpret),
     )
-    return call(grid_rb.astype(jnp.int32), vals2, lrow2, pi_p, b_p)[:, :r]
+    return call(grid_rb.astype(jnp.int32), vals2, lrow2, pi_p, b_p)[
+        :, :r
+    ].astype(dt)
 
 
 @functools.partial(jax.jit, static_argnames=("layout", "eps", "interpret"))
@@ -97,7 +101,9 @@ def _run(layout: BlockedLayout, vals_e, pi_e, b, eps: float, interpret: bool):
 
 @functools.partial(jax.jit, static_argnames=("layout", "eps", "interpret"))
 def _run_mu(layout: BlockedLayout, vals_e, pi_e, b, eps: float, interpret: bool):
-    vals2, lrow2, pi_p, b_p, grid_rb, r, r_pad = _pad_inputs(layout, vals_e, pi_e, b)
+    vals2, lrow2, pi_p, b_p, grid_rb, r, r_pad, dt = _pad_inputs(
+        layout, vals_e, pi_e, b
+    )
 
     call = phi_mu_pallas_call(
         n_grid=layout.n_grid,
@@ -109,7 +115,7 @@ def _run_mu(layout: BlockedLayout, vals_e, pi_e, b, eps: float, interpret: bool)
         interpret=interpret,
     )
     mu_pad, kkt = call(grid_rb, vals2, lrow2, pi_p, b_p)
-    return mu_pad[:, :r], jnp.max(kkt)
+    return mu_pad[:, :r].astype(dt), jnp.max(kkt)
 
 
 def phi_blocked(

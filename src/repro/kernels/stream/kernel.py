@@ -39,14 +39,20 @@ def stream_pallas_call(
     block_rows: int,
     lanes: int = 128,
     s: float = 3.0,
+    dtype=jnp.float32,
     interpret: bool = False,
 ):
-    """Build a pallas_call for one STREAM op over a (n_rows, lanes) array."""
+    """Build a pallas_call for one STREAM op over a (n_rows, lanes) array.
+
+    ``dtype`` is the element dtype of both inputs and output — the
+    kernels are pure element-wise moves, so the output always matches
+    the caller's dtype instead of being forced to f32.
+    """
     if n_rows % block_rows:
         raise ValueError("n_rows must be a multiple of block_rows")
     grid = (n_rows // block_rows,)
     spec = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
-    out_shape = jax.ShapeDtypeStruct((n_rows, lanes), jnp.float32)
+    out_shape = jax.ShapeDtypeStruct((n_rows, lanes), dtype)
     n_in = {"copy": 1, "scale": 1, "add": 2, "triad": 2}[op]
     kernel = {
         "copy": _copy_kernel,

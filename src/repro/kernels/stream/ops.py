@@ -6,6 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dtypes import check_kernel_dtype
+
 from .kernel import STREAM_OPS, stream_pallas_call
 
 __all__ = ["stream_op", "STREAM_OPS"]
@@ -24,7 +26,8 @@ def _run(op, b, c, block_rows, s, interpret):
         c2 = c[: rows * lanes].reshape(rows, lanes)
         args = (b2, c2)
     call = stream_pallas_call(
-        op, rows, block_rows=block_rows, lanes=lanes, s=s, interpret=interpret
+        op, rows, block_rows=block_rows, lanes=lanes, s=s, dtype=b.dtype,
+        interpret=interpret,
     )
     return call(*args).reshape(-1)
 
@@ -75,4 +78,5 @@ def stream_op(
                 f"shape {tuple(b.shape)}"
             )
     c_in = c if needs_c else b
+    check_kernel_dtype("stream_op", b, c_in)
     return _run(op, b, c_in, block_rows, s, bool(interpret))

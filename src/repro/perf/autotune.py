@@ -185,12 +185,18 @@ def _policy_from_json(d: dict) -> PhiPolicy:
 def _stats_to_json(stats: ModeStats | None) -> dict | None:
     if stats is None:
         return None
-    return {
+    out = {
         "p95_run": stats.p95_run,
         "max_run": stats.max_run,
         "dup_share": round(stats.dup_share, 6),
         "empty_frac": round(stats.empty_frac, 6),
     }
+    if getattr(stats, "fill_bin", -1) >= 0:
+        # fill provenance rides along when the caller measured it (it is
+        # already part of the key via /fill=bN; this is for humans)
+        out["fill_frac"] = round(stats.fill_frac, 6)
+        out["fill_bin"] = int(stats.fill_bin)
+    return out
 
 
 def _env_int(name: str) -> int | None:
@@ -1083,6 +1089,27 @@ class Autotuner:
         nnz = int(rows.shape[0])
         key = policy_key(nnz, n_rows, rank, platform, stats=stats)
         v1_key = policy_key(nnz, n_rows, rank, platform)
+        # Dense-tier short-circuit: when the fill cut fires, the dense
+        # policy is served straight from the heuristic — the probe
+        # harness holds sparse-stream operands only (no densified
+        # tensor), so dense candidates cannot be timed here.  The entry
+        # is cached under the fill-keyed v2 key so repeat shapes skip
+        # even the heuristic arithmetic.
+        if getattr(stats, "fill_bin", -1) >= 0:
+            hp = heuristic_policy(
+                nnz, n_rows, rank, vmem_budget=self.vmem_budget,
+                platform=platform, stats=stats,
+            )
+            if hp.strategy == "dense":
+                hit = self.cache.lookup(key)
+                if hit is not None and hit.strategy == "dense":
+                    self.n_hits += 1
+                    return hit
+                self.n_searches += 1
+                self.cache.store(key, hp, float("inf"), "heuristic",
+                                 stats=stats,
+                                 extra={"probes": 0, "dense_cut": True})
+                return hp
         return self._tune_key(key, rows, vals, pi, b, n_rows, rank, platform,
                               stats=stats, v1_key=v1_key)
 

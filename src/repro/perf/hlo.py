@@ -24,6 +24,9 @@ __all__ = [
     "CollectiveStats",
     "allreduce_wire_bytes",
     "collective_stats",
+    "dense_input_bytes",
+    "dense_mttkrp_flops",
+    "dense_pad_dims",
     "entry_parameter_bytes",
     "phi_combine_wire_bound",
     "phi_reduce_scatter_wire_bound",
@@ -207,6 +210,74 @@ def pi_replicated_gather_bytes(
         sum(int(s) for m, s in enumerate(shape) if m != mode)
         * rank * itemsize
     )
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-int(x) // int(m)) * int(m)
+
+
+def dense_pad_dims(
+    k: int, i: int, j: int, rank: int,
+    itemsize: int = 4, block_k: int | None = None,
+) -> tuple:
+    """Post-tile-padding dims of the dense matrix-free operands.
+
+    Mirrors ``repro.kernels.dense.ops._pad_dense``: I to the sublane
+    multiple (8 for 4-byte elements, 16 for bf16), J and R to the
+    128-lane width, K to a whole number of ``block_k`` slices
+    (``block_k`` defaults to the sublane).  Returns
+    ``(k_pad, i_pad, j_pad, r_pad)``.
+    """
+    sub = 16 if itemsize == 2 else 8
+    if block_k is None:
+        block_k = sub
+    return (
+        _round_up(max(k, 1), block_k),
+        _round_up(i, sub),
+        _round_up(j, 128),
+        _round_up(rank, 128),
+    )
+
+
+def dense_mttkrp_flops(k: int, i: int, j: int, rank: int) -> float:
+    """Useful FLOPs of one dense matrix-free MTTKRP / Phi contraction.
+
+    Per K-slice the kernel runs one ``(I, J) @ (J, R)`` matmul
+    (``2 I J R``) plus the rank-1 ``a[k]`` scale-and-accumulate
+    (``2 I R``); the Phi/MU epilogues add only O(I R) on top.  Evaluate
+    on raw dims for the algorithmic count, or on :func:`dense_pad_dims`
+    output for what the compiled Pallas program actually executes.
+    """
+    return float(2.0 * k * i * rank * (j + 1.0))
+
+
+def dense_input_bytes(
+    k: int, i: int, j: int, rank: int,
+    itemsize: int = 4,
+    with_b: bool = False,
+    padded: bool = False,
+    block_k: int | None = None,
+) -> float:
+    """Byte bound on the dense-tier kernel operands.
+
+    ``padded=False`` (default) is the *exact* ENTRY-parameter byte count
+    of the jitted entry points in ``repro.kernels.dense.ops`` — padding
+    happens inside the jit, so the compiled program's parameters are the
+    raw ``x (K, I, J)``, ``c (J, R)``, ``a (K, R)`` (plus ``b (I, R)``
+    for the Phi/MU variants, ``with_b=True``).  Asserted against
+    :func:`entry_parameter_bytes` in ``tests/test_dense_tier.py``.
+
+    ``padded=True`` applies :func:`dense_pad_dims` first — the upper
+    bound on what the Pallas grid streams through VMEM (each operand
+    tile is fetched once per grid step it participates in; the x stream
+    dominates and is touched exactly once).
+    """
+    if padded:
+        k, i, j, rank = dense_pad_dims(k, i, j, rank, itemsize, block_k)
+    total = k * i * j + j * rank + k * rank
+    if with_b:
+        total += i * rank
+    return float(total * itemsize)
 
 
 _PARAM_RE = re.compile(r"=\s*(.*?)\s*parameter\((\d+)\)")

@@ -192,18 +192,30 @@ def corrupt_checkpoint(path: str, kind: str = "flip") -> None:
 
 
 def poison_autotune(tuner, mv, rank: int,
-                    strategy: str = "warpspeed") -> str:
+                    strategy: str = "warpspeed", shape=None) -> str:
     """Plant a structurally-valid cache entry whose policy names a
     nonexistent strategy under the exact key the tuner will serve for
     ``mv``'s problem; returns the poisoned key.  The entry passes every
     freshness check, so a solve with ``policy="auto"`` adopts it and hits
     the unknown-strategy error at update time — which the degradation
-    ladder must absorb."""
+    ladder must absorb.  Pass the tensor ``shape`` to reproduce the
+    solver's key exactly: the solver keys each mode with its fill
+    dimension (``/fill=bN``), which needs the mode's row width."""
+    import math
+
     import jax
+    import numpy as np
 
     from repro.perf.autotune import current_device_kind
 
-    key, _stats = tuner.mode_key(mv.rows, mv.n_rows, rank)
+    stats = None
+    if shape is not None:
+        from repro.core.layout import mode_run_stats
+
+        row_width = math.prod(shape) // shape[mv.mode]
+        stats = mode_run_stats(np.asarray(mv.rows), mv.n_rows,
+                               row_width=row_width)
+    key, _stats = tuner.mode_key(mv.rows, mv.n_rows, rank, stats=stats)
     tuner.cache.entries[key] = {
         "policy": {"strategy": strategy, "block_nnz": 64, "block_rows": 8,
                    "gather_mode": "prefetch"},

@@ -53,6 +53,10 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RANK = 4
 BN, BR = 64, 4  # conformance blocking: >= 4 row blocks on every fixture mode
 TOL = dict(rtol=3e-5, atol=1e-5)
+# the mixed-precision tier: bf16 elements carry ~8 mantissa bits
+# (rel step 2^-8 ~= 4e-3); with f32 accumulation the end-to-end error on
+# the fixtures measures < 0.5%, so 3e-2 is a ~6x guardband.
+TOL_BF16 = dict(rtol=3e-2, atol=3e-2)
 
 # ---------------------------------------------------------------------------
 # The strategy registry: future strategies add one row here
@@ -77,6 +81,13 @@ STRATEGIES = {
                                   combine="psum", local_pi=True),
     "sharded-rs-local-pi": dict(strategy="sharded", layout="sharded",
                                 combine="reduce_scatter", local_pi=True),
+    # the matrix-free dense tier: no Pi materialization, the mode's
+    # densified (K, I, J) tensor is contracted against factor tiles
+    # in-kernel.  The bf16 row is the mixed-precision variant (bf16
+    # elements, f32 accumulation) under its own tolerance tier.
+    "dense": dict(strategy="dense", layout=None, dense=True),
+    "dense-bf16": dict(strategy="dense", layout=None, dense=True,
+                       dtype="bfloat16"),
 }
 
 OPS = ("phi", "mttkrp", "mu")
@@ -133,6 +144,18 @@ def mode_problem(kind: str, mode: int, n_shards: int):
     return t, kt, mv, pi, b, base, sl, pig, vals_sh
 
 
+@functools.lru_cache(maxsize=None)
+def dense_mode_data(kind: str, mode: int):
+    """The densified (K, I, J) tensor for one fixture mode, built once
+    per process (like the layouts in :func:`mode_problem`)."""
+    from repro.core.dense import build_dense_mode
+
+    t, _ = make_fixture(kind)
+    mv = sort_mode(t, mode)
+    return build_dense_mode(np.asarray(mv.sorted_idx),
+                            np.asarray(mv.sorted_vals), t.shape, mode)
+
+
 def dense_mttkrp_reference(rows, vals, kr, n_rows):
     rows = np.asarray(rows)
     vals = np.asarray(vals, np.float64)
@@ -160,29 +183,44 @@ def run_case(name: str, kind: str, op: str, mode: int,
         if spec.get("local_pi"):
             kw.update(pi_gather=pig, factors=kt.factors, vals_e=vals_sh)
     use_pi = None if spec.get("local_pi") else pi
+    tolerance = TOL
+    b_in = b
+    if spec.get("dense"):
+        # dtype declares the precision tier: factors + B cast once here,
+        # the routing layer casts the densified x to match, the kernel
+        # accumulates f32 and the result comes back in this dtype.
+        dt = jnp.dtype(spec.get("dtype", "float32"))
+        kw.update(dense=dense_mode_data(kind, mode),
+                  factors=tuple(f.astype(dt) for f in kt.factors))
+        b_in = b.astype(dt)
+        if dt == jnp.dtype(jnp.bfloat16):
+            tolerance = TOL_BF16
 
     phi_ref = dense_phi_reference(mv.rows, mv.sorted_vals, pi, b, mv.n_rows)
     if op == "phi":
-        out = phi_from_rows(mv.rows, mv.sorted_vals, use_pi, b, mv.n_rows,
+        out = phi_from_rows(mv.rows, mv.sorted_vals, use_pi, b_in, mv.n_rows,
                             **kw)
-        np.testing.assert_allclose(np.asarray(out), phi_ref, **TOL,
+        np.testing.assert_allclose(np.asarray(out, np.float64), phi_ref,
+                                   **tolerance,
                                    err_msg=f"phi {name} {kind} mode {mode}")
     elif op == "mttkrp":
         ref = dense_mttkrp_reference(mv.rows, mv.sorted_vals, pi, mv.n_rows)
         out = krao_reduce_rows(mv.rows, mv.sorted_vals, use_pi, mv.n_rows,
                                **kw)
-        np.testing.assert_allclose(np.asarray(out), ref, **TOL,
+        np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                                   **tolerance,
                                    err_msg=f"mttkrp {name} {kind} mode {mode}")
     elif op == "mu":
         tol = 1e-4
         b64 = np.asarray(b, np.float64)
         viol_ref = np.max(np.abs(np.minimum(b64, 1.0 - phi_ref)))
         b_ref = b64 * phi_ref if viol_ref > tol else b64
-        bs, vs = phi_mu_step(mv.rows, mv.sorted_vals, use_pi, b, mv.n_rows,
+        bs, vs = phi_mu_step(mv.rows, mv.sorted_vals, use_pi, b_in, mv.n_rows,
                              tol=tol, **kw)
-        np.testing.assert_allclose(float(vs), viol_ref, **TOL,
+        np.testing.assert_allclose(float(vs), viol_ref, **tolerance,
                                    err_msg=f"mu viol {name} {kind} m{mode}")
-        np.testing.assert_allclose(np.asarray(bs), b_ref, **TOL,
+        np.testing.assert_allclose(np.asarray(bs, np.float64), b_ref,
+                                   **tolerance,
                                    err_msg=f"mu B' {name} {kind} mode {mode}")
     else:
         raise ValueError(op)

@@ -1,0 +1,344 @@
+"""Dense matrix-free tier: kernel parity, the analytic HLO bounds, the
+fill-fraction policy cut, platform-aware default blocking, and the
+itemsize-aware combine wire model.
+
+The cross-strategy value conformance of the dense rows lives in
+tests/test_conformance.py (``dense`` / ``dense-bf16`` registry rows);
+this file covers what the registry matrix cannot: compiled-program
+byte/FLOP accounting, the policy layer that *selects* the tier, and the
+dtype-aware wire model the combine picker consults.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import can_force_host_devices
+
+from repro.core.dense import DENSE_MAX_ELEMS, build_dense_mode, dense_kr_factors
+from repro.core.layout import mode_run_stats
+from repro.core.policy import DENSE_FILL_BIN_MAX, heuristic_policy
+from repro.core.sparse_tensor import random_poisson_tensor, sort_mode
+from repro.kernels.dense import mttkrp_dense, phi_dense
+from repro.perf.hlo import (
+    dense_input_bytes,
+    dense_mttkrp_flops,
+    dense_pad_dims,
+    entry_parameter_bytes,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RANK = 4
+
+
+@pytest.fixture(scope="module")
+def near_dense():
+    """A small 4-way tensor dense enough for the tier (fill ~0.5) —
+    4-way so the K axis really flattens two modes."""
+    t, kt = random_poisson_tensor(jax.random.PRNGKey(2), (14, 10, 6, 4),
+                                  nnz=1700, rank=RANK)
+    return t, kt
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity on a 4-way tensor (k_modes of length 2)
+# ---------------------------------------------------------------------------
+
+
+def _dense_oracle_mttkrp(t, factors, n):
+    idx = np.asarray(t.indices)
+    kr = np.ones((idx.shape[0], RANK))
+    for m, f in enumerate(factors):
+        if m != n:
+            kr *= np.asarray(f, np.float64)[idx[:, m]]
+    out = np.zeros((t.shape[n], RANK))
+    np.add.at(out, idx[:, n], np.asarray(t.values, np.float64)[:, None] * kr)
+    return out
+
+
+def test_dense_mttkrp_4way_matches_oracle(near_dense):
+    t, kt = near_dense
+    for n in range(t.ndim):
+        dn = build_dense_mode(np.asarray(t.indices), np.asarray(t.values),
+                              t.shape, n)
+        c, a = dense_kr_factors(dn, kt.factors)
+        out = mttkrp_dense(dn.x, c, a)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float64),
+            _dense_oracle_mttkrp(t, kt.factors, n),
+            rtol=3e-5, atol=1e-5, err_msg=f"mode {n}")
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOP / byte bounds vs the compiled program
+# ---------------------------------------------------------------------------
+
+
+def test_entry_parameter_bytes_match_analytic(near_dense):
+    """The jitted dense entry points' compiled ENTRY parameters carry
+    exactly the raw (K,I,J)+(J,R)+(K,R)[+(I,R)] operand bytes — padding
+    must stay inside the program, never inflate the interface."""
+    t, kt = near_dense
+    dn = build_dense_mode(np.asarray(t.indices), np.asarray(t.values),
+                          t.shape, 0)
+    c, a = dense_kr_factors(dn, kt.factors)
+    k, i, j = dn.x.shape
+
+    txt = jax.jit(lambda x, cc, aa: mttkrp_dense(x, cc, aa)).lower(
+        dn.x, c, a).compile().as_text()
+    got = sum(entry_parameter_bytes(txt))
+    assert got == dense_input_bytes(k, i, j, RANK), txt[:200]
+
+    b = kt.factors[0] * kt.lam[None, :]
+    txt = jax.jit(lambda x, cc, aa, bb: phi_dense(x, cc, aa, bb)).lower(
+        dn.x, c, a, b).compile().as_text()
+    got = sum(entry_parameter_bytes(txt))
+    assert got == dense_input_bytes(k, i, j, RANK, with_b=True)
+
+
+def test_padded_bound_dominates_raw():
+    """The padded streaming bound dominates the raw interface bytes and
+    the padded FLOP count dominates the algorithmic one (both collapse
+    to equality on already-tile-aligned dims)."""
+    for (k, i, j, r) in [(3, 14, 10, 4), (8, 8, 128, 128), (1, 1, 1, 1)]:
+        raw = dense_input_bytes(k, i, j, r)
+        padded = dense_input_bytes(k, i, j, r, padded=True)
+        assert padded >= raw
+        kp, ip, jp, rp = dense_pad_dims(k, i, j, r)
+        assert dense_mttkrp_flops(kp, ip, jp, rp) >= \
+            dense_mttkrp_flops(k, i, j, r)
+    # aligned dims: padding is a no-op, bound is tight
+    assert dense_input_bytes(8, 8, 128, 128, padded=True) == \
+        dense_input_bytes(8, 8, 128, 128)
+    # bf16 halves the bytes but doubles the sublane/block_k granularity
+    assert dense_input_bytes(8, 16, 128, 128, itemsize=2) == \
+        dense_input_bytes(8, 16, 128, 128) / 2
+
+
+# ---------------------------------------------------------------------------
+# The fill cut: policy layer selects the tier, with the cap honoured
+# ---------------------------------------------------------------------------
+
+
+def _stats_with_fill(nnz, n_rows, row_width):
+    rng = np.random.default_rng(0)
+    rows = np.sort(rng.integers(0, n_rows, nnz).astype(np.int32))
+    return mode_run_stats(rows, n_rows, row_width=row_width)
+
+
+@pytest.mark.parametrize("platform", ["cpu", "tpu"])
+def test_fill_cut_selects_dense(platform):
+    """fill > 2^-(DENSE_FILL_BIN_MAX+1) with the dense size under the cap
+    -> the dense tier, on every platform."""
+    stats = _stats_with_fill(nnz=1024, n_rows=32, row_width=64)  # fill 0.5
+    assert stats.fill_bin <= DENSE_FILL_BIN_MAX
+    pol = heuristic_policy(1024, 32, RANK, platform=platform, stats=stats)
+    assert pol.strategy == "dense", pol
+
+
+@pytest.mark.parametrize("platform", ["cpu", "tpu"])
+def test_sparse_fill_stays_sparse(platform):
+    stats = _stats_with_fill(nnz=1024, n_rows=256, row_width=4096)  # ~1e-3
+    assert stats.fill_bin > DENSE_FILL_BIN_MAX
+    pol = heuristic_policy(1024, 256, RANK, platform=platform, stats=stats)
+    assert pol.strategy != "dense", pol
+
+
+def test_fill_cut_honours_size_cap():
+    """Near-dense but too big to materialize: the cut must refuse (the
+    densified tensor would blow past DENSE_MAX_ELEMS)."""
+    stats = _stats_with_fill(nnz=4096, n_rows=64, row_width=128)  # fill 0.5
+    big = dataclasses.replace(
+        stats, nnz=3 * DENSE_MAX_ELEMS // 4)  # cells = nnz/fill > cap
+    pol = heuristic_policy(big.nnz, 64, RANK, platform="cpu", stats=big)
+    assert pol.strategy != "dense", pol
+
+
+def test_unknown_fill_never_dense():
+    """Call sites without row_width leave fill unknown (-1): the cut must
+    not fire on stale defaults."""
+    rng = np.random.default_rng(1)
+    rows = np.sort(rng.integers(0, 32, 1024).astype(np.int32))
+    stats = mode_run_stats(rows, 32)  # no row_width
+    assert stats.fill_bin == -1
+    pol = heuristic_policy(1024, 32, RANK, platform="cpu", stats=stats)
+    assert pol.strategy != "dense", pol
+
+
+def test_build_dense_mode_refuses_over_cap():
+    with pytest.raises(ValueError, match="max_elems"):
+        build_dense_mode(np.zeros((1, 3), np.int32), np.ones(1),
+                         (1 << 8, 1 << 8, 1 << 8), 0)
+
+
+# ---------------------------------------------------------------------------
+# Platform-aware default blocking (the _resolve_layout platform="tpu" fix)
+# ---------------------------------------------------------------------------
+
+
+def _hub_stats():
+    """The conformance hub fixture's mode-0 stream (p95 dominated by the
+    hub row): the case where CPU and TPU cache models disagree."""
+    from test_conformance import make_fixture
+
+    t, _ = make_fixture("hub")
+    mv = sort_mode(t, 0)
+    return int(np.asarray(mv.rows).shape[0]), mv.n_rows, \
+        mode_run_stats(np.asarray(mv.rows), mv.n_rows)
+
+
+def test_cpu_and_tpu_default_blockings_differ_on_hub():
+    """Regression for the hardcoded platform="tpu" in the layout default:
+    the CPU cache model (L2-budget, 2x p95 window) and the TPU VMEM
+    model (4x, wider clip floor) must produce *different* block_nnz on
+    the hub fixture — identical blockings would mean one platform is
+    running the other's tuning."""
+    nnz, n_rows, stats = _hub_stats()
+    cpu = heuristic_policy(nnz, n_rows, RANK, platform="cpu", stats=stats)
+    tpu = heuristic_policy(nnz, n_rows, RANK, platform="tpu", stats=stats)
+    assert cpu.block_nnz != tpu.block_nnz, (cpu, tpu)
+
+
+def test_resolve_layout_uses_real_backend():
+    """phi_from_rows with no layout must build the *current* backend's
+    default blocking (jax.default_backend()), not TPU's."""
+    from repro.core.phi import _resolve_layout
+
+    if jax.default_backend() != "cpu":
+        pytest.skip("host backend is not cpu; cannot pin the expectation")
+    from test_conformance import make_fixture
+
+    t, kt = make_fixture("hub")
+    mv = sort_mode(t, 0)
+    pi = jnp.ones((np.asarray(mv.rows).shape[0], RANK), jnp.float32)
+    layout, _, _ = _resolve_layout(mv.rows, mv.n_rows, None,
+                                   mv.sorted_vals, pi, None, None)
+    nnz, n_rows, stats = _hub_stats()
+    cpu = heuristic_policy(nnz, n_rows, RANK, platform="cpu", stats=stats)
+    tpu = heuristic_policy(nnz, n_rows, RANK, platform="tpu", stats=stats)
+    assert layout.block_nnz == cpu.block_nnz
+    assert layout.block_nnz != tpu.block_nnz
+
+
+# ---------------------------------------------------------------------------
+# Autotuner: the dense cut short-circuits probing
+# ---------------------------------------------------------------------------
+
+
+def test_autotuner_serves_dense_without_probes(tmp_path, near_dense):
+    """A mode past the fill cut is served analytically: no measurement
+    probes, result cached, cache hit on re-ask."""
+    from repro.perf.autotune import Autotuner
+
+    def no_measure(*a, **k):  # pragma: no cover - must never run
+        raise AssertionError("dense cut must not probe")
+
+    tuner = Autotuner(cache_path=str(tmp_path / "cache.json"),
+                      measure=no_measure)
+    nnz, n_rows = 1024, 32
+    stats = _stats_with_fill(nnz=nnz, n_rows=n_rows, row_width=64)
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(np.sort(rng.integers(0, n_rows, nnz)).astype(np.int32))
+    vals = jnp.ones((nnz,), jnp.float32)
+    pi = jnp.ones((nnz, RANK), jnp.float32)
+    b = jnp.ones((n_rows, RANK), jnp.float32)
+    pol = tuner.policy_for_mode(rows, vals, pi, b, n_rows, RANK, stats=stats)
+    assert pol.strategy == "dense"
+    assert tuner.counters()["probes"] == 0
+    pol2 = tuner.policy_for_mode(rows, vals, pi, b, n_rows, RANK, stats=stats)
+    assert pol2.strategy == "dense"
+    assert tuner.counters()["hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Itemsize-aware combine wire model (the 4-byte-element assumption fix)
+# ---------------------------------------------------------------------------
+
+
+def test_combine_wire_model_scales_with_itemsize():
+    """f64 factors double every byte figure the combine picker consults;
+    the effective_mode_combine plumbing accepts the itemsize."""
+    from test_conformance import BN, BR, mode_problem
+
+    from repro.core.cpapr import effective_mode_combine
+    from repro.core.distributed import (
+        owner_scatter_wire_bytes,
+        sharded_combine_bytes,
+    )
+    from repro.core.layout import owner_partition
+
+    _, _, _, _, _, _, sl, _, _ = mode_problem("uniform", 0, 4)
+    opart = owner_partition(sl)
+    assert sharded_combine_bytes(sl, RANK, itemsize=8) == \
+        2 * sharded_combine_bytes(sl, RANK, itemsize=4)
+    assert owner_scatter_wire_bytes(opart, RANK, itemsize=8) == \
+        2 * owner_scatter_wire_bytes(opart, RANK, itemsize=4)
+    # the picker itself is scale-invariant, so threading itemsize must
+    # never *change* a decision — only the byte accounting
+    for itemsize in (2, 4, 8):
+        assert effective_mode_combine("auto", "sharded", sl, RANK,
+                                      itemsize=itemsize) == \
+            effective_mode_combine("auto", "sharded", sl, RANK)
+
+
+ITEMSIZE_HLO_SCRIPT = """
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.core.distributed import (_phi_sharded_buf, make_phi_mesh,
+                                    sharded_combine_bytes)
+from repro.core.phi import expand_to_shards
+from repro.perf.hlo import collective_stats
+import test_conformance as tc
+
+S = jax.device_count()
+assert S == {devices}, S
+mesh = make_phi_mesh(S)
+t, kt, mv, pi, b, base, sl, pig, vals_sh = tc.mode_problem("uniform", 0, S)
+for itemsize, dt in ((4, jnp.float32), (2, jnp.bfloat16)):
+    vals_c = jnp.asarray(np.asarray(mv.sorted_vals), dt)
+    pi_c = jnp.asarray(np.asarray(pi), dt)
+    b_c = jnp.asarray(np.asarray(b), dt)
+    vals_es, pi_es = expand_to_shards(sl, vals_c, pi_c)
+    txt = _phi_sharded_buf.lower(sl, vals_es, pi_es, b_c, 1e-10, mesh,
+                                 "blocked").compile().as_text()
+    cs = collective_stats(txt, n_participants=S)
+    wire = cs.by_kind_wire["all-reduce"]
+    # XLA promotes sub-f32 all-reduces to the f32 accumulator, so the
+    # collective itemsize clamps at 4 — the model must use the combine
+    # operand's dtype, not blindly the element tier's
+    model = 2.0 * (S - 1) / S * sharded_combine_bytes(
+        sl, tc.RANK, max(itemsize, 4))
+    assert abs(wire - model) <= 0.1 * model, (itemsize, wire, model)
+    if itemsize < 4:
+        naive = 2.0 * (S - 1) / S * sharded_combine_bytes(sl, tc.RANK,
+                                                          itemsize)
+        assert wire > 1.5 * naive, (wire, naive)  # promotion is real
+    print("itemsize", itemsize, "wire", wire, "model", model)
+print("ITEMSIZE_OK")
+"""
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_psum_wire_bytes_track_itemsize_in_hlo(devices):
+    """Measured HLO all-reduce wire bytes track the element itemsize:
+    the bf16 combine moves half the f32 bytes and matches the
+    itemsize=2 model (the old model hardcoded 4-byte elements, so any
+    non-f32 tier was accounted 2x wrong)."""
+    if not can_force_host_devices():
+        pytest.skip("host-device forcing unavailable on this backend")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", ITEMSIZE_HLO_SCRIPT.format(devices=devices)],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ITEMSIZE_OK" in out.stdout

@@ -124,17 +124,29 @@ def test_expand_to_shards_nnz0_produces_padded_zeros():
 
 def test_single_row_mode_all_strategies_match_oracle():
     """n_rows=1 (a mode of extent 1): every strategy — including the
-    sharded schedule collapsed to one shard — matches the dense oracle."""
+    sharded schedule collapsed to one shard and the matrix-free dense
+    tier — matches the dense oracle."""
     n_rows, nnz, rank = 1, 37, 4
     rows = np.zeros(nnz, np.int32)
     vals, pi, b = _phi_problem(rows, n_rows, rank, seed=1)
     ref = dense_phi_reference(rows, vals, pi, b, n_rows)
     base = build_blocked_layout(rows, n_rows, block_nnz=16, block_rows=8)
     sl = shard_blocked_layout(base, 1)
+    # any (rows, vals, pi) problem is exactly a 2-way dense problem with
+    # one column per nonzero: x[0, rows[j], j] = vals[j], c = pi, a = 1
+    from repro.core.dense import DenseModeData
+
+    x = jnp.zeros((1, n_rows, nnz), jnp.float32)
+    x = x.at[0, jnp.asarray(rows), jnp.arange(nnz)].set(vals)
+    dn = DenseModeData(x=x, mode=0, j_mode=1, k_modes=(),
+                       shape=(n_rows, nnz))
     for strategy in ALL_PHI_STRATEGIES:
         layout = {"blocked": base, "pallas": base, "sharded": sl}.get(strategy)
+        kw = {}
+        if strategy == "dense":
+            kw = dict(dense=dn, factors=(b, pi))
         out = phi_from_rows(jnp.asarray(rows), vals, pi, b, n_rows,
-                            strategy=strategy, layout=layout)
+                            strategy=strategy, layout=layout, **kw)
         np.testing.assert_allclose(np.asarray(out), ref, rtol=3e-5, atol=1e-5,
                                    err_msg=strategy)
 

@@ -277,7 +277,8 @@ def test_poisoned_autotune_demotes_and_converges(tmp_path):
     t = fixture()
     tuner = Autotuner(cache_path=str(tmp_path / "cache.json"), measure=False)
     mv0 = sort_mode(t, 0)
-    faults.poison_autotune(tuner, mv0, RANK, strategy="warpspeed")
+    faults.poison_autotune(tuner, mv0, RANK, strategy="warpspeed",
+                           shape=t.shape)
     res = cpapr_mu(t, RANK, config=CPAPRConfig(
         rank=RANK, max_outer=SWEEPS, tol=TOL, policy="auto", autotuner=tuner))
     assert res.converged
