@@ -1,0 +1,127 @@
+"""N-D grid vs 1D sharded fused Phi->MU step (PR 10).
+
+Times one fused ``phi_mu_step`` under the 1D owner-partitioned
+reduce-scatter combine and under the ``A x B`` grid combine (column-axis
+all-gather + reduce-scatter) at the same device count, and records the
+per-device combine wire next to the analytic bounds: the 1D path's
+``(S-1) * own_rows * R`` against the grid's ``2 (B-1) * sub_rows * R``
+= O(I_n * R / A) — the Ballard/Knight/Rouse Omega(I_n * R / P) bound
+shape — so BENCH_phi.json receipts the measured 1D-vs-grid wire ratio
+per fixture.  Grid rows need an even device count >= 2 (the column axis
+must be real); odd/single-device runs emit no per-tensor rows.
+
+Force a 4-device CPU run with::
+
+    PYTHONPATH=src python -m benchmarks.run --devices 4 --only grid
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.core import sort_mode
+from repro.core.distributed import (
+    grid_scatter_wire_bytes,
+    make_grid_mesh,
+    make_phi_mesh,
+    owner_scatter_wire_bytes,
+)
+from repro.core.layout import (
+    build_blocked_layout,
+    build_grid_layout,
+    owner_partition,
+    shard_blocked_layout,
+)
+from repro.core.phi import (
+    _sharded_block_rows,
+    expand_to_grid,
+    expand_to_shards,
+    phi_mu_step,
+)
+from repro.core.pi import pi_rows
+from repro.perf.hlo import grid_combine_wire_bound, mttkrp_comm_lower_bound
+from repro.perf.timing import bench_seconds
+
+from .common import QUICK_TENSORS, RANK, Reporter, geomean, get_tensor
+
+TOL = 1e-4
+
+# Per-nonzero arrays are jit arguments, never closure constants — XLA
+# embeds closed-over arrays as literals, distorting CPU timings ~10-50x.
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows", "strategy", "layout", "mesh", "combine"),
+)
+def _step(rows, vals, pi, b, vals_e, pi_e, n_rows, strategy, layout, mesh,
+          combine="psum"):
+    return phi_mu_step(rows, vals, pi, b, n_rows=n_rows, tol=TOL,
+                       strategy=strategy, layout=layout,
+                       vals_e=vals_e, pi_e=pi_e, mesh=mesh, combine=combine)
+
+
+def run(tensors=QUICK_TENSORS, iters: int = 3, devices: int | None = None):
+    rep = Reporter("grid")
+    n_dev = devices if devices is not None else jax.device_count()
+    wire_ratios = []
+    speedups = []
+    for name in tensors:
+        t, kt = get_tensor(name)
+        mv = sort_mode(t, 0)
+        pi = pi_rows(mv.sorted_idx, kt.factors, 0)
+        b = kt.factors[0] * kt.lam[None, :]
+        br = _sharded_block_rows(mv.n_rows, max(1, n_dev))
+        base = build_blocked_layout(np.asarray(mv.rows), mv.n_rows, 256, br)
+        n_shards = min(n_dev, base.n_row_blocks)
+        if n_shards < 2 or n_shards % 2:
+            continue  # the grid needs a real column axis
+        gs = (n_shards // 2, 2)
+        slayout = shard_blocked_layout(base, n_shards)
+        try:
+            glayout = build_grid_layout(base, gs)
+        except ValueError:
+            continue  # too few grid steps per shard for the column split
+
+        real = jax.device_count() >= n_shards
+        mesh_1d = make_phi_mesh(n_shards) if real else None
+        mesh_g = make_grid_mesh(*gs) if real else None
+
+        vals_es, pi_es = expand_to_shards(slayout, mv.sorted_vals, pi)
+        t_rs = bench_seconds(
+            _step, mv.rows, mv.sorted_vals, pi, b, vals_es, pi_es,
+            n_rows=mv.n_rows, strategy="sharded", layout=slayout,
+            mesh=mesh_1d, combine="reduce_scatter", iters=iters)
+        vals_cs, pi_cs = expand_to_grid(glayout, mv.sorted_vals, pi)
+        t_grid = bench_seconds(
+            _step, mv.rows, mv.sorted_vals, pi, b, vals_cs, pi_cs,
+            n_rows=mv.n_rows, strategy="grid", layout=glayout,
+            mesh=mesh_g, iters=iters)
+
+        wire_1d = owner_scatter_wire_bytes(owner_partition(slayout), RANK)
+        wire_g = grid_scatter_wire_bytes(glayout, RANK)
+        ratio = wire_g / wire_1d if wire_1d else 0.0
+        wire_ratios.append(ratio)
+        speedups.append(t_rs / t_grid)
+        rep.row(tensor=name, nnz=mv.nnz, n_rows=mv.n_rows,
+                devices=n_shards, grid=f"{gs[0]}x{gs[1]}",
+                real_mesh=mesh_g is not None,
+                sharded_rs_s=round(t_rs, 6), grid_s=round(t_grid, 6),
+                grid_speedup=round(t_rs / t_grid, 3),
+                rs_wire_bytes=round(wire_1d),
+                grid_wire_bytes=round(wire_g),
+                wire_ratio=round(ratio, 4),
+                grid_bound_bytes=round(grid_combine_wire_bound(
+                    glayout.sub_rows, RANK, glayout.grid_b)),
+                comm_lower_bound_bytes=round(mttkrp_comm_lower_bound(
+                    mv.n_rows, RANK, n_shards)))
+    rep.row(summary="geomean", devices=n_dev,
+            wire_ratio=round(geomean(wire_ratios), 4),
+            grid_speedup=round(geomean(speedups), 3))
+    return rep.finish()
+
+
+if __name__ == "__main__":
+    run()

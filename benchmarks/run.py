@@ -34,6 +34,7 @@ def _load_all():
         bench_cutout,
         bench_dense,
         bench_fused,
+        bench_grid,
         bench_guard,
         bench_mttkrp,
         bench_modes,
@@ -58,6 +59,7 @@ def _load_all():
         "cutout": bench_cutout.run,        # PR 7: model-guided cold tuning
         "serve": bench_serve.run,          # PR 8: streaming service receipts
         "dense": bench_dense.run,          # PR 9: dense matrix-free tier
+        "grid": bench_grid.run,            # PR 10: N-D grid combine
         "modes": bench_modes.run,          # Exp. 6 / Figs. 14-15
         "stream": bench_stream.run,        # Exp. 7 / Figs. 16-17
         "mttkrp": bench_mttkrp.run,        # Exp. 8 / Figs. 18-19
@@ -144,12 +146,22 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
     heuristic selected the tier (``heuristic_dense``), and the
     bf16-element/f32-accumulate path's timing + max relative error vs
     the f32 dense result (``bf16_within_tier`` = within the 3e-2
-    conformance tolerance tier).
+    conformance tolerance tier).  Schema 10 adds the ``grid`` section
+    (see ``bench_grid``): the N-D grid combine's wire receipt at 4
+    devices — per-tensor 1D reduce-scatter vs ``A x B`` grid fused
+    Phi->MU sweep seconds (``grid_speedup``), the per-device combine
+    wire of each path (``rs_wire_bytes`` = (S-1)*own_rows*R vs
+    ``grid_wire_bytes`` = 2(B-1)*sub_rows*R, with ``wire_ratio`` =
+    grid/1D — < 1 means the grid moves less), the analytic
+    ``grid_bound_bytes`` the measured HLO wire is asserted against in
+    conformance, and the Omega(I_n*R/P) ``comm_lower_bound_bytes``
+    floor; geomeans surface as ``summary.grid_wire_ratio`` and
+    ``summary.grid_speedup``.
     """
-    out: dict = {"schema": 9, "generated_unix": time.time(),
+    out: dict = {"schema": 10, "generated_unix": time.time(),
                  "breakdown": {}, "policy": {}, "fused": {}, "sharded": {},
                  "rebalance": {}, "guard": {}, "model": {}, "serve": {},
-                 "dense": {}, "summary": {}}
+                 "dense": {}, "grid": {}, "summary": {}}
     found = False
 
     rows = _load_rows("breakdown")
@@ -322,6 +334,23 @@ def emit_bench_phi(path: str = BENCH_PHI_PATH) -> dict | None:
                 if r["best_dense_vs_segment"] <= 1.0:
                     print("[benchmarks] WARNING: dense tier beat segment on "
                           "no fixture (bar: at least one)", flush=True)
+
+    rows = _load_rows("grid")
+    if rows:
+        found = True
+        keep = ("devices", "grid", "real_mesh", "sharded_rs_s", "grid_s",
+                "grid_speedup", "rs_wire_bytes", "grid_wire_bytes",
+                "wire_ratio", "grid_bound_bytes", "comm_lower_bound_bytes")
+        for r in rows:
+            if "tensor" in r:
+                out["grid"][r["tensor"]] = {k: r[k] for k in keep if k in r}
+            elif r.get("summary") == "geomean":
+                out["summary"]["grid_wire_ratio"] = r["wire_ratio"]
+                out["summary"]["grid_speedup"] = r["grid_speedup"]
+                if r["wire_ratio"] >= 1.0 and out["grid"]:
+                    print("[benchmarks] WARNING: grid combine wire ratio "
+                          f"{r['wire_ratio']} is not below the 1D path",
+                          flush=True)
 
     if not found:
         return None

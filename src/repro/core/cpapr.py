@@ -47,10 +47,13 @@ import numpy as np
 from . import resilience
 from .layout import (
     BlockedLayout,
+    GridLayout,
     ShardedBlockedLayout,
     ShardedPiGather,
     build_blocked_layout,
+    build_grid_layout,
     build_shard_pi_gather,
+    choose_grid_shape,
     mode_run_stats,
     owner_partition,
     rebalance_shards,
@@ -59,6 +62,7 @@ from .layout import (
 )
 from .phi import (
     _sharded_block_rows,
+    expand_to_grid,
     expand_to_layout,
     expand_to_shards,
     expand_vals_to_shards,
@@ -105,6 +109,12 @@ class CPAPRConfig:
     # Shard count for the emulated sharded path (ignored when mesh is set;
     # defaults to jax.device_count()).
     n_shards: "int | None" = None
+    # strategy="grid": explicit (A, B) device grid; None picks per mode
+    # from the measured row-distribution skew (choose_grid_shape), where
+    # (S, 1) keeps the 1D combine and B > 1 trades it for the
+    # O(I_n * R / A) column reduce-scatter.  A grid run's mesh must be a
+    # ("row", "col") mesh of matching shape (make_grid_mesh).
+    grid_shape: "tuple | None" = None
     # strategy="sharded": compute Pi rows shard-locally from the factor
     # rows each shard touches (ShardedPiGather) instead of materializing
     # the replicated (nnz, R) Pi array — per-device factor bytes drop from
@@ -271,7 +281,9 @@ def hoisted_mode_inputs(mv: ModeView, factors, strategy: str, layout, pig):
         # its hoisted state is the DenseModeData riding the layout slot.
         return None, None, None
     pi = pi_rows(mv.sorted_idx, factors, mv.mode)
-    if strategy == "sharded" and layout is not None:
+    if strategy == "grid" and isinstance(layout, GridLayout):
+        vals_e, pi_e = expand_to_grid(layout, mv.sorted_vals, pi)
+    elif strategy == "sharded" and layout is not None:
         vals_e, pi_e = expand_to_shards(layout, mv.sorted_vals, pi)
     elif strategy in ("blocked", "pallas") and layout is not None:
         vals_e, pi_e = expand_to_layout(layout, mv.sorted_vals, pi)
@@ -355,10 +367,20 @@ def resolve_combine(combine: str, strategy: str) -> str:
     ``"auto"`` means reduce-scatter whenever the mode actually runs
     sharded (it is never slower and its per-device epilogue footprint is
     O(I_n * R / S)); non-sharded modes always resolve to ``"psum"`` —
-    there is nothing to combine.
+    there is nothing to combine.  The grid family has exactly one
+    combine (the column-axis all-gather + reduce-scatter pair, itself a
+    reduce-scatter epilogue), so ``"grid"`` always resolves to
+    ``"reduce_scatter"`` and an explicit ``"psum"`` is rejected.
     """
     from .distributed import PHI_COMBINES  # deferred: avoids cycle
 
+    if strategy == "grid":
+        if combine not in ("auto", "reduce_scatter"):
+            raise ValueError(
+                f"combine {combine!r} is not supported for strategy='grid'"
+                " (the grid combine is always the column reduce-scatter)"
+            )
+        return "reduce_scatter"
     if strategy != "sharded":
         return "psum"
     if combine == "auto":
@@ -386,6 +408,11 @@ def effective_mode_combine(combine: str, strategy: str, layout,
     model silently assumed 4-byte elements).
     """
     eff = resolve_combine(combine, strategy)
+    if isinstance(layout, GridLayout):
+        # The 1D-vs-N-D pick already happened at layout resolution
+        # (choose_grid_shape, keyed on the measured skew stats); a built
+        # GridLayout has exactly one combine flavour.
+        return "reduce_scatter"
     if (
         combine == "auto"
         and eff == "reduce_scatter"
@@ -490,6 +517,82 @@ def _make_owner_mode_update(
     return update, gather
 
 
+def _make_grid_mode_update(
+    mv: ModeView,
+    cfg: CPAPRConfig,
+    glayout: GridLayout,
+    local_strategy: str,
+):
+    """Grid-partitioned per-mode solve (the N-D combine epilogue).
+
+    The grid analog of :func:`_make_owner_mode_update`: the scooch and
+    the fused inner MU loop run on the grid-stacked (A*B, sub_rows, R)
+    carry, whose only per-iteration combine is the column-axis
+    all-gather + reduce-scatter pair — per-device wire
+    ``2 (B-1) * sub_rows * R`` = O(I_n * R / A), the arXiv 1708.07401
+    bound shape, instead of the 1D O(I_n * R).  ``gather(b_own)``
+    reassembles + renormalizes as a separate async dispatch, exactly
+    like the owner path's epilogue.
+    """
+    from .distributed import (  # deferred: avoids import cycle
+        grid_stack,
+        grid_unstack,
+        phi_grid_owner,
+        phi_mu_grid_owner,
+    )
+
+    n = mv.mode
+    mesh = cfg.mesh
+
+    @jax.jit
+    def update(factors: tuple, lam: jax.Array):
+        a_n = factors[n]
+        _, vals_e, pi_e = hoisted_mode_inputs(mv, factors, "grid",
+                                              glayout, None)
+        a_own = grid_stack(glayout, a_n)
+        lam_b = lam[None, None, :]
+
+        # --- scooch: lift inadmissible zeros (Alg. 1 line 3), grid-local
+        phi0_own = phi_grid_owner(
+            glayout, vals_e, pi_e, a_own * lam_b,
+            eps=cfg.eps, mesh=mesh, local_strategy=local_strategy,
+        )
+        s = jnp.where((a_own < cfg.kappa_tol) & (phi0_own > 1.0),
+                      cfg.kappa, 0.0)
+        b0_own = (a_own + s) * lam_b
+
+        # --- fused inner MU loop (Alg. 1 lines 5-8), grid-stacked carry
+        def cond(state):
+            i, _, viol = state
+            return (i < cfg.max_inner) & (viol > cfg.tol)
+
+        def body(state):
+            i, b_own, _ = state
+            b_new, viol = phi_mu_grid_owner(
+                glayout, vals_e, pi_e, b_own,
+                eps=cfg.eps, tol=cfg.tol, mesh=mesh,
+                local_strategy=local_strategy,
+            )
+            return (i + 1, b_new, viol)
+
+        i, b_own, viol = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), b0_own,
+                         jnp.asarray(jnp.inf, b0_own.dtype))
+        )
+        return b_own, viol, i
+
+    @jax.jit
+    def gather(b_own: jax.Array):
+        # --- renormalize (Alg. 1 lines 9-10) on the reassembled factor.
+        b = grid_unstack(glayout, b_own)
+        lam_new = jnp.sum(b, axis=0)
+        safe = jnp.maximum(lam_new, cfg.eps)
+        a_new = b / safe
+        return a_new, lam_new
+
+    return update, gather
+
+
 def _make_mode_update(
     mv: ModeView,
     cfg: CPAPRConfig,
@@ -513,7 +616,9 @@ def _make_mode_update(
 
     n = mv.mode
     n_rows = mv.n_rows
-    mesh = cfg.mesh if strategy == "sharded" else None
+    mesh = cfg.mesh if strategy in ("sharded", "grid") else None
+    if strategy == "grid" and isinstance(layout, GridLayout):
+        return _make_grid_mode_update(mv, cfg, layout, local_strategy)
     if (
         strategy == "sharded"
         and isinstance(layout, ShardedBlockedLayout)
@@ -672,6 +777,51 @@ def _shard_mode_layout(mv: ModeView, pol: PhiPolicy, n_shards: int):
     return "sharded", shard_blocked_layout(base, n_shards)
 
 
+def _grid_mode_layout(mv: ModeView, pol: PhiPolicy, n_shards: int,
+                      grid_shape, rank: int, stats=None):
+    """(strategy, layout, grid_shape) for one grid mode.
+
+    ``grid_shape=None`` picks the (A, B) split per mode from the
+    measured skew (:func:`choose_grid_shape` — hub modes take any wire
+    win, uniform modes need a decisive one, else the degenerate (S, 1)
+    keeps the 1D combine bitwise).  Falls back to the single-device
+    blocked/pallas path — mirroring :func:`_shard_mode_layout` — when
+    the blocking cannot honour the grid.
+    """
+    import warnings
+
+    base = build_blocked_layout(
+        np.asarray(mv.rows), mv.n_rows, pol.block_nnz, pol.block_rows
+    )
+    shape = grid_shape
+    if shape is None:
+        shape = choose_grid_shape(
+            mv.n_rows, pol.block_rows, rank, n_shards, stats=stats,
+            itemsize=jnp.dtype(mv.sorted_vals.dtype).itemsize,
+        )
+    a, b = int(shape[0]), int(shape[1])
+    local = pol.strategy if pol.strategy in ("blocked", "pallas") \
+        else "blocked"
+    if a > base.n_row_blocks:
+        warnings.warn(
+            f"grid CP-APR mode {mv.mode}: row axis {a} requested but the "
+            f"layout has only {base.n_row_blocks} row blocks; falling "
+            f"back to the single-device {local} path for this mode",
+            stacklevel=4,
+        )
+        return local, base, None
+    try:
+        return "grid", build_grid_layout(base, (a, b)), (a, b)
+    except ValueError as e:
+        warnings.warn(
+            f"grid CP-APR mode {mv.mode}: cannot honour grid {a}x{b} "
+            f"({e}); falling back to the single-device {local} path for "
+            f"this mode",
+            stacklevel=4,
+        )
+        return local, base, None
+
+
 def _mode_row_width(factors, n: int) -> int:
     """Cells per mode-``n`` row: the product of the other mode sizes.
 
@@ -709,6 +859,7 @@ def resolve_mode_policies(
     mesh: "object | None" = None,
     n_shards: "int | None" = None,
     combine: str = "auto",
+    grid_shape: "tuple | None" = None,
 ) -> tuple:
     """Per-mode (strategy, layout, policy, local_strategy) lists.
 
@@ -732,10 +883,23 @@ def resolve_mode_policies(
     policies: list = [None] * n_modes
     locals_: list = ["blocked"] * n_modes
     sharded = strategy == "sharded"
+    grid = strategy == "grid"
     eff_combine = resolve_combine(combine, strategy)
     eff_shards = (
-        _effective_shard_count(mesh, n_shards) if sharded else 1
+        _effective_shard_count(mesh, n_shards) if sharded or grid else 1
     )
+    # the per-mode (A, B) pick: explicit grid_shape pins it; None defers
+    # to choose_grid_shape on the measured mode skew
+    grid_shapes: list = [None] * n_modes
+
+    def _pick_grid_shape(mv, stats_n):
+        if grid_shape is not None:
+            return tuple(int(x) for x in grid_shape)
+        return choose_grid_shape(
+            mv.n_rows, _sharded_block_rows(mv.n_rows, eff_shards), rank,
+            eff_shards, stats=stats_n,
+            itemsize=jnp.dtype(mv.sorted_vals.dtype).itemsize,
+        )
 
     if policy == "auto":
         from repro.perf.autotune import Autotuner  # deferred: avoids cycle
@@ -745,7 +909,21 @@ def resolve_mode_policies(
             mv = mvs[n]
             pi_n = pi_rows(mv.sorted_idx, tuple(factors), n)
             b_n = factors[n] * lam[None, :]
-            if sharded:
+            if grid:
+                # whole-mode skew stats pick the (A, B) split, which then
+                # keys the sharded sub-problem tuning (/grid=AxB)
+                stats_n = mode_run_stats(
+                    np.asarray(mv.rows), mv.n_rows,
+                    row_width=_mode_row_width(factors, n),
+                )
+                grid_shapes[n] = _pick_grid_shape(mv, stats_n)
+                pol, _ = tuner.policy_for_sharded_mode(
+                    mv.rows, mv.sorted_vals, pi_n, b_n,
+                    n_rows=mv.n_rows, rank=rank,
+                    n_shards=int(grid_shapes[n][0]),
+                    combine=eff_combine, grid=grid_shapes[n],
+                )
+            elif sharded:
                 # per-shard stats are computed on the shard slices inside
                 # policy_for_sharded_mode; no whole-mode pass needed here
                 pol, _ = tuner.policy_for_sharded_mode(
@@ -778,7 +956,11 @@ def resolve_mode_policies(
                 layouts[n] = _dense_mode_data(mv, factors)
             elif pol.strategy in ("blocked", "pallas"):
                 locals_[n] = pol.strategy
-                if sharded:
+                if grid:
+                    strategies[n], layouts[n], grid_shapes[n] = \
+                        _grid_mode_layout(mv, pol, eff_shards,
+                                          grid_shapes[n], rank)
+                elif sharded:
                     strategies[n], layouts[n] = _shard_mode_layout(
                         mv, pol, eff_shards
                     )
@@ -792,7 +974,7 @@ def resolve_mode_policies(
                 strategies[n] = pol.strategy
         return strategies, layouts, policies, locals_
 
-    if sharded:
+    if sharded or grid:
         for n in range(n_modes):
             mv = mvs[n]
             if isinstance(policy, PhiPolicy):
@@ -806,9 +988,17 @@ def resolve_mode_policies(
             policies[n] = pol
             if pol.strategy in ("blocked", "pallas"):
                 locals_[n] = pol.strategy
-                strategies[n], layouts[n] = _shard_mode_layout(
-                    mv, pol, eff_shards
-                )
+                if grid:
+                    stats_n = mode_run_stats(np.asarray(mv.rows),
+                                             mv.n_rows)
+                    strategies[n], layouts[n], grid_shapes[n] = \
+                        _grid_mode_layout(mv, pol, eff_shards,
+                                          _pick_grid_shape(mv, stats_n),
+                                          rank)
+                else:
+                    strategies[n], layouts[n] = _shard_mode_layout(
+                        mv, pol, eff_shards
+                    )
             else:  # an unblocked user policy has nothing to shard
                 strategies[n] = pol.strategy
         return strategies, layouts, policies, locals_
@@ -847,6 +1037,7 @@ def _resolve_mode_policies(
         mesh=cfg.mesh,
         n_shards=cfg.n_shards,
         combine=cfg.combine,
+        grid_shape=cfg.grid_shape,
     )
 
 
@@ -865,21 +1056,37 @@ def _ckpt_fingerprint(t: SparseTensor, cfg: CPAPRConfig) -> str:
         "strategy": cfg.strategy,
         "combine": cfg.combine,
         "shard_pi": bool(cfg.shard_pi),
+        "grid_shape": [int(x) for x in cfg.grid_shape]
+        if cfg.grid_shape is not None else None,
     })
 
 
 def _restore_mode_layouts(mvs, strategies, policies, mode_shards, rb_bounds,
-                          shape=None):
+                          shape=None, mode_grids=None):
     """Rebuild per-mode layouts exactly as checkpointed: tuned block
     sizes from the saved policies, rebalanced shard assignments from the
     saved row-block cuts (``shard_blocked_layout(bounds=...)``) — the
     resumed schedule is identical to the killed run's, so the solve
     continues bitwise.  ``shape`` (the full tensor shape) re-densifies
-    any dense-tier modes."""
+    any dense-tier modes; ``mode_grids`` (per-mode ``[A, B]`` or None)
+    rebuilds any grid modes on their checkpointed device grid."""
     layouts: list = [None] * len(mvs)
     for n, mv in enumerate(mvs):
         pol = policies[n]
-        if strategies[n] == "sharded":
+        if strategies[n] == "grid":
+            g = (mode_grids or [None] * len(mvs))[n]
+            if g is None:
+                raise resilience.CheckpointError(
+                    f"checkpoint names strategy 'grid' for mode {n} but "
+                    f"records no grid shape (mode_grids missing)"
+                )
+            base = build_blocked_layout(
+                np.asarray(mv.rows), mv.n_rows, pol.block_nnz, pol.block_rows
+            )
+            layouts[n] = build_grid_layout(
+                base, (int(g[0]), int(g[1])), bounds=rb_bounds.get(n)
+            )
+        elif strategies[n] == "sharded":
             base = build_blocked_layout(
                 np.asarray(mv.rows), mv.n_rows, pol.block_nnz, pol.block_rows
             )
@@ -978,6 +1185,7 @@ def cpapr_mu(
         layouts = _restore_mode_layouts(
             mvs, strategies, policies, list(resume_state["mode_shards"]),
             rb_bounds, shape=t.shape,
+            mode_grids=resume_state.get("mode_grids"),
         )
         # restore the per-mode kappa ladder + combine demotions, so the
         # resumed trajectory matches the killed run even mid-recovery
@@ -1016,15 +1224,18 @@ def cpapr_mu(
 
     def _ctx(outer: int, n: int) -> dict:
         sl = layouts[n]
-        return {
+        ctx = {
             "outer": outer,
             "mode": n,
             "strategy": strategies[n],
             "local": locals_[n],
             "combine": mode_cfgs[n].combine,
             "n_shards": int(sl.n_shards)
-            if isinstance(sl, ShardedBlockedLayout) else 1,
+            if isinstance(sl, (ShardedBlockedLayout, GridLayout)) else 1,
         }
+        if isinstance(sl, GridLayout):
+            ctx["grid"] = (int(sl.grid_a), int(sl.grid_b))
+        return ctx
 
     def _invoke(outer: int, n: int, factors, lam):
         """One raw mode-update attempt (fault hooks + update + gather)."""
@@ -1060,8 +1271,36 @@ def cpapr_mu(
         recovery detail, or None when the ladder is exhausted (the error
         then propagates)."""
         detail = {"error": f"{type(exc).__name__}: {exc}"[:200]}
+
+        def _grid_to_1d(sl: GridLayout) -> str:
+            """The grid->1D rung: keep the row-shard split, drop the
+            column axis (STRATEGY_DEMOTION['grid']); a degenerate
+            single-row-shard grid leaves the distributed family for the
+            single-device local kernel instead.  Returns the action
+            label for the recovery record."""
+            if sl.grid_a > 1:
+                strategies[n], layouts[n] = "sharded", sl.slayout
+                if mode_cfgs[n].mesh is not None:
+                    from .distributed import make_phi_mesh  # deferred
+
+                    mode_cfgs[n] = dataclasses.replace(
+                        mode_cfgs[n], mesh=make_phi_mesh(sl.grid_a)
+                    )
+                return (f"grid {sl.grid_a}x{sl.grid_b}->"
+                        f"{STRATEGY_DEMOTION['grid']}@{sl.grid_a}")
+            local = locals_[n] if locals_[n] in ("blocked", "pallas") \
+                else "blocked"
+            strategies[n], layouts[n] = local, sl.slayout.base
+            return f"grid 1x{sl.grid_b}->single-device {local}"
+
         if kind in ("kernel", "policy"):
-            if strategies[n] == "sharded":
+            if strategies[n] == "grid" and isinstance(layouts[n], GridLayout):
+                if locals_[n] == "pallas":
+                    locals_[n] = "blocked"
+                    detail["action"] = "local pallas->blocked"
+                else:
+                    detail["action"] = _grid_to_1d(layouts[n])
+            elif strategies[n] == "sharded":
                 if locals_[n] == "pallas":
                     locals_[n] = "blocked"
                     detail["action"] = "local pallas->blocked"
@@ -1091,6 +1330,13 @@ def cpapr_mu(
             mode_cfgs[n] = dataclasses.replace(mode_cfgs[n], combine="psum")
         elif kind == "oom":
             sl = layouts[n]
+            if isinstance(sl, GridLayout):
+                # first OOM rung for grid: drop to the 1D row split (the
+                # replicated B window shrinks from own_rows_pad to the
+                # owned slice); further OOMs then halve the shard count
+                # through the existing sharded rungs
+                detail["action"] = _grid_to_1d(sl)
+                return detail
             if not isinstance(sl, ShardedBlockedLayout):
                 return None
             new_s = sl.n_shards // 2
@@ -1196,8 +1442,22 @@ def cpapr_mu(
     def _write_checkpoint(n_outer: int) -> None:
         rb_bounds: dict = {}
         shards = []
+        grids: list = []
         for n in range(n_modes):
             sl = layouts[n]
+            if isinstance(sl, GridLayout):
+                # persist the 1D row-shard cuts of the wrapped layout plus
+                # the (A, B) device grid, so resume rebuilds the exact
+                # cell schedule (build_grid_layout is deterministic in
+                # (base, shape, bounds))
+                rb_bounds[str(n)] = (
+                    [int(x) for x in sl.slayout.rb_start]
+                    + [int(sl.slayout.base.n_row_blocks)]
+                )
+                shards.append(int(sl.grid_a))
+                grids.append([int(sl.grid_a), int(sl.grid_b)])
+                continue
+            grids.append(None)
             if isinstance(sl, ShardedBlockedLayout):
                 rb_bounds[str(n)] = (
                     [int(x) for x in sl.rb_start]
@@ -1221,6 +1481,7 @@ def cpapr_mu(
             "combines": [mc.combine for mc in mode_cfgs],
             "kappas": [float(mc.kappa) for mc in mode_cfgs],
             "mode_shards": shards,
+            "mode_grids": grids,
             "rb_bounds": rb_bounds,
             "lam": lam,
             "factors": factors,

@@ -29,6 +29,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .layout import (
+    GridLayout,
     OwnerPartition,
     ShardedBlockedLayout,
     ShardedPiGather,
@@ -43,6 +44,11 @@ __all__ = [
     "PHI_COMBINES",
     "dist_cpapr_mu",
     "shard_mode_views",
+    "grid_scatter_wire_bytes",
+    "grid_stack",
+    "grid_unstack",
+    "krao_grid",
+    "make_grid_mesh",
     "make_phi_mesh",
     "mesh_device_count",
     "krao_sharded",
@@ -50,6 +56,10 @@ __all__ = [
     "owner_unstack",
     "owner_scatter_wire_bytes",
     "preferred_combine",
+    "phi_grid",
+    "phi_grid_owner",
+    "phi_mu_grid",
+    "phi_mu_grid_owner",
     "phi_sharded",
     "phi_sharded_owner",
     "phi_mu_sharded",
@@ -368,8 +378,18 @@ def owner_unstack(opart: OwnerPartition, stacked):
     psum path's all-reduce of the full window once per inner iteration.
     Keep it in its own jitted dispatch (the solver does) so the runtime
     can overlap the gather with the next mode's Phi prologue.
+
+    When every owner slot is really its full padded width (uniform
+    splits — the common case), the slots tile the combine window
+    exactly, so the reassembly is a single reshape: one traced op
+    instead of a chain of S sequential ``dynamic_update_slice``
+    dispatches over the same O(I_n * R) buffer.
     """
     r = stacked.shape[-1]
+    if np.all(np.asarray(opart.row_count) == opart.own_rows):
+        return stacked.reshape(opart.n_shards * opart.own_rows, r)[
+            : opart.n_rows
+        ]
     out = jnp.zeros((opart.buf_rows, r), stacked.dtype)
     for s in range(opart.n_shards):
         cnt = int(opart.row_count[s])
@@ -782,6 +802,296 @@ def _validate_phi_mesh(slayout: ShardedBlockedLayout, mesh: Mesh | None):
             f"mesh has {n_dev} devices but the layout has "
             f"{slayout.n_shards} shards"
         )
+
+
+# ---------------------------------------------------------------------------
+# N-D grid combine: all-gather + reduce-scatter over the column axis
+# ---------------------------------------------------------------------------
+
+
+def make_grid_mesh(grid_a: int, grid_b: int, devices=None) -> Mesh:
+    """2-D ``("row", "col")`` mesh over the first ``A*B`` devices.
+
+    Device ``(i, j)`` holds grid cell ``i*B + j`` — the row-major flat
+    order every ``(A*B, ...)`` cell array uses.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    n = int(grid_a) * int(grid_b)
+    if n > len(devices):
+        raise ValueError(
+            f"grid {grid_a}x{grid_b} needs {n} devices, "
+            f"have {len(devices)}"
+        )
+    return Mesh(
+        np.asarray(devices[:n]).reshape(int(grid_a), int(grid_b)),
+        ("row", "col"),
+    )
+
+
+def _validate_grid_mesh(glayout: GridLayout, mesh: Mesh | None):
+    if mesh is None:
+        return
+    if tuple(mesh.axis_names) != ("row", "col"):
+        raise ValueError(
+            f"grid mesh must have axes ('row', 'col'), got "
+            f"{tuple(mesh.axis_names)}"
+        )
+    shape = (int(mesh.shape["row"]), int(mesh.shape["col"]))
+    if shape != (glayout.grid_a, glayout.grid_b):
+        raise ValueError(
+            f"mesh shape {shape} does not match the layout's grid "
+            f"{(glayout.grid_a, glayout.grid_b)}"
+        )
+
+
+def grid_stack(glayout: GridLayout, b):
+    """Grid-stacked (A*B, sub_rows, R) form of a full factor block.
+
+    Cell ``(s, c)`` owns rows ``[row_start[s] + c*sub_rows, +sub_rows)``
+    of the combine window; rows past the shard's real count are masked
+    to zero (they only ever multiply invalid layout slots), exactly like
+    :func:`owner_stack`'s tail masking.
+    """
+    opart = owner_partition(glayout.slayout)
+    r = b.shape[-1]
+    b_buf = jnp.pad(b, ((0, glayout.stack_rows - b.shape[0]), (0, 0)))
+    slots = jnp.stack([
+        jax.lax.dynamic_slice(
+            b_buf, (int(s0), 0), (glayout.own_rows_pad, r)
+        )
+        for s0 in opart.row_start
+    ])
+    cells = slots.reshape(glayout.n_shards, glayout.sub_rows, r)
+    return jnp.where(jnp.asarray(glayout.masks())[:, :, None], cells, 0.0)
+
+
+def grid_unstack(glayout: GridLayout, stacked):
+    """Reassemble the full (n_rows, R) block from grid-stacked slices.
+
+    The once-per-mode-update factor gather of the grid epilogue; under a
+    mesh ``stacked`` is device-sharded on its cell axis, so consuming it
+    here gathers the O(I_n * R) updated rows once per mode update.
+    """
+    opart = owner_partition(glayout.slayout)
+    r = stacked.shape[-1]
+    shards = stacked.reshape(glayout.grid_a, glayout.own_rows_pad, r)
+    if (
+        glayout.own_rows_pad == opart.own_rows
+        and np.all(np.asarray(opart.row_count) == opart.own_rows)
+    ):
+        return shards.reshape(glayout.grid_a * opart.own_rows, r)[
+            : opart.n_rows
+        ]
+    out = jnp.zeros((glayout.stack_rows, r), stacked.dtype)
+    for s in range(glayout.grid_a):
+        cnt = int(opart.row_count[s])
+        out = jax.lax.dynamic_update_slice(
+            out, shards[s, :cnt], (int(opart.row_start[s]), 0)
+        )
+    return out[: opart.n_rows]
+
+
+def grid_scatter_wire_bytes(glayout: GridLayout, rank: int,
+                            itemsize: int = 4) -> float:
+    """Per-device ring wire bytes of one grid combine iteration.
+
+    The all-gather of the (own_rows_pad, R) B window plus the
+    reduce-scatter of the combined window, both over the size-``B``
+    column axis: ``2 (B-1) * sub_rows * R`` — the arXiv 1708.07401
+    bound shape O(I_n * R / A) instead of the 1D O(I_n * R).
+    """
+    if glayout.grid_b <= 1:
+        return 0.0
+    return float(
+        2 * (glayout.grid_b - 1) * glayout.sub_rows * rank * itemsize
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("glayout", "eps", "tol", "mesh", "local_strategy",
+                     "fused", "plain"),
+)
+def _grid_combined(glayout: GridLayout, vals_cs, pi_cs, b_own,
+                   eps: float, tol: float, mesh: Mesh | None,
+                   local_strategy: str, fused: bool, plain: bool):
+    """Grid combine core: column-axis all-gather + reduce-scatter.
+
+    Each cell computes a *partial* shard window over its slice of the
+    shard's nonzero stream; the column reduce-scatter genuinely sums
+    the ``B`` partials (unlike the 1D owner scatter, whose slots are
+    disjoint) and hands each cell its owned (sub_rows, R) tile.  The
+    B window is rebuilt per inner iteration by an all-gather of the
+    column's carry tiles — both collectives move O(I_n * R / A) per
+    device.  No row-axis collective exists at all: shard windows never
+    overlap on real rows, so at ``B=1`` the whole combine is the
+    identity and the result is bitwise the 1D reduce-scatter path's.
+
+    * ``fused=False`` — the grid-stacked combined window (A*B,
+      sub_rows, R); ``plain=True`` drops the model weighting (MTTKRP,
+      ``b_own`` None).
+    * ``fused=True`` — the owner-local MU step: scalar KKT ``pmax``
+      over both axes and the multiplicative update on owned tiles;
+      returns ``(b_own', viol)``.
+
+    Without a mesh the same schedule runs unrolled on one device,
+    summing each column's partials in cell order — bitwise-matching
+    the ring reduce-scatter at B <= 2 and numerically matching beyond.
+    """
+    slayout = glayout.slayout
+    bdim = glayout.grid_b
+    sub_rows, own_rows_pad = glayout.sub_rows, glayout.own_rows_pad
+    own_rows = owner_partition(slayout).own_rows
+    lrows = jnp.asarray(glayout.local_rows)
+    grbs = jnp.asarray(glayout.grid_rb)
+    smask = jnp.asarray(glayout.shard_masks())
+
+    if mesh is None:
+        parts = []
+        for s in range(glayout.grid_a):
+            if plain:
+                b_win = None
+            else:
+                b_shard = b_own[s * bdim : (s + 1) * bdim].reshape(
+                    own_rows_pad, -1
+                )
+                b_win = b_shard[:own_rows]
+            wins = [
+                _shard_window(slayout, eps, local_strategy,
+                              vals_cs[s * bdim + c], pi_cs[s * bdim + c],
+                              lrows[s * bdim + c], grbs[s * bdim + c],
+                              b_win)
+                for c in range(bdim)
+            ]
+            win = functools.reduce(jnp.add, wins)
+            win = jnp.where(smask[s * bdim][:, None], win, 0.0)
+            win = jnp.pad(win, ((0, own_rows_pad - own_rows), (0, 0)))
+            parts.append(win.reshape(bdim, sub_rows, -1))
+        stacked = jnp.concatenate(parts, axis=0)
+        if not fused:
+            return stacked
+        viol = jnp.max(jnp.abs(jnp.minimum(b_own, 1.0 - stacked)))
+        return jnp.where(viol > tol, b_own * stacked, b_own), viol
+
+    axes = tuple(mesh.axis_names)
+
+    def local(*args):
+        i = 0
+        vals_e = args[i][0]; i += 1
+        pi_e = args[i][0]; i += 1
+        lr = args[i][0]; i += 1
+        grb = args[i][0]; i += 1
+        b_c = None if plain else args[i][0]
+        i += 0 if plain else 1
+        mk = args[i][0]  # this cell's shard's (own_rows,) real-row mask
+
+        if plain:
+            b_win = None
+        else:
+            b_full = jax.lax.all_gather(b_c, "col", axis=0, tiled=True)
+            b_win = b_full[:own_rows]
+        win = _shard_window(slayout, eps, local_strategy,
+                            vals_e, pi_e, lr, grb, b_win)
+        win = jnp.where(mk[:, None], win, 0.0)
+        win = jnp.pad(win, ((0, own_rows_pad - own_rows), (0, 0)))
+        owned = jax.lax.psum_scatter(
+            win, "col", scatter_dimension=0, tiled=True
+        )
+        if not fused:
+            return owned[None]
+        viol = jax.lax.pmax(
+            jnp.max(jnp.abs(jnp.minimum(b_c, 1.0 - owned))), axes
+        )
+        return jnp.where(viol > tol, b_c * owned, b_c)[None], viol
+
+    sharded_args = [vals_cs, pi_cs, lrows, grbs]
+    if not plain:
+        sharded_args += [b_own]
+    sharded_args += [smask]
+    in_specs = tuple(
+        P(axes, *([None] * (a.ndim - 1))) for a in sharded_args
+    )
+    out_specs = (
+        (P(axes, None, None), P()) if fused else P(axes, None, None)
+    )
+    fn = _shard_map(local, mesh, in_specs=in_specs, out_specs=out_specs)
+    return fn(*sharded_args)
+
+
+def phi_grid(glayout: GridLayout, vals_cs, pi_cs, b,
+             eps: float = 1e-10, mesh: Mesh | None = None,
+             local_strategy: str = "blocked"):
+    """Phi^(n) over an ``A x B`` nonzero grid.  Inputs from
+    ``expand_to_grid``; the combine is the column-axis all-gather +
+    reduce-scatter pair (wire O(I_n * R / A) per device), and the full
+    (n_rows, R) result is reassembled here."""
+    _validate_grid_mesh(glayout, mesh)
+    stacked = _grid_combined(
+        glayout, vals_cs, pi_cs, grid_stack(glayout, b),
+        float(eps), 0.0, mesh, local_strategy, False, False)
+    return grid_unstack(glayout, stacked)
+
+
+def krao_grid(glayout: GridLayout, vals_cs, kr_cs,
+              mesh: Mesh | None = None, local_strategy: str = "blocked"):
+    """Grid-partitioned plain Khatri-Rao reduction (MTTKRP): same cell
+    machinery as :func:`phi_grid` without the model weighting, so the
+    per-iteration all-gather disappears and only the column
+    reduce-scatter remains."""
+    _validate_grid_mesh(glayout, mesh)
+    stacked = _grid_combined(
+        glayout, vals_cs, kr_cs, None,
+        0.0, 0.0, mesh, local_strategy, False, True)
+    return grid_unstack(glayout, stacked)
+
+
+def phi_mu_grid(glayout: GridLayout, vals_cs, pi_cs, b,
+                eps: float = 1e-10, tol: float = 1e-4,
+                mesh: Mesh | None = None,
+                local_strategy: str = "blocked"):
+    """Fused grid MU step returning the full updated factor.
+
+    The combine buffer's masked rows hold B = Phi = 0, contributing
+    ``|min(0, 1)| = 0`` to the KKT max and nothing to ``B * Phi`` —
+    the same invariant as the 1D padded windows.  The solver's inner
+    loop keeps the grid-stacked carry instead via
+    :func:`phi_mu_grid_owner`.
+    """
+    _validate_grid_mesh(glayout, mesh)
+    b_own, viol = _grid_combined(
+        glayout, vals_cs, pi_cs, grid_stack(glayout, b),
+        float(eps), float(tol), mesh, local_strategy, True, False)
+    return grid_unstack(glayout, b_own), viol
+
+
+def phi_grid_owner(glayout: GridLayout, vals_cs, pi_cs, b_own,
+                   eps: float = 1e-10, mesh: Mesh | None = None,
+                   local_strategy: str = "blocked"):
+    """Grid-stacked combined Phi (A*B, sub_rows, R) — no reassembly;
+    ``b_own`` is the grid-stacked B (:func:`grid_stack`).  The solver's
+    scooch step consumes this form directly."""
+    _validate_grid_mesh(glayout, mesh)
+    return _grid_combined(
+        glayout, vals_cs, pi_cs, b_own,
+        float(eps), 0.0, mesh, local_strategy, False, False)
+
+
+def phi_mu_grid_owner(glayout: GridLayout, vals_cs, pi_cs, b_own,
+                      eps: float = 1e-10, tol: float = 1e-4,
+                      mesh: Mesh | None = None,
+                      local_strategy: str = "blocked"):
+    """Grid-partitioned fused MU step: ``(b_own', viol)``, no gather.
+
+    The loop-carry form of the grid epilogue: the solver's inner
+    ``lax.while_loop`` carries the (A*B, sub_rows, R) tiles across
+    iterations and reassembles the full factor **once** per mode
+    update with :func:`grid_unstack` — per-inner-iteration combine
+    wire is the column pair's O(I_n * R / A) per device.
+    """
+    _validate_grid_mesh(glayout, mesh)
+    return _grid_combined(
+        glayout, vals_cs, pi_cs, b_own,
+        float(eps), float(tol), mesh, local_strategy, True, False)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -54,8 +54,11 @@ import numpy as np
 
 from .layout import (
     BlockedLayout,
+    GridLayout,
     ShardedBlockedLayout,
     build_blocked_layout,
+    build_grid_layout,
+    choose_grid_shape,
     mode_run_stats,
     round_up,
     shard_blocked_layout,
@@ -72,6 +75,7 @@ __all__ = [
     "phi_mu_step",
     "krao_reduce_rows",
     "expand_to_layout",
+    "expand_to_grid",
     "expand_to_shards",
     "expand_vals_to_shards",
     "PHI_STRATEGIES",
@@ -81,7 +85,10 @@ __all__ = [
 PHI_STRATEGIES = ("scatter", "segment", "blocked", "pallas", "dense")
 # "sharded" = blocked schedule partitioned over a mesh data axis with a
 # psum Phi combine; emulated on one device when no mesh is given.
-ALL_PHI_STRATEGIES = PHI_STRATEGIES + ("sharded",)
+# "grid" = the same schedule over an (A x B) device grid: A row-block
+# shards x B stream cells, column-axis all-gather + reduce-scatter
+# combine (wire O(I_n * R / A) per device); also emulated without a mesh.
+ALL_PHI_STRATEGIES = PHI_STRATEGIES + ("sharded", "grid")
 
 
 # ---------------------------------------------------------------------------
@@ -374,7 +381,9 @@ def _resolve_sharded(rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e):
 
 
 def _check_combine(strategy: str, combine: str) -> None:
-    """Validate the combine flavour; only the sharded strategy combines."""
+    """Validate the combine flavour; only the multi-device strategies
+    combine (the grid is always owner-scattered, so it accepts
+    ``reduce_scatter`` as a no-op alias of its only combine)."""
     if combine == "psum":
         return
     from .distributed import PHI_COMBINES  # deferred: avoids import cycle
@@ -383,10 +392,66 @@ def _check_combine(strategy: str, combine: str) -> None:
         raise ValueError(
             f"unknown combine {combine!r}; expected one of {PHI_COMBINES}"
         )
-    if strategy != "sharded":
+    if strategy not in ("sharded", "grid"):
         raise ValueError(
             f"combine={combine!r} only applies to strategy='sharded' "
             f"(got strategy={strategy!r})"
+        )
+
+
+def _resolve_grid(rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e,
+                  rank: int):
+    """Grid layout + expansion, with the single-device fallback.
+
+    Returns ``(layout, vals_e, pi_e, mesh)``.  Normally ``layout`` is the
+    :class:`GridLayout`; when the grid cannot be honoured (fewer row
+    blocks than the row axis, or fewer grid steps than the column axis)
+    a warning fires and the *base* :class:`BlockedLayout` comes back
+    instead (with ``None`` expansions) — callers detect that and run
+    the unsharded path on it, mirroring :func:`_resolve_sharded`.
+    """
+    if layout is not None and not isinstance(layout, GridLayout):
+        raise TypeError(
+            "strategy='grid' needs a GridLayout "
+            f"(got {type(layout).__name__}); use build_grid_layout()"
+        )
+    if layout is None:
+        if mesh is not None:
+            shape = (int(mesh.shape["row"]), int(mesh.shape["col"]))
+        else:
+            n_shards = _default_shard_count(None)
+            shape = choose_grid_shape(
+                n_rows, _sharded_block_rows(n_rows, n_shards), rank,
+                n_shards,
+            )
+        base = build_blocked_layout(
+            np.asarray(rows),
+            n_rows,
+            block_nnz=256,
+            block_rows=_sharded_block_rows(n_rows, shape[0]),
+        )
+        try:
+            layout = build_grid_layout(base, shape)
+        except ValueError as e:
+            warnings.warn(
+                f"grid Phi: {e}; falling back to the single-device "
+                "blocked path",
+                stacklevel=3,
+            )
+            return base, None, None, None
+        vals_e = pi_e = None  # any pre-expansion matched a different layout
+    if vals_e is None or pi_e is None:
+        vals_e, pi_e = expand_to_grid(layout, vals, pi)
+    return layout, vals_e, pi_e, mesh
+
+
+def _check_grid_args(pi_gather, perturb):
+    if perturb is not None:
+        raise ValueError("perturb is not supported for strategy='grid'")
+    if pi_gather is not None:
+        raise ValueError(
+            "pi_gather is not supported for strategy='grid'; use "
+            "strategy='sharded' for the shard-local Pi path"
         )
 
 
@@ -504,6 +569,23 @@ def phi_from_rows(
             )
         return phi_sharded(slayout, vals_e, pi_e, b, eps, mesh=mesh,
                            local_strategy=local_strategy, combine=combine)
+    if strategy == "grid":
+        _check_grid_args(pi_gather, perturb)
+        from .distributed import phi_grid  # deferred: avoids import cycle
+
+        glayout, vals_e, pi_e, mesh = _resolve_grid(
+            rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e,
+            b.shape[-1],
+        )
+        if not isinstance(glayout, GridLayout):
+            # grid infeasible for this mode: warned fallback on the base
+            # layout, keeping the requested local compute flavour
+            return phi_from_rows(
+                rows, vals, pi, b, n_rows, eps=eps,
+                strategy=local_strategy, layout=glayout,
+            )
+        return phi_grid(glayout, vals_e, pi_e, b, eps, mesh=mesh,
+                        local_strategy=local_strategy)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
@@ -611,6 +693,23 @@ def phi_mu_step(
             )
         return phi_mu_sharded(slayout, vals_e, pi_e, b, eps, tol, mesh=mesh,
                               local_strategy=local_strategy, combine=combine)
+    if strategy == "grid":
+        _check_grid_args(pi_gather, None)
+        from .distributed import phi_mu_grid  # deferred: avoids cycle
+
+        glayout, vals_e, pi_e, mesh = _resolve_grid(
+            rows, n_rows, layout, mesh, vals, pi, vals_e, pi_e,
+            b.shape[-1],
+        )
+        if not isinstance(glayout, GridLayout):
+            # grid infeasible for this mode: warned fallback on the base
+            # layout, keeping the requested local compute flavour
+            return phi_mu_step(
+                rows, vals, pi, b, n_rows, eps=eps, tol=tol,
+                strategy=local_strategy, layout=glayout,
+            )
+        return phi_mu_grid(glayout, vals_e, pi_e, b, eps, tol, mesh=mesh,
+                           local_strategy=local_strategy)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
@@ -712,6 +811,23 @@ def krao_reduce_rows(
             )
         return krao_sharded(slayout, vals_e, kr_e, mesh=mesh,
                             local_strategy=local_strategy, combine=combine)
+    if strategy == "grid":
+        _check_grid_args(pi_gather, None)
+        from .distributed import krao_grid  # deferred: avoids cycle
+
+        glayout, vals_e, kr_e, mesh = _resolve_grid(
+            rows, n_rows, layout, mesh, vals, kr, vals_e, kr_e,
+            kr.shape[-1],
+        )
+        if not isinstance(glayout, GridLayout):
+            # grid infeasible for this mode: warned fallback on the base
+            # layout, keeping the requested local compute flavour
+            return krao_reduce_rows(
+                rows, vals, kr, n_rows,
+                strategy=local_strategy, layout=glayout,
+            )
+        return krao_grid(glayout, vals_e, kr_e, mesh=mesh,
+                         local_strategy=local_strategy)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
@@ -736,6 +852,24 @@ def expand_to_shards(slayout: ShardedBlockedLayout, vals, pi):
     """
     gather = jnp.asarray(slayout.gather)
     valid = jnp.asarray(slayout.valid)
+    if vals.shape[0] == 0:  # gather on a 0-row operand is ill-formed
+        return (jnp.zeros(gather.shape, vals.dtype),
+                jnp.zeros(gather.shape + (pi.shape[1],), pi.dtype))
+    vals_e = jnp.where(valid, vals[gather], 0.0)
+    pi_e = jnp.where(valid[..., None], pi[gather], 0.0)
+    return vals_e, pi_e
+
+
+def expand_to_grid(glayout: GridLayout, vals, pi):
+    """Expand sorted per-nonzero arrays into per-cell padded layout order.
+
+    Returns ``vals_e`` of shape (A*B, n_grid_cell*block_nnz) and ``pi_e``
+    of shape (A*B, n_grid_cell*block_nnz, R); the leading axis is the
+    flat cell axis (cell ``(s, c)`` at ``s*B + c``), split row-major
+    over the ``("row", "col")`` mesh.
+    """
+    gather = jnp.asarray(glayout.gather)
+    valid = jnp.asarray(glayout.valid)
     if vals.shape[0] == 0:  # gather on a 0-row operand is ill-formed
         return (jnp.zeros(gather.shape, vals.dtype),
                 jnp.zeros(gather.shape + (pi.shape[1],), pi.dtype))

@@ -60,6 +60,7 @@ __all__ = [
     "quarantine_checkpoint",
     "save_checkpoint",
     "state_ok",
+    "validate_append_batch",
     "validate_decomposition_inputs",
 ]
 
@@ -136,8 +137,11 @@ def state_ok(a, lam, viol=None) -> bool:
 # kernel/compile demotion chain: each rung is strictly more portable.
 # "dense" demotes straight to the sorted segmented reduce — the blocked
 # rungs need the sorted-stream layout the dense tier never built.
+# "grid" demotes to the 1D row-sharded family (the N-D column combine is
+# the only machinery the rung sheds — the wrapped 1D shard layout is
+# reused as-is; the solver special-cases the layout/mesh rebuild).
 STRATEGY_DEMOTION = {"pallas": "blocked", "blocked": "segment",
-                     "dense": "segment"}
+                     "dense": "segment", "grid": "sharded"}
 
 _OOM_MARKERS = ("resource_exhausted", "out of memory", "allocation failure")
 _KERNEL_MARKERS = ("mosaic", "pallas", "simulated kernel", "lowering",
@@ -353,6 +357,62 @@ def validate_decomposition_inputs(t, rank: int, where: str = "cpapr_mu",
                 f"nonzero {j} (valid range [0, {int(dim)}))"
             )
     finite = np.isfinite(vals)
+    if not finite.all():
+        j = int(np.argmax(~finite))
+        raise ValueError(
+            f"{where}: non-finite nonzero value {vals[j]!r} at position {j}"
+        )
+    if nonneg:
+        neg = vals < 0
+        if neg.any():
+            j = int(np.argmax(neg))
+            raise ValueError(
+                f"{where}: negative nonzero value {vals[j]!r} at position "
+                f"{j}; the solvers assume nonnegative (Poisson count) data"
+            )
+
+
+def validate_append_batch(shape, new_indices, new_values,
+                          where: str = "append_nonzeros",
+                          nonneg: bool = True) -> None:
+    """The :func:`validate_decomposition_inputs` checks for an append
+    batch against an existing tensor ``shape`` — same mode naming and
+    message formats, applied *before* the merge so a malformed tenant
+    batch fails at the service boundary instead of surfacing as a
+    reshape error mid-solve."""
+    idx = np.asarray(new_indices)
+    vals = np.asarray(new_values)
+    ndim = len(shape)
+    if idx.ndim != 2 or idx.shape[1] != ndim:
+        raise ValueError(
+            f"{where}: indices must have shape (k, {ndim}) for a "
+            f"{ndim}-mode tensor, got {idx.shape}"
+        )
+    if not np.issubdtype(idx.dtype, np.integer):
+        raise ValueError(
+            f"{where}: indices must be integers, got dtype {idx.dtype}"
+        )
+    if vals.shape != (idx.shape[0],):
+        raise ValueError(
+            f"{where}: values must have shape ({idx.shape[0]},) to match "
+            f"indices, got {vals.shape}"
+        )
+    if not np.issubdtype(vals.dtype, np.floating) and \
+            not np.issubdtype(vals.dtype, np.integer):
+        raise ValueError(
+            f"{where}: values must be numeric counts, got dtype "
+            f"{vals.dtype}"
+        )
+    for n, dim in enumerate(shape):
+        col = idx[:, n]
+        bad = (col < 0) | (col >= dim)
+        if bad.any():
+            j = int(np.argmax(bad))
+            raise ValueError(
+                f"{where}: mode {n} has out-of-range index {int(col[j])} at "
+                f"nonzero {j} (valid range [0, {int(dim)}))"
+            )
+    finite = np.isfinite(vals.astype(np.float64, copy=False))
     if not finite.all():
         j = int(np.argmax(~finite))
         raise ValueError(

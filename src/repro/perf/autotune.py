@@ -128,6 +128,7 @@ def policy_key(
     stats: ModeStats | None = None,
     assign: str | None = None,
     combine: str | None = None,
+    grid: "tuple | None" = None,
 ) -> str:
     """Cache key for one tuning problem.
 
@@ -148,6 +149,11 @@ def policy_key(
     communication/revisit profile differs from the psum path, so winners
     tuned under one combine never silently serve the other (``"psum"``
     and ``None`` keep the PR-2..4 keyspace — old entries stay valid).
+    ``grid`` (an ``(A, B)`` device-grid shape with ``B > 1``) appends a
+    ``/grid=AxB`` dimension: a cell of an N-D grid revisits rows the 1D
+    shard of the same size never splits, so grid winners and 1D winners
+    stay separate entries (``B == 1`` *is* the 1D split and keeps the 1D
+    keyspace).
     """
     base = f"{platform}/nnz={nnz}/rows={n_rows}/rank={rank}"
     if stats is not None:
@@ -159,6 +165,8 @@ def policy_key(
         key = f"{key}/assign={assign}"
     if combine not in (None, "psum"):
         key = f"{key}/combine={combine}"
+    if grid is not None and int(grid[1]) > 1:
+        key = f"{key}/grid={int(grid[0])}x{int(grid[1])}"
     return key
 
 
@@ -1139,6 +1147,7 @@ class Autotuner:
         cuts: "list | None" = None,
         assign: str | None = None,
         combine: str | None = None,
+        grid: "tuple | None" = None,
     ) -> tuple:
         """Tuned policies for one mode split into ``n_shards`` row shards.
 
@@ -1167,7 +1176,11 @@ class Autotuner:
         ``combine`` (``"reduce_scatter"``; ``"psum"``/None keep the old
         keyspace) appends the sharded-epilogue dimension to each
         per-shard key, so policies tuned under the two combine flavours
-        never collide.
+        never collide.  ``grid`` (an ``(A, B)`` shape, ``B > 1``)
+        appends the ``/grid=AxB`` dimension for N-D grid modes — the
+        row-shard sub-problems are tuned as usual (a grid cell runs the
+        same local kernels on a slice of its row shard) but cached
+        apart from the 1D winners.
         """
         platform = self.platform or jax.default_backend()
         if pi is None and self.measure:
@@ -1218,7 +1231,7 @@ class Autotuner:
             shard_stats = mode_run_stats(local_rows, row_hi - row_lo)
             key = policy_key(c1 - c0, row_hi - row_lo, rank, platform,
                              n_shards=n_shards, stats=shard_stats,
-                             assign=assign, combine=combine)
+                             assign=assign, combine=combine, grid=grid)
             v1_key = policy_key(c1 - c0, row_hi - row_lo, rank, platform,
                                 n_shards=n_shards)
             pol = self._tune_key(

@@ -28,6 +28,8 @@ __all__ = [
     "dense_mttkrp_flops",
     "dense_pad_dims",
     "entry_parameter_bytes",
+    "grid_combine_wire_bound",
+    "mttkrp_comm_lower_bound",
     "phi_combine_wire_bound",
     "phi_reduce_scatter_wire_bound",
     "pi_gather_wire_bound",
@@ -167,6 +169,54 @@ def phi_reduce_scatter_wire_bound(
     return reduce_scatter_wire_bytes(
         own_rows_bound * rank * itemsize, n_shards
     )
+
+
+def mttkrp_comm_lower_bound(
+    n_rows: int,
+    rank: int,
+    n_devices: int,
+    itemsize: int = 4,
+) -> float:
+    """Ballard/Knight/Rouse per-device MTTKRP communication lower bound.
+
+    arXiv 1708.07401 (Thm. 4.1 family): any P-device MTTKRP whose
+    factor data is evenly spread must move Omega(I_n * R / P) words of
+    mode-n factor per device — each device must at minimum receive (or
+    own) its 1/P share of the output panel.  The 1D row-block combine
+    pays O(I_n * R) per device regardless of P (its reduce-scatter
+    operand is the *whole* window), so it can never meet this bound at
+    high device counts; the grid combine's per-device wire
+    (:func:`grid_combine_wire_bound`) is O(I_n * R / A) — the bound's
+    shape, approaching it as the column axis grows.
+    """
+    if n_devices <= 1:
+        return 0.0
+    return float(n_rows) * rank * itemsize / n_devices
+
+
+def grid_combine_wire_bound(
+    sub_rows: int,
+    rank: int,
+    grid_b: int,
+    itemsize: int = 4,
+) -> float:
+    """Per-device wire of one grid-combine inner iteration.
+
+    The ``A x B`` grid's only collectives are the column-axis pair: an
+    all-gather of the (B * sub_rows, R) B window (ring: ``(B-1) *
+    sub_rows * R``) and a reduce-scatter whose per-device output is the
+    owned (sub_rows, R) tile (ring: ``(B-1) * sub_rows * R``), so
+
+        wire = 2 (B-1) * sub_rows * R * itemsize
+
+    with ``sub_rows ~= I_n / (A * B)`` — O(I_n * R / A) total, the
+    arXiv 1708.07401 bound shape (:func:`mttkrp_comm_lower_bound`)
+    instead of the 1D owner scatter's O(I_n * R).  ``B=1`` grids have
+    no collective at all (both column ops are the identity).
+    """
+    if grid_b <= 1:
+        return 0.0
+    return float(2 * (grid_b - 1) * sub_rows * rank * itemsize)
 
 
 def pi_gather_wire_bound(

@@ -37,8 +37,11 @@ import dataclasses
 import math
 
 import jax
+import numpy as np
 
+from repro.core import resilience
 from repro.core.cpapr import CPAPRConfig, CPAPRResult, cpapr_mu
+from repro.core.layout import mode_run_stats
 from repro.core.sparse_tensor import (
     KTensor,
     SparseTensor,
@@ -85,6 +88,26 @@ class TenantState:
     ktensor: KTensor | None = None
     n_solves: int = 0
     n_appends: int = 0
+    # per-mode ModeStats of the *current* tensor — refreshed on every
+    # submit/append so the policy-relevant distribution bins (fill,
+    # hub/uniform) the next solve keys on are never a tensor behind
+    mode_stats: "list | None" = None
+
+
+def _tensor_mode_stats(tensor: SparseTensor, mvs) -> list:
+    """Per-mode run/fill stats of ``tensor`` (host pass, once per
+    request).  ``row_width`` — the cells per mode-n row — arms the
+    dense-tier fill cut, matching the solver's own stat pass."""
+    total = 1
+    for s in tensor.shape:
+        total *= int(s)
+    return [
+        mode_run_stats(
+            np.asarray(mv.rows), mv.n_rows,
+            row_width=total // max(int(tensor.shape[n]), 1),
+        )
+        for n, mv in enumerate(mvs)
+    ]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +132,11 @@ class ServiceResult:
     frac_new: float = 0.0
     sweep_budget: int = 0
     bucket: "object | None" = None
+    # append only: True when the merged tensor's per-mode distribution
+    # bins (the autotune key fragments: fill / hub / run bins) moved vs
+    # the pre-append stats — the signal that the solve's per-mode
+    # strategies may legitimately differ from the previous solve's
+    stats_changed: bool = False
 
 
 class DecompService:
@@ -174,6 +202,9 @@ class DecompService:
         **overrides,
     ) -> ServiceResult:
         """Cold-solve one tensor and register/replace the tenant state."""
+        resilience.validate_decomposition_inputs(
+            tensor, rank, where="DecompService.submit"
+        )
         cfg = self._config(rank, **overrides)
         mvs = [sort_mode(tensor, n) for n in range(tensor.ndim)]
         if key is None and init is None:
@@ -183,6 +214,7 @@ class DecompService:
         self.tenants[tenant] = TenantState(
             tensor=tensor, mode_views=mvs, rank=rank,
             ktensor=res.ktensor, n_solves=1,
+            mode_stats=_tensor_mode_stats(tensor, mvs),
         )
         self.n_jobs += 1
         return ServiceResult(tenant=tenant, result=res,
@@ -199,6 +231,10 @@ class DecompService:
         registered for later appends.
         """
         jobs = list(jobs)
+        for j in jobs:
+            resilience.validate_decomposition_inputs(
+                j.tensor, j.rank, where="DecompService.submit_many"
+            )
         groups = self.registry.group(
             [(j.tensor.shape, j.tensor.nnz, j.rank) for j in jobs]
         )
@@ -218,13 +254,15 @@ class DecompService:
             )
             self.n_batched_dispatches += 1
             for i, job, r in zip(idxs, members, res):
+                job_mvs = [sort_mode(job.tensor, n)
+                           for n in range(job.tensor.ndim)]
                 self.tenants[job.tenant] = TenantState(
                     tensor=job.tensor,
-                    mode_views=[sort_mode(job.tensor, n)
-                                for n in range(job.tensor.ndim)],
+                    mode_views=job_mvs,
                     rank=job.rank,
                     ktensor=r.ktensor,
                     n_solves=1,
+                    mode_stats=_tensor_mode_stats(job.tensor, job_mvs),
                 )
                 results[i] = ServiceResult(
                     tenant=job.tenant, result=r, batched=len(members) > 1,
@@ -249,9 +287,24 @@ class DecompService:
         under the freshness-aware sweep budget.
         """
         st = self.tenant(tenant)
+        resilience.validate_append_batch(
+            st.tensor.shape, new_indices, new_values,
+            where="DecompService.append",
+        )
         merged, info = append_nonzeros(st.tensor, new_indices, new_values)
         mvs = [merge_mode_view(mv, merged, st.tensor.nnz)
                for mv in st.mode_views]
+        # recompute the per-mode distribution/fill stats on the MERGED
+        # tensor before resolving policies: the solve below keys its
+        # per-mode strategies (incl. the dense-tier fill cut and the
+        # hub/uniform bins) on these, so an append that crossed a bin
+        # boundary re-resolves instead of riding the pre-append strategy
+        fresh_stats = _tensor_mode_stats(merged, mvs)
+        prev = st.mode_stats or [None] * len(fresh_stats)
+        stats_changed = any(
+            p is None or p.key_fragment() != f.key_fragment()
+            for p, f in zip(prev, fresh_stats)
+        )
         base_outer = int(
             overrides.get("max_outer", self.defaults["max_outer"])
         )
@@ -264,12 +317,14 @@ class DecompService:
         st.tensor = merged
         st.mode_views = mvs
         st.ktensor = res.ktensor
+        st.mode_stats = fresh_stats
         st.n_solves += 1
         st.n_appends += 1
         self.n_jobs += 1
         return ServiceResult(
             tenant=tenant, result=res, warm=True,
             frac_new=info.frac_new, sweep_budget=budget,
+            stats_changed=stats_changed,
         )
 
     # -- metrics ----------------------------------------------------------

@@ -88,6 +88,11 @@ STRATEGIES = {
     "dense": dict(strategy="dense", layout=None, dense=True),
     "dense-bf16": dict(strategy="dense", layout=None, dense=True,
                        dtype="bfloat16"),
+    # N-D grid sharding: nonzeros over an (A x B) device grid; the
+    # combine is the column-axis all-gather + reduce-scatter pair.  The
+    # shape follows the shard count ((2,2) at 4, (1,2) at 2, (1,1) at
+    # 1) so the forced-device legs drive a real 2-D ("row","col") mesh.
+    "grid": dict(strategy="grid", layout="grid"),
 }
 
 OPS = ("phi", "mttkrp", "mu")
@@ -144,6 +149,25 @@ def mode_problem(kind: str, mode: int, n_shards: int):
     return t, kt, mv, pi, b, base, sl, pig, vals_sh
 
 
+def grid_shape_for(n_shards: int) -> tuple:
+    """(A, B) with A*B == n_shards; B == 2 whenever 2 divides the count,
+    so the matrix exercises a genuine column axis at 2 and 4 devices."""
+    s = int(n_shards)
+    return (s // 2, 2) if s % 2 == 0 and s >= 2 else (max(s, 1), 1)
+
+
+@functools.lru_cache(maxsize=None)
+def grid_problem(kind: str, mode: int, grid_shape: tuple):
+    """The GridLayout for one fixture mode, cached like mode_problem so
+    jit caches (keyed on layout identity) hit across the matrix."""
+    from repro.core.layout import build_grid_layout
+
+    t, _ = make_fixture(kind)
+    mv = sort_mode(t, mode)
+    base = build_blocked_layout(np.asarray(mv.rows), mv.n_rows, BN, BR)
+    return build_grid_layout(base, grid_shape)
+
+
 @functools.lru_cache(maxsize=None)
 def dense_mode_data(kind: str, mode: int):
     """The densified (K, I, J) tensor for one fixture mode, built once
@@ -176,8 +200,19 @@ def run_case(name: str, kind: str, op: str, mode: int,
     spec = STRATEGIES[name]
     t, kt, mv, pi, b, base, sl, pig, vals_sh = mode_problem(
         kind, mode, n_shards)
-    layout = {None: None, "base": base, "sharded": sl}[spec["layout"]]
-    kw = dict(strategy=spec["strategy"], layout=layout)
+    if spec["layout"] == "grid":
+        # the grid row builds its own 2-D mesh: the 1-D phi mesh the
+        # sharded rows get handed does not have the ("row","col") axes
+        gs = grid_shape_for(n_shards)
+        layout = grid_problem(kind, mode, gs)
+        kw = dict(strategy="grid", layout=layout)
+        if mesh is not None:
+            from repro.core.distributed import make_grid_mesh
+
+            kw["mesh"] = make_grid_mesh(*gs)
+    else:
+        layout = {None: None, "base": base, "sharded": sl}[spec["layout"]]
+        kw = dict(strategy=spec["strategy"], layout=layout)
     if spec["layout"] == "sharded":
         kw.update(combine=spec.get("combine", "psum"), mesh=mesh)
         if spec.get("local_pi"):
@@ -271,6 +306,104 @@ def test_sharded_rows_bitwise_match_psum():
                            strategy="sharded", layout=sl,
                            combine="reduce_scatter")
         np.testing.assert_array_equal(np.asarray(ref), np.asarray(rs))
+
+
+def test_grid_sx1_bitwise_matches_1d_sharded():
+    """Acceptance receipt for the degenerate grid: an S x 1 grid's cell
+    arrays equal the 1D shard arrays and both column collectives are the
+    identity, so Phi and the fused MU step are *bitwise* the 1D sharded
+    reduce-scatter path's — on every fixture."""
+    from repro.core.layout import build_grid_layout
+
+    for kind in FIXTURES:
+        t, kt, mv, pi, b, base, sl, pig, vals_sh = mode_problem(kind, 0, 4)
+        g = build_grid_layout(base, (sl.n_shards, 1))
+        ref = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                            strategy="sharded", layout=sl,
+                            combine="reduce_scatter")
+        out = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                            strategy="grid", layout=g)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out),
+                                      err_msg=f"phi {kind}")
+        bs_r, vs_r = phi_mu_step(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                                 strategy="sharded", layout=sl,
+                                 combine="reduce_scatter")
+        bs_g, vs_g = phi_mu_step(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                                 strategy="grid", layout=g)
+        assert float(vs_r) == float(vs_g), kind
+        np.testing.assert_array_equal(np.asarray(bs_r), np.asarray(bs_g),
+                                      err_msg=f"mu {kind}")
+
+
+@functools.lru_cache(maxsize=None)
+def allhub_problem():
+    """A mode whose nonzeros ALL land in row 0 — under a row split one
+    shard owns every real nonzero, so the other shard's grid cells are
+    pure padding (the nnz=0-cell edge case)."""
+    shape = (32, 12, 10)
+    rng = np.random.RandomState(5)
+    nnz = 600
+    idx = np.stack([rng.randint(0, s, size=nnz) for s in shape], axis=1)
+    idx[:, 0] = 0
+    vals = rng.poisson(2.0, size=nnz).astype(np.float32) + 1.0
+    t = SparseTensor(shape=shape, indices=jnp.asarray(idx, jnp.int32),
+                     values=jnp.asarray(vals, jnp.float32))
+    kt = random_ktensor(jax.random.PRNGKey(17), shape, RANK)
+    mv = sort_mode(t, 0)
+    pi = pi_rows(mv.sorted_idx, kt.factors, 0)
+    b = kt.factors[0] * kt.lam[None, :]
+    base = build_blocked_layout(np.asarray(mv.rows), mv.n_rows, BN, BR)
+    return mv, pi, b, base
+
+
+def _grid_case_vs_oracle(mv, pi, b, glayout, mesh=None):
+    phi_ref = dense_phi_reference(mv.rows, mv.sorted_vals, pi, b, mv.n_rows)
+    mt_ref = dense_mttkrp_reference(mv.rows, mv.sorted_vals, pi, mv.n_rows)
+    kw = dict(strategy="grid", layout=glayout, mesh=mesh)
+    phi = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows, **kw)
+    np.testing.assert_allclose(np.asarray(phi, np.float64), phi_ref, **TOL)
+    mt = krao_reduce_rows(mv.rows, mv.sorted_vals, pi, mv.n_rows, **kw)
+    np.testing.assert_allclose(np.asarray(mt, np.float64), mt_ref, **TOL)
+    bs, vs = phi_mu_step(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                         tol=1e-4, **kw)
+    b64 = np.asarray(b, np.float64)
+    viol_ref = np.max(np.abs(np.minimum(b64, 1.0 - phi_ref)))
+    b_ref = b64 * phi_ref if viol_ref > 1e-4 else b64
+    np.testing.assert_allclose(float(vs), viol_ref, **TOL)
+    np.testing.assert_allclose(np.asarray(bs, np.float64), b_ref, **TOL)
+
+
+def test_grid_allhub_mode_with_empty_cells_vs_oracle():
+    """All-hub edge case: every nonzero lives in one grid cell and the
+    other cells carry only padding, yet Phi / MTTKRP / MU still meet the
+    dense f64 oracle."""
+    from repro.core.layout import build_grid_layout
+
+    mv, pi, b, base = allhub_problem()
+    for shape in [(2, 2), (1, 2)]:
+        g = build_grid_layout(base, shape)
+        if shape[0] > 1:
+            # the hub-less row shard's cells are pure padding
+            assert int(np.min(g.cell_nnz)) == 0, (shape, g.cell_nnz)
+        _grid_case_vs_oracle(mv, pi, b, g)
+
+
+def test_grid_single_device_mesh_vs_oracle():
+    """A 1x1 grid under a *real* single-device mesh: both collectives
+    are the identity over one participant and the result still meets the
+    oracle (and bitwise-matches the meshless emulation)."""
+    from repro.core.distributed import make_grid_mesh
+    from repro.core.layout import build_grid_layout
+
+    t, kt, mv, pi, b, base, *_ = mode_problem("uniform", 0, 4)
+    g = build_grid_layout(base, (1, 1))
+    mesh = make_grid_mesh(1, 1)
+    _grid_case_vs_oracle(mv, pi, b, g, mesh=mesh)
+    with_mesh = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                              strategy="grid", layout=g, mesh=mesh)
+    without = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                            strategy="grid", layout=g)
+    np.testing.assert_array_equal(np.asarray(with_mesh), np.asarray(without))
 
 
 # ---------------------------------------------------------------------------
@@ -396,6 +529,72 @@ def test_reduce_scatter_hlo_regression(devices):
                                devices)
 
 
+GRID_HLO_SCRIPT = """
+import jax, numpy as np
+from repro.core.layout import build_grid_layout, owner_partition
+from repro.core.distributed import (_grid_combined, grid_stack,
+                                    grid_scatter_wire_bytes,
+                                    make_grid_mesh, make_phi_mesh,
+                                    owner_scatter_wire_bytes)
+from repro.core.phi import expand_to_grid, phi_from_rows
+from repro.perf.hlo import (collective_stats, grid_combine_wire_bound,
+                            mttkrp_comm_lower_bound)
+import test_conformance as tc
+
+S = jax.device_count()
+assert S == {devices}, S
+mesh = make_grid_mesh(S // 2, 2)
+for kind in tc.FIXTURES:
+    t, kt, mv, pi, b, base, sl, pig, vals_sh = tc.mode_problem(kind, 0, S)
+    g = build_grid_layout(base, (S // 2, 2))
+    vals_cs, pi_cs = expand_to_grid(g, mv.sorted_vals, pi)
+    txt = _grid_combined.lower(
+        g, vals_cs, pi_cs, grid_stack(g, b),
+        1e-10, 1e-4, mesh, "blocked", True, False,
+    ).compile().as_text()
+    cs = collective_stats(txt, n_participants=g.grid_b)
+    # exactly one all-gather + one reduce-scatter, both over the column
+    # axis; the only other collective is the scalar KKT pmax all-reduce
+    assert cs.by_kind_count.get("all-gather", 0) == 1, cs.by_kind_count
+    assert cs.by_kind_count.get("reduce-scatter", 0) == 1, cs.by_kind_count
+    pmax = cs.by_kind_wire.get("all-reduce", 0.0)
+    assert pmax <= 64, cs.by_kind_wire  # a lone f32 scalar, ring-adjusted
+    wire = cs.by_kind_wire["all-gather"] + cs.by_kind_wire["reduce-scatter"]
+    # measured wire == the analytic 2 (B-1) * sub_rows * R bound ...
+    expected = grid_scatter_wire_bytes(g, tc.RANK)
+    assert expected == grid_combine_wire_bound(g.sub_rows, tc.RANK,
+                                               g.grid_b)
+    assert abs(wire - expected) <= 0.1 * expected, (kind, wire, expected)
+    # ... strictly below the 1D owner reduce-scatter at the same device
+    # count (the tentpole acceptance), and at or above the
+    # Ballard/Knight/Rouse Omega(I_n * R / P) floor
+    wire_1d = owner_scatter_wire_bytes(owner_partition(sl), tc.RANK)
+    assert wire < wire_1d, (kind, wire, wire_1d)
+    assert wire >= mttkrp_comm_lower_bound(mv.n_rows, tc.RANK, S)
+    print(kind, "grid", wire, "1d", wire_1d, "ratio", wire / wire_1d)
+# degenerate S x 1 grid under its own mesh: bitwise the 1D sharded
+# reduce-scatter path under the phi mesh
+t, kt, mv, pi, b, base, sl, pig, vals_sh = tc.mode_problem("uniform", 0, S)
+g1 = build_grid_layout(base, (S, 1))
+out_g = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                      strategy="grid", layout=g1, mesh=make_grid_mesh(S, 1))
+out_s = phi_from_rows(mv.rows, mv.sorted_vals, pi, b, mv.n_rows,
+                      strategy="sharded", layout=sl,
+                      combine="reduce_scatter", mesh=make_phi_mesh(S))
+np.testing.assert_array_equal(np.asarray(out_g), np.asarray(out_s))
+print("GRID_HLO_OK")
+"""
+
+
+def test_grid_hlo_regression_4_devices():
+    """Compiled grid combine at 4 forced devices: exactly one column
+    all-gather + one column reduce-scatter, measured per-device wire
+    equal to the analytic 2 (B-1) * sub_rows * R bound and strictly
+    below the 1D owner reduce-scatter's; the S x 1 grid is bitwise the
+    1D path under real meshes."""
+    assert "GRID_HLO_OK" in _run(GRID_HLO_SCRIPT.format(devices=4), 4)
+
+
 def test_owned_slice_scales_inversely_with_shards():
     """The reduce-scatter epilogue's per-device output is O(I_n*R/S):
     growing S from 2 to 4 must shrink the owned slice (the psum window
@@ -482,6 +681,41 @@ def test_owner_gather_traces_once_per_mode():
     assert len(traces) == t.ndim, traces
 
 
+def test_owner_unstack_uniform_is_single_reshape():
+    """Dispatch-count regression for the owner gather: when every owner
+    slot is really its full padded width, ``owner_unstack`` must lower
+    to a single reshape — no chain of S sequential
+    ``dynamic_update_slice`` ops over the O(I_n * R) buffer — and stay
+    bitwise-exact on uniform and non-uniform partitions alike."""
+    import repro.core.distributed as dist
+    from repro.core.layout import owner_partition
+
+    def roundtrip(opart, b):
+        stacked = dist.owner_stack(opart, b)
+        out = dist.owner_unstack(opart, stacked)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(b))
+        return stacked
+
+    # uniform: 8 row blocks pinned to 2-per-shard cuts via bounds
+    rows = np.repeat(np.arange(32, dtype=np.int32), 8)
+    base = build_blocked_layout(rows, 32, 32, BR)
+    opart = owner_partition(
+        shard_blocked_layout(base, 4, bounds=(0, 2, 4, 6, 8)))
+    assert np.all(np.asarray(opart.row_count) == opart.own_rows)
+    b = jnp.asarray(np.random.RandomState(0).rand(32, RANK)
+                    .astype(np.float32))
+    stacked = roundtrip(opart, b)
+    jaxpr = jax.make_jaxpr(lambda s: dist.owner_unstack(opart, s))(stacked)
+    prims = [e.primitive.name for e in jaxpr.eqns]
+    assert "dynamic_update_slice" not in prims, prims
+    # non-uniform (10 blocks over 3 shards): the masked loop path, exact
+    t, kt, mv, pi, b2, base2, sl2, pig, vals_sh = mode_problem(
+        "uniform", 0, 4)
+    opart2 = owner_partition(shard_blocked_layout(base2, 3))
+    assert not np.all(np.asarray(opart2.row_count) == opart2.own_rows)
+    roundtrip(opart2, b2)
+
+
 def test_owner_update_bitwise_vs_psum_solver():
     """Full-solver receipt: combine='reduce_scatter' == combine='psum'
     bitwise (factors and KKT history) on the emulated sharded path."""
@@ -537,6 +771,17 @@ RECOVERY_PATHS = {
                  policy=PB),
         fault=lambda faults: faults.fail_fingerprint(),
         kind="demote_fingerprint"),
+    # the grid -> 1D demotion rung: a 2x2 grid mode that OOMs (or whose
+    # kernel fails) falls back to the A-shard 1D sharded path and must
+    # still land on the oracle
+    "oom-demote-grid": dict(
+        cfg=dict(strategy="grid", n_shards=4, grid_shape=(2, 2), policy=PB),
+        fault=lambda faults: faults.fail_oom(min_shards=3),
+        kind="demote_oom"),
+    "kernel-demote-grid": dict(
+        cfg=dict(strategy="grid", n_shards=4, grid_shape=(2, 2), policy=PB),
+        fault=lambda faults: faults.fail_strategy(strategy="grid"),
+        kind="demote_kernel"),
 }
 
 

@@ -221,6 +221,45 @@ def test_kill_and_resume_is_bitwise(tmp_path):
     assert [e.kind for e in res.recoveries] == ["resume"]
 
 
+# the dense-tier and grid rows of the resume contract: the checkpoint
+# must persist enough per-mode state (strategy list, shard bounds, grid
+# shapes) that the resumed solve rebuilds *identical* mode layouts
+# instead of defaulting them — receipt is bitwise equality with the
+# uninterrupted run, which no re-defaulted strategy could produce
+RESUME_TIERS = {
+    "dense": dict(strategy="dense", n_shards=None, combine="auto",
+                  rebalance_every=0),
+    "grid-2x2": dict(strategy="grid", n_shards=4, grid_shape=(2, 2),
+                     combine="reduce_scatter", rebalance_every=0),
+    "grid-4x1": dict(strategy="grid", n_shards=4, grid_shape=(4, 1),
+                     combine="auto", rebalance_every=0),
+}
+
+
+@pytest.mark.parametrize("tier", sorted(RESUME_TIERS))
+def test_kill_and_resume_bitwise_dense_and_grid(tmp_path, tier):
+    """Kill-and-resume round trip for the dense tier and for 2-D grid
+    modes: factors, lambda and every history bitwise the uninterrupted
+    run's."""
+    t = fixture()
+    kw = RESUME_TIERS[tier]
+    ck = str(tmp_path / "ck.npz")
+    ref = cpapr_mu(t, RANK, config=_ck_cfg(None, checkpoint_every=0,
+                                           checkpoint_path=None, **kw))
+    with pytest.raises(faults.KilledError):
+        with faults.kill_at_sweep(5):
+            cpapr_mu(t, RANK, config=_ck_cfg(ck, **kw))
+    res = cpapr_mu(t, RANK, config=_ck_cfg(ck, **kw), resume_from=ck)
+    assert res.n_outer == ref.n_outer
+    for a, b in zip(ref.ktensor.factors, res.ktensor.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ref.ktensor.lam),
+                                  np.asarray(res.ktensor.lam))
+    assert ref.kkt_history == res.kkt_history
+    assert ref.inner_iters == res.inner_iters
+    assert [e.kind for e in res.recoveries] == ["resume"]
+
+
 @pytest.mark.parametrize("kind", ["flip", "truncate", "magic"])
 def test_corrupt_checkpoint_quarantined_and_solve_restarts(tmp_path, kind):
     t = fixture()

@@ -340,6 +340,92 @@ def test_service_submit_many_batches_and_appends(tmp_path):
         svc.append("nope", idx, vals)
 
 
+def test_append_crossing_dense_cut_switches_strategy(tmp_path):
+    """Bugfix regression: an append that pushes a mode's fill across the
+    dense-tier cut must re-resolve per-mode policies on the *merged*
+    tensor — the warm solve switches strategy instead of riding the
+    pre-append sparse policy — and the receipt flags the stats move."""
+    rank = 2
+    shape = (30, 8, 8)
+    t, _ = random_poisson_tensor(jax.random.PRNGKey(7), shape,
+                                 nnz=150, rank=rank)
+    svc = DecompService(autotune_path=str(tmp_path / "at.json"),
+                        max_outer=8, tol=1e-3)
+    cold = svc.submit("a", t, rank, key=jax.random.PRNGKey(0))
+    cold_strats = {p.strategy for p in cold.result.policies}
+    assert "dense" not in cold_strats, cold_strats
+
+    rng = np.random.RandomState(1)
+    k = 900
+    idx = np.stack([rng.randint(0, s, size=k) for s in shape], axis=1)
+    vals = rng.poisson(2.0, size=k).astype(np.float32) + 1.0
+    warm = svc.append("a", idx, vals, sweep_budget=4)
+    assert warm.stats_changed, "fill-bin move across the append not flagged"
+    warm_strats = [p.strategy for p in warm.result.policies]
+    assert "dense" in warm_strats, warm_strats
+    # the retained per-mode stats describe the merged tensor, not the
+    # pre-append one (the stale-policy bug this test pins)
+    st = svc.tenant("a")
+    assert st.mode_stats is not None and len(st.mode_stats) == t.ndim
+    from repro.serve.decomp import _tensor_mode_stats
+    fresh = _tensor_mode_stats(st.tensor, st.mode_views)
+    assert [s.key_fragment() for s in st.mode_stats] == \
+        [s.key_fragment() for s in fresh]
+
+
+def test_submit_validation_rejects_bad_inputs(tmp_path):
+    """submit/submit_many validate at the service boundary with the
+    solver's own message format; nothing is registered on rejection."""
+    svc = DecompService(autotune_path=str(tmp_path / "at.json"),
+                        max_outer=3, tol=1e-3)
+    t, _ = random_poisson_tensor(jax.random.PRNGKey(0), (10, 8, 6),
+                                 nnz=100, rank=2)
+    with pytest.raises(ValueError, match="DecompService.submit"):
+        svc.submit("a", t, 0)
+    with pytest.raises(ValueError, match="DecompService.submit_many"):
+        svc.submit_many([DecompJob(tenant="a", tensor=t, rank=0)])
+    bad = SparseTensor(shape=(10, 8, 6),
+                       indices=jnp.asarray([[10, 0, 0]], jnp.int32),
+                       values=jnp.asarray([1.0], jnp.float32))
+    with pytest.raises(ValueError, match="DecompService.submit"):
+        svc.submit("a", bad, 2)
+    assert not svc.tenants and svc.n_jobs == 0
+
+
+def test_append_validation_rejects_bad_batches(tmp_path):
+    """append validates the batch before merging: malformed shapes,
+    non-integer indices, out-of-range coordinates, negative and
+    non-finite values all fail at the boundary and leave the tenant
+    state untouched."""
+    svc = DecompService(autotune_path=str(tmp_path / "at.json"),
+                        max_outer=3, tol=1e-3)
+    t, _ = random_poisson_tensor(jax.random.PRNGKey(0), (10, 8, 6),
+                                 nnz=120, rank=2)
+    svc.submit("a", t, 2, key=jax.random.PRNGKey(0))
+    nnz_before = svc.tenant("a").tensor.nnz
+    ok = np.ones(2, np.float32)
+    with pytest.raises(ValueError,
+                       match=r"DecompService.append.*\(k, 3\)"):
+        svc.append("a", np.zeros((2, 2), np.int64), ok)
+    with pytest.raises(ValueError,
+                       match="DecompService.append.*must be integers"):
+        svc.append("a", np.zeros((2, 3), np.float32), ok)
+    with pytest.raises(ValueError,
+                       match=r"out-of-range index 10 at nonzero 0"):
+        svc.append("a", np.asarray([[10, 0, 0]]), np.ones(1, np.float32))
+    with pytest.raises(ValueError, match="match indices"):
+        svc.append("a", np.zeros((2, 3), np.int64),
+                   np.ones(3, np.float32))
+    with pytest.raises(ValueError, match="negative nonzero value"):
+        svc.append("a", np.zeros((2, 3), np.int64),
+                   np.asarray([1.0, -1.0], np.float32))
+    with pytest.raises(ValueError, match="non-finite nonzero value"):
+        svc.append("a", np.zeros((1, 3), np.int64),
+                   np.asarray([np.nan], np.float32))
+    st = svc.tenant("a")
+    assert st.tensor.nnz == nnz_before and st.n_appends == 0
+
+
 def test_service_shares_autotune_across_tenants(tmp_path):
     """Two tenants submitting the same-shaped problem hit one shared
     autotune store: the second solve's policy comes from the cache, not
